@@ -1,0 +1,116 @@
+"""Benchmark: NF reduction with MDM (paper §V-B, Fig 5).
+
+For bell-shaped weight ensembles representative of the assigned model
+families, computes the analytical (Eq-16) NF under every MDM ablation
+and both dataflows, reporting the % reduction (paper: up to 46%, with
+reversed dataflow improving MDM by up to 50% over conventional).
+
+Additionally validates the *dataflow-reversal physics* with the circuit
+solver: the first-order Eq-17 noise model cannot show the benefit of
+draining dense low-order columns early (see tests/test_noise.py), but
+the Kirchhoff solve can — we report the significance-weighted output
+error of a bit-sliced tile, conventional vs reversed.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitslice import bitslice
+from repro.core.mdm import MODES, placed_masks, plan_from_bits
+from repro.core.tiling import CrossbarSpec
+from repro.crossbar.solver import measured_nf
+
+
+ENSEMBLES = {
+    # bell-shaped, heavier tails -> higher bit sparsity (the paper's
+    # models sit at >= 76-80% bit-level sparsity)
+    "resnet-like (gaussian)": lambda k, n: jax.random.normal(
+        k, (n, 64)) * 0.02,
+    "cnn-pruned (laplace)": lambda k, n: jax.random.laplace(
+        k, (n, 64)) * 0.01,
+    "transformer-like (flat)": lambda k, n: jax.random.truncated_normal(
+        k, -2.5, 2.5, (n, 64)) * 0.05,
+    "outlier-heavy (student-t3)": lambda k, n: jax.random.t(
+        k, 3.0, (n, 64)) * 0.01,
+}
+
+GEOMETRIES = {
+    # the paper's crossbars: 128 rows x 10 bit-columns, one weight/row
+    "128x10 (paper)": CrossbarSpec(rows=128, cols=10, n_bits=10),
+    # packed tiles: 8 weights per row
+    "64x64 tiles": CrossbarSpec(rows=64, cols=64, n_bits=8),
+}
+
+
+def run(n_rows: int = 512, verbose: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for gname, spec in GEOMETRIES.items():
+        for name, gen in ENSEMBLES.items():
+            key, k = jax.random.split(key)
+            w = gen(k, n_rows)
+            sliced = bitslice(w, spec.n_bits)
+            sparsity = 1.0 - float(jnp.mean(sliced.bits))
+            nf = {}
+            for mode in MODES:
+                plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+                nf[mode] = float(jnp.sum(plan.nf_after))
+            red = {m: 100 * (1 - nf[m] / nf["baseline"]) for m in MODES}
+            out[f"{gname} | {name}"] = {
+                "nf": nf, "reduction_pct": red, "bit_sparsity": sparsity}
+            if verbose:
+                print(f"  {gname:15s} {name:28s} sp={sparsity:.2f} "
+                      + " ".join(f"{m}={red[m]:5.1f}%" for m in MODES
+                                 if m != "baseline"))
+    out["circuit_reversal_check"] = _circuit_reversal_check(
+        CrossbarSpec(rows=64, cols=64, n_bits=8), verbose)
+    return out
+
+
+def _circuit_reversal_check(_spec_unused: CrossbarSpec,
+                            verbose: bool) -> dict:
+    """Circuit-level validation of the full MDM stack on the paper's
+    128x10 geometry: the digitally *significance-weighted* output error
+    (what actually hits model accuracy after shift-add) for every
+    ablation.  First-order Eq-17 cannot credit dataflow reversal (the
+    2^-k weighting punishes far high-order bits exactly as much as the
+    NF metric rewards near low-order ones); the Kirchhoff solve shows
+    reverse+sort is nonetheless the best *weighted*-error mapping —
+    matching the paper's accuracy result."""
+    t0 = time.perf_counter()
+    spec = CrossbarSpec(rows=128, cols=10, n_bits=10)
+    key = jax.random.PRNGKey(7)
+    results = {m: {"nf": 0.0, "weighted": 0.0} for m in MODES}
+    n_tiles = 4
+    for i in range(n_tiles):
+        key, k = jax.random.split(key)
+        w = jnp.abs(jax.random.laplace(k, (128, 1))) * 0.02
+        sliced = bitslice(w, spec.n_bits)
+        for mode in MODES:
+            plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+            mask = placed_masks(sliced.bits, plan, spec)[0, 0]
+            res = measured_nf(mask, spec)
+            di = np.asarray(res.currents) - np.asarray(res.ideal)
+            k_of_col = np.arange(spec.cols) % spec.n_bits
+            if mode in ("reverse", "mdm"):
+                k_of_col = k_of_col[::-1]
+            wgt = 2.0 ** -(1.0 + k_of_col)
+            results[mode]["nf"] += float(res.nf_total) / n_tiles
+            results[mode]["weighted"] += float(
+                np.abs(di * wgt).sum()) / n_tiles
+    base = results["baseline"]["weighted"]
+    gains = {m: 100 * (1 - results[m]["weighted"] / base) for m in MODES}
+    if verbose:
+        print("  circuit-level weighted-error check (128x10): "
+              + " ".join(f"{m}={gains[m]:+.1f}%" for m in MODES
+                         if m != "baseline")
+              + f"  [{time.perf_counter()-t0:.1f}s]")
+    return {"results": results, "weighted_error_reduction_pct": gains}
+
+
+if __name__ == "__main__":
+    run()

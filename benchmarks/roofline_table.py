@@ -1,0 +1,103 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(tag: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(p))
+        if (r.get("tag") or "") != (tag or ""):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}" if b is not None else "?"
+
+
+def roofline_markdown(mesh: str = "pod_16x16", tag: str | None = None) -> str:
+    rows = ["| arch | shape | peak GB/dev | t_comp (s) | t_mem (s) | "
+            "t_coll (s) | dominant | MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(tag):
+        if r["mesh"] != mesh:
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                        f"{r.get('error','?')} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_bytes(r['memory']['peak_bytes'])} | "
+            f"{rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} | "
+            f"{rf['t_collective_s']:.3g} | {rf['dominant']} | "
+            f"{rf['useful_flop_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def dryrun_markdown(tag: str | None = None) -> str:
+    rows = ["| arch | shape | mesh | ok | compile (s) | peak GB/dev | "
+            "coll GB (AG/AR/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in load(tag):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | | | {r.get('error','')[:60]} |")
+            continue
+        cb = r["roofline"]["coll_breakdown"]
+        coll = "/".join(f"{cb.get(k, 0)/1e9:.1f}" for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.1f} | "
+            f"{fmt_bytes(r['memory']['peak_bytes'])} | {coll} |")
+    return "\n".join(rows)
+
+
+def perf_comparison_markdown(mesh: str = "pod_16x16") -> str:
+    """Baseline vs optimized-config (tag=opt) roofline fractions."""
+    base = {(r["arch"], r["shape"]): r for r in load(None)
+            if r["mesh"] == mesh and r.get("ok")}
+    opt = {(r["arch"], r["shape"]): r for r in load("opt")
+           if r["mesh"] == mesh and r.get("ok")}
+    rows = ["| arch | shape | baseline frac | optimized frac | gain |"
+            " dominant (opt) |",
+            "|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b = base[key]["roofline"]["roofline_fraction"]
+        o = opt[key]["roofline"]["roofline_fraction"]
+        gain = o / b if b else float("inf")
+        rows.append(f"| {key[0]} | {key[1]} | {b:.4f} | {o:.4f} | "
+                    f"x{gain:.1f} | {opt[key]['roofline']['dominant']} |")
+    return "\n".join(rows)
+
+
+def run(verbose: bool = True) -> dict:
+    recs = load()
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    if verbose:
+        print(f"  {n_ok}/{len(recs)} dry-run cells ok")
+        print(roofline_markdown())
+    return {"cells": len(recs), "ok": n_ok}
+
+
+if __name__ == "__main__":
+    print(dryrun_markdown())
+    print()
+    print(roofline_markdown())
+    print()
+    print(roofline_markdown(mesh="multipod_2x16x16"))
+    print()
+    print(perf_comparison_markdown())

@@ -1,0 +1,113 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints a ``name,seconds,derived`` CSV line per benchmark plus each
+module's detailed output, and dumps results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (  # noqa: E402
+    accuracy_noise,
+    cim_traffic,
+    hypothesis_fit,
+    nf_reduction,
+    planning_cost,
+    roofline_table,
+    theorem1,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced tile counts / training steps")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    q = args.quick
+    benches = {
+        # paper §III-A (Theorem 1)
+        "theorem1_sparsity": lambda: theorem1.run(),
+        # paper Fig 4
+        "manhattan_hypothesis_fit": lambda: hypothesis_fit.run(
+            n_tiles=64 if q else 500),
+        # paper Fig 5
+        "nf_reduction": lambda: nf_reduction.run(),
+        # paper Fig 6
+        "accuracy_under_noise": lambda: accuracy_noise.run(
+            train_steps=60 if q else 250),
+        # paper §IV "lightweight" claim
+        "mdm_planning_cost": lambda: planning_cost.run(),
+        # §Perf: fused CIM path vs materialised bit-planes
+        "cim_traffic": lambda: cim_traffic.run(),
+        # §Dry-run / §Roofline summary
+        "roofline_table": lambda: roofline_table.run(),
+    }
+
+    results, csv_lines = {}, ["name,seconds,derived"]
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        print(f"== {name} ==")
+        t0 = time.perf_counter()
+        try:
+            res = fn()
+            dt = time.perf_counter() - t0
+            results[name] = {"ok": True, "seconds": dt, "result": res}
+            derived = _derive(name, res)
+        except Exception as e:  # pragma: no cover
+            dt = time.perf_counter() - t0
+            results[name] = {"ok": False, "seconds": dt, "error": repr(e)}
+            derived = f"ERROR:{e!r}"
+        csv_lines.append(f"{name},{dt:.3f},{derived}")
+        print()
+
+    print("\n".join(csv_lines))
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "benchmarks.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+def _derive(name: str, res: dict) -> str:
+    try:
+        if name == "manhattan_hypothesis_fit":
+            return (f"r={res['pearson_r']:.4f};sigma="
+                    f"{res['fit_err_std_pct']:.2f}%")
+        if name == "nf_reduction":
+            best = max(v["reduction_pct"]["mdm"]
+                       for k, v in res.items() if isinstance(v, dict)
+                       and isinstance(v.get("reduction_pct"), dict))
+            return f"best_mdm_nf_reduction={best:.1f}%"
+        if name == "accuracy_under_noise":
+            eta = max(res["noisy"])
+            row = res["noisy"][eta]
+            gain = row["baseline"] - row["mdm"]
+            return f"ce_gain_mdm_vs_baseline@eta={eta:g}:{gain:.4f}"
+        if name == "theorem1_sparsity":
+            return "bound_ok=" + str(all(
+                v.get("bound_ok") for v in res.values()
+                if isinstance(v, dict) and "bound_ok" in v))
+        if name == "roofline_table":
+            return f"cells_ok={res['ok']}/{res['cells']}"
+        if name == "mdm_planning_cost":
+            return f"plan_4096x4096={res['plan_4096x4096']['seconds']:.3f}s"
+        if name == "cim_traffic":
+            return (f"kernel_traffic_reduction=x{res['kernel_ratio']:.1f};"
+                    f"xla=x{res['xla_ratio']:.2f}")
+    except Exception as e:
+        return f"derive_error:{e!r}"
+    return "ok"
+
+
+if __name__ == "__main__":
+    main()

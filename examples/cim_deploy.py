@@ -1,0 +1,71 @@
+"""Deploy a model's weight matrices onto memristive crossbars: per-layer
+MDM planning report (tiles, sparsity, NF before/after) and a deployment
+image export through the bitslice_pack kernel.
+
+    PYTHONPATH=src python examples/cim_deploy.py [--arch phi3-mini-3.8b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CrossbarSpec
+from repro.core.bitslice import bitslice
+from repro.core.mdm import plan_from_bits
+from repro.kernels.bitslice_pack import bitslice_pack
+from repro.models.model import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--mode", default="mdm")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+
+    print(f"deploying {args.arch} (reduced config) with mode={args.mode}")
+    total_tiles, nf_b, nf_a = 0, 0.0, 0.0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        reps = 1
+        if leaf.ndim == 3 and leaf.shape[1] * leaf.shape[2] >= 1024:
+            reps, leaf = leaf.shape[0], leaf[0]   # scanned layer stack
+        elif leaf.ndim == 4 and leaf.shape[-1] * leaf.shape[-2] >= 1024:
+            reps, leaf = leaf.shape[0] * leaf.shape[1], leaf[0, 0]
+        if leaf.ndim != 2 or leaf.size < 1024:
+            continue
+        name = jax.tree_util.keystr(path) + (f" x{reps}" if reps > 1 else "")
+        w = leaf.astype(jnp.float32)
+        sliced = bitslice(w, spec.n_bits)
+        plan = plan_from_bits(sliced.bits, sliced.scale, spec, args.mode)
+        ti, tn = plan.nf_before.shape
+        b, a = float(jnp.sum(plan.nf_before)), float(jnp.sum(plan.nf_after))
+        total_tiles += ti * tn * reps
+        nf_b += b * reps
+        nf_a += a * reps
+        sparsity = 1 - float(jnp.mean(sliced.bits))
+        print(f"  {name:40s} {str(w.shape):14s} tiles={ti*tn:4d} "
+              f"sparsity={sparsity:.2f} NF {b:8.3f} -> {a:8.3f}")
+    print(f"TOTAL: {total_tiles} tiles, NF {nf_b:.2f} -> {nf_a:.2f} "
+          f"({100*(1-nf_a/max(nf_b,1e-9)):.1f}% reduction)")
+
+    # export one deployment image through the packing kernel
+    w = params["lm_head"].astype(jnp.float32)
+    from repro.core.bitslice import quantize_magnitude
+    codes, sign, _ = quantize_magnitude(w, spec.n_bits)
+    img = bitslice_pack(
+        (codes.astype(jnp.int32) * sign).astype(jnp.int32), spec.n_bits,
+        reversed_df=args.mode in ("reverse", "mdm"))
+    print(f"deployment image for lm_head: {img.shape} uint8 "
+          f"({img.size/1e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

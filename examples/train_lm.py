@@ -1,0 +1,74 @@
+"""End-to-end training driver: train an LM on the synthetic corpus with
+checkpointing, restart tolerance and the full framework stack.
+
+    PYTHONPATH=src python examples/train_lm.py              # ~20M, 300 steps
+    PYTHONPATH=src python examples/train_lm.py --full       # ~110M params
+
+The --full variant instantiates a ~110M-parameter phi3-family config
+(the "train a ~100M model for a few hundred steps" deliverable); the
+default is a CPU-friendly ~20M so the example finishes in minutes.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import SyntheticTokenDataset
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~110M params / few hundred steps")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_lm")
+    args = ap.parse_args()
+
+    base = get_config("phi3-mini-3.8b", smoke=True)
+    if args.full:
+        cfg = base.replace(n_layers=8, d_model=768, n_heads=12,
+                           n_kv_heads=12, d_ff=2048, vocab_size=32064,
+                           attn_chunk=128)
+        steps = args.steps or 300
+        batch, seq = 8, 256
+    else:
+        cfg = base.replace(n_layers=4, d_model=384, n_heads=6,
+                           n_kv_heads=6, d_ff=1024, vocab_size=8192,
+                           attn_chunk=128)
+        steps = args.steps or 300
+        batch, seq = 8, 128
+
+    n_params = sum(
+        int(__import__("numpy").prod(s.shape)) for s in
+        __import__("jax").tree_util.tree_leaves(
+            __import__("repro.models.schema",
+                       fromlist=["model_schema"]).model_schema(cfg),
+            is_leaf=lambda x: hasattr(x, "dims")))
+    print(f"model: {n_params/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    tcfg = TrainConfig(total_steps=steps, learning_rate=1e-3,
+                       warmup_steps=30, checkpoint_every=100,
+                       checkpoint_dir=args.ckpt, log_every=20)
+    ds = SyntheticTokenDataset(cfg.vocab_size, seq, batch, seed=0)
+    tr = Trainer(cfg, tcfg, ds)
+    if not tr.resume_or_init():
+        print("starting fresh")
+    else:
+        print(f"resumed from step {tr.step}")
+    log = tr.run(steps)
+    for m in log:
+        print(f"  step {m['step']:4d} loss {m['loss']:.4f} "
+              f"({m['dt']*1e3:.0f} ms/step)")
+    print(f"final loss: {log[-1]['loss']:.4f} "
+          f"(uniform would be {__import__('math').log(cfg.vocab_size):.2f})")
+    if tr.watchdog.stragglers:
+        print(f"watchdog flagged {len(tr.watchdog.stragglers)} slow steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Sharded, mesh-agnostic checkpointing with async save and
+reshard-on-load restore (the elastic-scaling path).
+
+Checkpoints are host numpy arrays, one file per pytree leaf plus an
+``index.json`` (leaf paths, shapes, dtypes).  Because the on-disk format
+carries no sharding, a checkpoint written on one mesh restores onto any
+other mesh (or a different device count) — restore just ``device_put``s
+each leaf with the *target* sharding.  Writes are atomic
+(tmp-dir + rename) so a crash mid-save never corrupts the latest
+checkpoint; ``CheckpointManager`` retains the newest K and can save
+asynchronously on a background thread (snapshot taken synchronously,
+I/O off the training thread).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip ml_dtypes through .npy; store a same-width
+# integer view and reinterpret on load (index.json keeps the true dtype).
+_CUSTOM_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    ent = _CUSTOM_DTYPES.get(str(arr.dtype))
+    return arr.view(ent[1]) if ent else arr
+
+
+def _decode(arr: np.ndarray, dtype: str) -> np.ndarray:
+    ent = _CUSTOM_DTYPES.get(dtype)
+    return arr.view(ent[0]) if ent else arr
+
+
+def _leaf_files(tree):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in leaves]
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    index = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(_leaf_files(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), _encode(arr))
+        index["leaves"].append(
+            {"path": path, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, target):
+    """Restore into the structure (and shardings) of ``target``.
+
+    ``target`` may hold concrete arrays or ShapeDtypeStructs; if a leaf
+    has a ``.sharding`` (or target entries are NamedSharding via
+    ``shardings`` pytree), the loaded array is device_put with it —
+    this is the cross-mesh / elastic restore path.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    by_path = {e["path"]: e for e in index["leaves"]}
+
+    leaves = jax.tree_util.tree_leaves_with_path(
+        target, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    out = []
+    for p, tgt in leaves:
+        entry = by_path[jax.tree_util.keystr(p)]
+        arr = _decode(np.load(os.path.join(path, entry["file"])),
+                      entry["dtype"])
+        sharding = getattr(tgt, "sharding", None)
+        if sharding is not None:
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(
+        target, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Retention + async saves."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        # Snapshot on the caller thread (device_get) so training can
+        # mutate state while I/O proceeds in the background.
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _do():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, target):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, load_checkpoint(self.directory, step, target)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    CimConfig,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+)
+
+# arch id -> module name
+ARCHS: dict[str, str] = {
+    "internvl2-76b": "internvl2_76b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "phi3-mini-3.8b": "phi3_mini_38b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen2.5-32b": "qwen25_32b",
+    "hymba-1.5b": "hymba_15b",
+    "musicgen-medium": "musicgen_medium",
+    "xlstm-1.3b": "xlstm_13b",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def arch_shape_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch x shape) cells, with long_500k eligibility
+    resolved (ineligible archs are skipped per DESIGN.md)."""
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.supports_long_context:
+                continue
+            cells.append((arch, shape))
+    return cells

@@ -1,0 +1,182 @@
+"""Config system: model, CIM deployment, parallelism and run configs."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class CimConfig:
+    """CIM deployment of matmuls onto memristive crossbars (the paper)."""
+
+    enabled: bool = False
+    mode: str = "mdm"            # baseline | reverse | sort | mdm
+    eta: float = 2e-3            # PR noise coefficient (Eq 17)
+    rows: int = 64
+    cols: int = 64
+    n_bits: int = 8
+    r: float = 2.5
+    r_on: float = 300e3
+    r_off: float = 3e6
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description covering the whole assigned pool.
+
+    ``block_pattern`` is the repeating unit of per-layer block types
+    ("attn", "mamba", "hybrid", "mlstm", "slstm"); n_layers must be a
+    multiple of its length.  Layers are scanned over pattern repeats.
+    """
+
+    name: str = "model"
+    family: str = "dense"        # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    block_pattern: tuple = ("attn",)
+    # attention
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    sliding_window: int = 0      # 0 = global attention
+    attn_chunk: int = 512        # KV chunk of the flash-attention scan
+    # "jax" = pure-JAX chunked scan (differentiable, runs anywhere);
+    # "pallas" = VMEM-resident TPU kernel (inference paths; interpret
+    # mode on CPU).
+    attn_impl: str = "jax"
+    # MoE
+    n_experts: int = 0
+    n_experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0            # routed-expert hidden width (0 -> d_ff)
+    capacity_factor: float = 1.25
+    # MoE dispatch strategy: "global" sorts the full token set (simple,
+    # but index-dependent gathers replicate under SPMD); "grouped" sorts
+    # per batch-group so every dispatch tensor keeps a sharded leading
+    # dim (production setting — see EXPERIMENTS.md §Perf).
+    moe_dispatch: str = "global"
+    # GQA KV broadcast inside flash attention: "repeat" (reshape-based)
+    # or "take" (static gather — keeps the H dim intact and TP-sharded).
+    gqa_broadcast: str = "repeat"
+    # Remat the flash-attention chunk body: backward recomputes the
+    # (B,Sq,H,chunk) score tensors per chunk instead of saving them
+    # stacked over chunks (§Perf).
+    attn_remat_chunk: bool = False
+    # KV-cache write: "scatter" (index-array .at[].set — general, but
+    # SPMD replicates the cache for data-dependent indices) or "dus"
+    # (contiguous dynamic-update-slice — shard-local; valid whenever the
+    # cache has no ring wraparound, i.e. all non-sliding-window archs).
+    cache_update: str = "scatter"
+    # Attention activation sharding when heads don't divide the TP axis:
+    # "head_dim" (contraction-sharded QK -> per-chunk score all-reduce)
+    # or "query" (shard Sq over the model axis — attention is
+    # embarrassingly parallel over queries; one activation gather per
+    # layer instead). §Perf bonus iteration.
+    attn_fallback_shard: str = "head_dim"
+    # SSM / recurrent
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 1
+    ssm_chunk: int = 64          # mamba chunked-scan length
+    mlstm_chunk: int = 128       # mLSTM chunkwise length
+    # sLSTM tensor-parallel strategy: "shard" puts the recurrent matmul's
+    # contraction dim on the model axis (one tiny all-reduce per
+    # *timestep* — latency-catastrophic at 4k steps); "replicate"
+    # computes the small recurrence redundantly on every model shard and
+    # keeps TP for the big input/output projections (§Perf).
+    slstm_tp: str = "shard"
+    # frontend stubs for [vlm]/[audio]: inputs are precomputed embeddings
+    frontend: str = ""           # "" | "vision" | "audio"
+    # misc
+    mlp_type: str = "swiglu"     # swiglu | gelu | none
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    remat: str = "full"          # full | dots | none
+    logical_rules: str = "default"  # sharding rule set (perf hillclimb knob)
+    loss_chunk: int = 0          # 0 = unchunked cross-entropy
+    cim: CimConfig = field(default_factory=CimConfig)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_repeats(self) -> int:
+        if self.n_layers % len(self.block_pattern):
+            raise ValueError(f"{self.name}: n_layers={self.n_layers} not a "
+                             f"multiple of pattern {self.block_pattern}")
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 128 multiple so the TP axis always divides it
+        (e.g. hymba's 32001 -> 32128); padded logits are masked in the loss."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def is_recurrent_only(self) -> bool:
+        return all(b in ("mamba", "mlstm", "slstm") for b in self.block_pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode state is O(1) in context (SSM/recurrent archs) or
+        attention is windowed — the long_500k eligibility rule."""
+        has_global_attn = any(b in ("attn", "hybrid") for b in self.block_pattern)
+        return (not has_global_attn) or self.sliding_window > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatches: int = 1        # grad-accumulation factor
+    seed: int = 0
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    grad_compression: str = ""   # "" | "int8_ef" (cross-pod error-feedback)
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    fsdp_pods: bool = False      # extend the FSDP axis over "pod"
+
+    @property
+    def shape(self) -> tuple:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> tuple:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")

@@ -1,0 +1,14 @@
+"""MDM core: bit-sliced crossbar mapping, Manhattan NF model, PR noise."""
+from repro.core.bitslice import SlicedWeights, bitslice, unbitslice  # noqa: F401
+from repro.core.manhattan import (  # noqa: F401
+    aggregate_distance,
+    antidiagonal_mirror,
+    distance_grid,
+    nonideality_factor,
+    optimal_row_order,
+    row_counts,
+    row_scores,
+)
+from repro.core.mdm import MODES, MdmPlan, plan_from_bits, plan_layer  # noqa: F401
+from repro.core.noise import PAPER_ETA, noisy_weights, tree_noisy_weights  # noqa: F401
+from repro.core.tiling import CrossbarSpec, tile_masks  # noqa: F401

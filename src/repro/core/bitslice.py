@@ -1,0 +1,100 @@
+"""Bit-sliced weight decomposition for memristive crossbars.
+
+Paper §II-A: each weight ``w`` is mapped across ``K`` fractional-bit columns,
+
+    w = sign(w) * scale * sum_{k=1..K} b_k(w) 2^{-k}
+
+where ``b_k`` is the k-th fractional bit of the magnitude normalised to
+[0, 1).  Bit index ``k`` runs 1..K from high-order (2^-1) to low-order
+(2^-K); in array layouts we store bits along the last axis with position
+``k-1`` (0 = highest order).
+
+Sign is tracked digitally (standard sign-magnitude CIM deployment); the
+crossbar stores magnitudes only, matching the paper's nonnegative-W model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlicedWeights(NamedTuple):
+    """Bit-sliced representation of a weight tensor.
+
+    bits:  uint8, shape ``w.shape + (K,)``; bits[..., 0] is the 2^-1 plane.
+    sign:  int8, shape ``w.shape``; +1 / -1 (0 maps to +1).
+    scale: f32 scalar (or per-axis) normalisation so |w|/scale in [0, 1).
+    """
+
+    bits: jax.Array
+    sign: jax.Array
+    scale: jax.Array
+
+    @property
+    def n_bits(self) -> int:
+        return self.bits.shape[-1]
+
+
+def quantize_magnitude(w: jax.Array, n_bits: int, scale: jax.Array | None = None):
+    """Normalise |w| by ``scale`` and quantise to ``n_bits`` fractional bits.
+
+    Returns (codes, sign, scale) where codes are integer levels in
+    [0, 2^n_bits - 1] such that |w| ~= scale * codes * 2^-n_bits.
+    """
+    mag = jnp.abs(w)
+    if scale is None:
+        # Headroom factor 2^K/(2^K - 1) makes the max magnitude land exactly
+        # on the all-ones code, keeping round-off within 1/2 LSB everywhere.
+        levels = (1 << n_bits) - 1
+        scale = jnp.max(mag) * ((1 << n_bits) / levels) * (1.0 + 1e-6) + 1e-30
+    levels = (1 << n_bits) - 1
+    codes = jnp.clip(jnp.round(mag / scale * (1 << n_bits)), 0, levels)
+    codes = codes.astype(jnp.uint32)
+    sign = jnp.where(w < 0, -1, 1).astype(jnp.int8)
+    return codes, sign, jnp.asarray(scale, jnp.float32)
+
+
+def codes_to_bits(codes: jax.Array, n_bits: int) -> jax.Array:
+    """Expand integer codes into bit-planes, high-order first.
+
+    bits[..., k] = bit (n_bits-1-k) of code  ==  b_{k+1} (the 2^-(k+1) plane).
+    """
+    shifts = jnp.arange(n_bits - 1, -1, -1, dtype=jnp.uint32)
+    bits = (codes[..., None] >> shifts) & jnp.uint32(1)
+    return bits.astype(jnp.uint8)
+
+
+def bitslice(w: jax.Array, n_bits: int, scale: jax.Array | None = None) -> SlicedWeights:
+    """Decompose a weight tensor into its bit-sliced crossbar form."""
+    codes, sign, scale = quantize_magnitude(w, n_bits, scale)
+    return SlicedWeights(bits=codes_to_bits(codes, n_bits), sign=sign, scale=scale)
+
+
+def bits_to_codes(bits: jax.Array) -> jax.Array:
+    n_bits = bits.shape[-1]
+    weights = (jnp.uint32(1) << jnp.arange(n_bits - 1, -1, -1, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1)
+
+
+def unbitslice(sliced: SlicedWeights) -> jax.Array:
+    """Reconstruct the (quantised) weight tensor from its bit-sliced form."""
+    codes = bits_to_codes(sliced.bits)
+    mag = codes.astype(jnp.float32) * (sliced.scale / (1 << sliced.n_bits))
+    return mag * sliced.sign.astype(jnp.float32)
+
+
+def quantization_error_bound(scale: jax.Array, n_bits: int) -> jax.Array:
+    """Max absolute rounding error of the bit-sliced representation."""
+    return scale * 0.5 * 2.0 ** (-n_bits)
+
+
+def column_density(bits: jax.Array) -> jax.Array:
+    """Fraction of active cells per bit plane: p_k estimate, shape (K,).
+
+    Theorem 1 predicts density increases with k (lower-order planes denser)
+    and p_k < 1/2 for bell-shaped |w| distributions.
+    """
+    flat = bits.reshape(-1, bits.shape[-1])
+    return jnp.mean(flat.astype(jnp.float32), axis=0)

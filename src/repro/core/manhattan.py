@@ -1,0 +1,105 @@
+"""The Manhattan Hypothesis: analytical parasitic-resistance NF model.
+
+Paper §III-B (Eq 16):
+
+    NF ~= (r / R_on) * sum_{j,k} delta_{j,k} * (j + k)
+
+where (j, k) are a cell's row/column indices *measured from the I/O rails*
+(0 = closest).  Geometry convention used throughout this repo:
+
+  * Activations drive rows from the column-0 side -> a cell's horizontal
+    distance from the input rail is its column index in the stored array.
+  * Column outputs are sensed at the row-0 side -> vertical distance from
+    the output rail is the row index.
+  * ``dataflow="reversed"`` mirrors the bit-column order inside every
+    weight so the dense low-order planes sit at small column index
+    (paper step 1); the physical array is unchanged, only the mapping is.
+
+All functions operate on a *tile*: a 2-D 0/1 activity mask of shape
+(rows, cols) = (J, K_total) where K_total = weights_per_row * bits_per_weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_grid(rows: int, cols: int, dtype=jnp.float32) -> jax.Array:
+    """Manhattan distance d(j,k) = j + k of every cell from the I/O corner."""
+    j = jnp.arange(rows, dtype=dtype)[:, None]
+    k = jnp.arange(cols, dtype=dtype)[None, :]
+    return j + k
+
+
+def aggregate_distance(active: jax.Array) -> jax.Array:
+    """sum_{j,k} delta_{j,k} (j+k) for one tile (or batch of tiles).
+
+    ``active`` has shape (..., J, K); returns shape (...).
+    """
+    J, K = active.shape[-2], active.shape[-1]
+    d = distance_grid(J, K)
+    return jnp.sum(active.astype(jnp.float32) * d, axis=(-2, -1))
+
+
+def nonideality_factor(active: jax.Array, r: float, r_on: float) -> jax.Array:
+    """Eq 16: NF of a tile under the Manhattan Hypothesis."""
+    return (r / r_on) * aggregate_distance(active)
+
+
+def row_scores(active: jax.Array) -> jax.Array:
+    """Per-row Manhattan exposure score (paper step 2).
+
+    score_j = sum_k delta_{j,k} * (1 + k): each active cell contributes its
+    column distance plus one unit of row exposure, so the score rises with
+    both row density and low-order concentration.  Shape (..., J).
+    """
+    K = active.shape[-1]
+    col = 1.0 + jnp.arange(K, dtype=jnp.float32)
+    return jnp.sum(active.astype(jnp.float32) * col, axis=-1)
+
+
+def row_counts(active: jax.Array) -> jax.Array:
+    """Number of active cells per row, shape (..., J)."""
+    return jnp.sum(active.astype(jnp.float32), axis=-1)
+
+
+def placement_cost(active: jax.Array) -> jax.Array:
+    """Total NF-proportional cost of the *current* row placement.
+
+    cost = sum_j j * n_j + sum_j s0_j  with  n_j = row count and
+    s0_j = sum_k delta_{j,k} k (placement-independent).  Identical to
+    ``aggregate_distance`` but split to expose the permutable term.
+    """
+    return aggregate_distance(active)
+
+
+def optimal_row_order(active: jax.Array) -> jax.Array:
+    """Row permutation minimising the Manhattan-model NF (paper step 3).
+
+    Under Eq 16 the only placement-dependent term is sum_j pos_j * n_j,
+    so by the rearrangement inequality the optimum assigns the densest
+    rows the smallest positions: sort by active count, descending.
+    Ties are broken by the Manhattan row score (denser-low-order first),
+    making the order deterministic.
+
+    Returns ``perm`` such that ``active[perm]`` is the remapped tile.
+    Works on a single tile (J, K) only; vmap for batches.
+    """
+    n = row_counts(active)
+    s = row_scores(active)
+    J = active.shape[-2]
+    # Composite descending key: primary count, secondary score, tertiary
+    # original index (stability).
+    key = n * (J * 16.0) + s / (s.max() + 1.0)
+    return jnp.argsort(-key, stable=True)
+
+
+def antidiagonal_mirror(active: jax.Array) -> jax.Array:
+    """Reflect a square tile across its main diagonal: (j,k) -> (k,j).
+
+    This reflection maps every anti-diagonal j+k = const onto itself, so two
+    configurations related by it have identical aggregate Manhattan distance
+    and hence identical NF under Eq 16 — the "anti-diagonal symmetry" of
+    Fig 2, corroborated there by SPICE and here by ``repro.crossbar.solver``.
+    """
+    return jnp.swapaxes(active, -1, -2)

@@ -1,0 +1,112 @@
+"""Manhattan Distance Mapping (MDM) — the paper's core algorithm.
+
+Post-training, semantics-preserving remap of DNN weights onto crossbar
+tiles (paper §IV), in three steps:
+
+  1. *Dataflow reversal* — mirror tile columns so the dense low-order bit
+     planes sit closest to the input rail.
+  2. *Row scoring* — per-row Manhattan exposure score of active cells.
+  3. *Row sorting* — permute rows so high-score (dense) rows occupy the
+     positions closest to the I/O rails.
+
+The result is an :class:`MdmPlan`: per-tile row permutations plus the
+dataflow direction.  The plan is pure bookkeeping — applying it and then
+inverting it digitally (input mux per tile) reproduces the original
+matmul exactly; only the *physical positions* (and hence the parasitic-
+resistance exposure) change.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import manhattan
+from repro.core.bitslice import bitslice
+from repro.core.tiling import CrossbarSpec, reverse_dataflow, tile_masks
+
+MODES = ("baseline", "reverse", "sort", "mdm")  # mdm = reverse + sort
+
+
+class MdmPlan(NamedTuple):
+    """Deployment plan for one weight matrix.
+
+    row_perm:     (Ti, Tn, rows) int32 — physical row p of tile (ti,tn)
+                  hosts original (tile-local) weight row ``row_perm[ti,tn,p]``.
+    row_position: (Ti, Tn, rows) int32 — inverse: physical position of
+                  tile-local original row q.
+    reversed_dataflow: python bool (static).
+    nf_before / nf_after: (Ti, Tn) f32 per-tile NF (Manhattan model).
+    scale: f32 quantisation scale of the bit-sliced weights.
+    """
+
+    row_perm: jax.Array
+    row_position: jax.Array
+    reversed_dataflow: jax.Array  # bool scalar (pytree leaf; use jnp.where)
+    nf_before: jax.Array
+    nf_after: jax.Array
+    scale: jax.Array
+
+    @property
+    def nf_reduction(self) -> jax.Array:
+        """Fractional NF reduction, aggregated over all tiles."""
+        b, a = jnp.sum(self.nf_before), jnp.sum(self.nf_after)
+        return (b - a) / jnp.maximum(b, 1e-30)
+
+
+def _identity_perms(ti: int, tn: int, rows: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32), (ti, tn, rows))
+
+
+@partial(jax.jit, static_argnames=("spec", "mode"))
+def plan_from_bits(bits: jax.Array, scale: jax.Array, spec: CrossbarSpec,
+                   mode: str = "mdm") -> MdmPlan:
+    """Build an MDM plan from bit-sliced weights (I, N, K)."""
+    if mode not in MODES:
+        raise ValueError(f"mode={mode!r} not in {MODES}")
+    masks = tile_masks(bits, spec)                       # (Ti, Tn, R, C)
+    ti, tn, rows, _ = masks.shape
+    nf_before = manhattan.nonideality_factor(masks, spec.r, spec.r_on)
+
+    rev = mode in ("reverse", "mdm")
+    placed = reverse_dataflow(masks) if rev else masks
+
+    if mode in ("sort", "mdm"):
+        perm = jax.vmap(jax.vmap(manhattan.optimal_row_order))(placed)
+        perm = perm.astype(jnp.int32)
+        placed = jnp.take_along_axis(placed, perm[..., None], axis=-2)
+    else:
+        perm = _identity_perms(ti, tn, rows)
+
+    position = jnp.argsort(perm, axis=-1).astype(jnp.int32)
+    nf_after = manhattan.nonideality_factor(placed, spec.r, spec.r_on)
+    return MdmPlan(perm, position, jnp.asarray(rev), nf_before, nf_after, scale)
+
+
+def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm") -> MdmPlan:
+    """Bit-slice a weight matrix and build its MDM deployment plan."""
+    if w.ndim != 2:
+        raise ValueError("plan_layer expects a 2-D (in_dim, out_dim) matrix")
+    sliced = bitslice(w, spec.n_bits)
+    return plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+
+
+def placed_masks(bits: jax.Array, plan: MdmPlan, spec: CrossbarSpec) -> jax.Array:
+    """Physical tile activity masks under a plan (for solver validation)."""
+    masks = tile_masks(bits, spec)
+    masks = jnp.where(jnp.asarray(plan.reversed_dataflow),
+                      reverse_dataflow(masks), masks)
+    return jnp.take_along_axis(masks, plan.row_perm[..., None], axis=-2)
+
+
+def permute_inputs(x_tile: jax.Array, plan: MdmPlan, ti: int, tn: int) -> jax.Array:
+    """Digital input mux: reorder the activation slice feeding tile (ti,tn).
+
+    x_tile: (..., rows) activations for the tile's input rows in original
+    order; returns them in physical-row order.  Because summation over
+    rows is permutation-invariant, the tile's column outputs are unchanged
+    — this is the semantics-preservation guarantee of MDM.
+    """
+    return jnp.take(x_tile, plan.row_perm[ti, tn], axis=-1)

@@ -1,0 +1,133 @@
+"""Position-dependent PR noise injection (paper Eq 17).
+
+    w'_j = sum_{k<=K} b_{j,k}(w_j) 2^{-k} [1 + eta * delta_{j,k} * d(j,k)]
+
+where d(j,k) = physical row position + physical column position of the
+bit cell *after* the deployment plan (dataflow direction + row sort) is
+applied.  This folds the analog distortion of a CIM deployment into an
+effective dense weight matrix, so any model can be evaluated "as if" it
+ran on PR-afflicted crossbars by swapping W -> noisy_weights(W, plan).
+
+``eta`` is calibrated against the circuit-level solver (the paper uses
+SPICE; we use ``repro.crossbar.solver``) such that the injected noise
+matches the measured distortion at the spec's wire resistance.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitslice import bitslice
+from repro.core.mdm import MdmPlan, plan_from_bits
+from repro.core.tiling import CrossbarSpec
+
+# Paper's SPICE-calibrated value for r=2.5ohm, R_on=300kohm (§V-C).
+PAPER_ETA = 2e-3
+
+
+def _bit_weights(n_bits: int) -> jax.Array:
+    """2^-(k+1) for plane k (plane 0 = 2^-1)."""
+    return 2.0 ** -(1.0 + jnp.arange(n_bits, dtype=jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def noisy_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
+                    spec: CrossbarSpec, eta: float | jax.Array) -> jax.Array:
+    """Effective |W'| (I, N) after PR distortion under ``plan``.
+
+    Split Eq 17 into a row term and a column term so no (I, N, K) tensor
+    is materialised:
+
+        |w'| = scale * [(1 + eta*p) * M0 + eta * M1]
+        M0   = sum_k b_k 2^-(k+1)          (the clean magnitude)
+        M1   = sum_k b_k 2^-(k+1) * c_k    (column-distance moment)
+    """
+    I, N, K = bits.shape
+    rows, wpt = spec.rows, spec.weights_per_tile
+    b = bits.astype(jnp.float32)
+    bw = _bit_weights(K)
+
+    # Physical column of bit plane k for output column n.
+    slot = jnp.arange(N) % wpt
+    col = slot[:, None] * K + jnp.arange(K)[None, :]          # (N, K)
+    rev = jnp.asarray(plan.reversed_dataflow)
+    col = jnp.where(rev, (spec.cols - 1) - col, col)
+    col = col.astype(jnp.float32)
+
+    # Physical row of input row i when feeding column-tile tn.
+    ti = jnp.arange(I) // rows
+    q = jnp.arange(I) % rows
+    tn = jnp.arange(N) // wpt
+    # (Ti, Tn, rows) -> (I, Tn) -> (I, N)
+    pos_itn = plan.row_position[ti, :, q]                     # (I, Tn)
+    p = pos_itn[:, tn].astype(jnp.float32)                    # (I, N)
+
+    m0 = jnp.einsum("ink,k->in", b, bw)
+    m1 = jnp.einsum("ink,nk->in", b, bw * col)
+    return scale * ((1.0 + eta * p) * m0 + eta * m1)
+
+
+def noisy_weights(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+                  eta: float | jax.Array = PAPER_ETA,
+                  plan: MdmPlan | None = None) -> tuple[jax.Array, MdmPlan]:
+    """Eq 17 end-to-end: bit-slice, plan (MDM or ablation), distort.
+
+    Returns (W', plan).  With eta=0 this returns the plain bit-sliced
+    quantisation of W — the semantics-preservation baseline.
+    """
+    sliced = bitslice(w, spec.n_bits)
+    if plan is None:
+        plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+    mag = noisy_magnitude(sliced.bits, sliced.scale, plan, spec, eta)
+    return mag * sliced.sign.astype(jnp.float32), plan
+
+
+def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
+                  sparsity: float = 0.8) -> float:
+    """Calibrate eta against the circuit-level solver (paper §V-C: the
+    paper does this in SPICE, obtaining eta = 2e-3 for r = 2.5 ohm).
+
+    Least-squares: match the Eq-17 predicted per-tile current deficit,
+    sum_cells eta * d(j,k), to the circuit-measured |sum di| / i_cell on
+    random tiles of the target sparsity.
+    """
+    import jax as _jax
+    import numpy as _np
+
+    from repro.core import manhattan
+    from repro.crossbar.solver import measured_nf
+
+    key = key if key is not None else _jax.random.PRNGKey(0)
+    masks = (_jax.random.uniform(
+        key, (n_tiles, spec.rows, spec.cols)) < (1 - sparsity)
+    ).astype(jnp.float32)
+    res = measured_nf(masks, spec)
+    # per-cell-normalised measured deficit: |sum di| / (g_on * v_read)
+    i_cell = spec.v_read / spec.r_on
+    measured = _np.abs(_np.asarray(res.currents - res.ideal)).sum(-1) / i_cell
+    predicted_d = _np.asarray(manhattan.aggregate_distance(masks))
+    # measured ~= eta * predicted_d
+    eta = float((measured * predicted_d).sum()
+                / _np.maximum((predicted_d ** 2).sum(), 1e-30))
+    return eta
+
+
+def tree_noisy_weights(params, spec: CrossbarSpec, mode: str = "mdm",
+                       eta: float | jax.Array = PAPER_ETA, min_size: int = 1024):
+    """Apply Eq 17 to every 2-D weight matrix in a pytree (>= min_size
+    elements; biases/norms are left untouched — they stay digital)."""
+
+    def visit(x):
+        if isinstance(x, jax.Array) and x.ndim == 2 and x.size >= min_size:
+            w, _ = noisy_weights(x, spec, mode, eta)
+            return w.astype(x.dtype)
+        if isinstance(x, jax.Array) and x.ndim == 3 and x.shape[1] * x.shape[2] >= min_size:
+            # Stacked (layers, in, out) scan weights: vectorise over layers.
+            def one(m):
+                return noisy_weights(m, spec, mode, eta)[0]
+            return jax.lax.map(one, x).astype(x.dtype)
+        return x
+
+    return jax.tree_util.tree_map(visit, params)

@@ -1,0 +1,97 @@
+"""Mapping DNN weight matrices onto bit-sliced crossbar tiles.
+
+A weight matrix W of shape (in_dim, out_dim) deploys onto a grid of
+physical crossbar tiles of ``spec.rows`` rows x ``spec.cols`` columns.
+Each weight occupies ``spec.n_bits`` adjacent columns (its fractional-bit
+slice, high-order bit first under conventional dataflow), so one tile
+holds ``spec.cols // spec.n_bits`` output columns of W and ``spec.rows``
+input rows.  This mirrors the paper's setup ("a 128x128 crossbar with 16
+multipliers ... each row stores eight different weight values") and its
+experiments (crossbars in 64x64 tiles).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CrossbarSpec(NamedTuple):
+    """Physical crossbar tile + device parameters (paper §III-B / §V)."""
+
+    rows: int = 64
+    cols: int = 64
+    n_bits: int = 8
+    r: float = 2.5          # parasitic wire resistance per segment [ohm]
+    r_on: float = 300e3     # active-cell resistance [ohm]
+    r_off: float = 3e6      # inactive-cell resistance [ohm]
+    v_read: float = 0.2     # row read voltage [V]
+
+    @property
+    def weights_per_tile(self) -> int:
+        if self.cols % self.n_bits:
+            raise ValueError(f"cols={self.cols} not divisible by n_bits={self.n_bits}")
+        return self.cols // self.n_bits
+
+    @property
+    def nf_unit(self) -> float:
+        """r / R_on — the NF slope of the Manhattan Hypothesis."""
+        return self.r / self.r_on
+
+    def grid(self, in_dim: int, out_dim: int) -> tuple[int, int]:
+        """(row_tiles, col_tiles) needed for an (in_dim, out_dim) matrix."""
+        return (math.ceil(in_dim / self.rows),
+                math.ceil(out_dim / self.weights_per_tile))
+
+
+def pad_to_tiles(bits: jax.Array, spec: CrossbarSpec) -> jax.Array:
+    """Zero-pad a (I, N, K) bit tensor so I, N fill whole tiles."""
+    I, N, K = bits.shape
+    ti, tn = spec.grid(I, N)
+    pad_i = ti * spec.rows - I
+    pad_n = tn * spec.weights_per_tile - N
+    if pad_i or pad_n:
+        bits = jnp.pad(bits, ((0, pad_i), (0, pad_n), (0, 0)))
+    return bits
+
+
+def tile_masks(bits: jax.Array, spec: CrossbarSpec) -> jax.Array:
+    """Arrange bit planes into physical tile activity masks.
+
+    bits: (I, N, K) uint8 bit-planes of |W| (K = spec.n_bits, plane 0 is
+    the 2^-1 high-order bit).
+    Returns (Ti, Tn, rows, cols) uint8 masks in *conventional* dataflow
+    layout: inside each weight's K-column group the high-order bit sits at
+    the smallest column index (closest to the input rail).
+    """
+    K = bits.shape[-1]
+    if K != spec.n_bits:
+        raise ValueError(f"bit planes {K} != spec.n_bits {spec.n_bits}")
+    bits = pad_to_tiles(bits, spec)
+    I, N = bits.shape[0], bits.shape[1]
+    ti, tn = I // spec.rows, N // spec.weights_per_tile
+    # (ti, rows, tn, wpt, K) -> (ti, tn, rows, wpt*K)
+    m = bits.reshape(ti, spec.rows, tn, spec.weights_per_tile, K)
+    m = m.transpose(0, 2, 1, 3, 4)
+    return m.reshape(ti, tn, spec.rows, spec.cols)
+
+
+def untile_masks(masks: jax.Array, in_dim: int, out_dim: int,
+                 spec: CrossbarSpec) -> jax.Array:
+    """Inverse of :func:`tile_masks`; crops padding. Returns (I, N, K)."""
+    ti, tn = masks.shape[0], masks.shape[1]
+    K = spec.n_bits
+    m = masks.reshape(ti, tn, spec.rows, spec.weights_per_tile, K)
+    m = m.transpose(0, 2, 1, 3, 4)
+    m = m.reshape(ti * spec.rows, tn * spec.weights_per_tile, K)
+    return m[:in_dim, :out_dim]
+
+
+def reverse_dataflow(masks: jax.Array) -> jax.Array:
+    """Mirror tile columns: the low-order (dense) bits move next to the
+    input rail (paper MDM step 1).  Pure relabelling of the physical
+    column order — arithmetic is untouched because every bit column is
+    sensed independently and shift-added digitally."""
+    return masks[..., ::-1]

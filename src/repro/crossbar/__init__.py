@@ -1,0 +1,7 @@
+from repro.crossbar.solver import (  # noqa: F401
+    SolveResult,
+    column_currents_dense,
+    ideal_currents,
+    measured_nf,
+    solve_crossbar,
+)

@@ -1,0 +1,175 @@
+"""Circuit-level resistive-mesh solver — the repo's SPICE replacement.
+
+Nodal analysis of a (J, K) memristive crossbar with parasitic wire
+resistance ``r`` per segment (paper §III-B / Fig 2):
+
+  * wordline nodes  W[j,k]; row j driven by V_in[j] through r into W[j,0]
+  * bitline nodes   B[j,k]; column k sensed at virtual ground through r
+    from B[0,k]  (row 0 is the side nearest the output rail, matching the
+    Manhattan-distance convention of ``repro.core.manhattan``)
+  * a memristor of conductance g[j,k] bridges W[j,k] <-> B[j,k]
+    (1/R_on if the cell is active, 1/R_off otherwise)
+
+The resulting SPD system is solved with Jacobi-preconditioned CG whose
+matvec is a pure stencil (O(JK) per iteration, vmap-batched over tiles);
+a dense nodal-matrix ``jnp.linalg.solve`` oracle validates it for small
+tiles.  Everything runs in float64 (the NF signal is ~1e-3 relative).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import CrossbarSpec
+
+
+class SolveResult(NamedTuple):
+    currents: jax.Array   # (K,) actual column currents under PR
+    ideal: jax.Array      # (K,) ideal currents (r = 0)
+    nf_cols: jax.Array    # (K,) per-column |di/i0| (i0 summed guard-eps)
+    nf_total: jax.Array   # scalar aggregate |sum di| / sum i0
+    residual: jax.Array   # final CG residual norm
+
+
+def conductances(active: jax.Array, spec: CrossbarSpec) -> jax.Array:
+    g_on, g_off = 1.0 / spec.r_on, 1.0 / spec.r_off
+    return jnp.where(active > 0, g_on, g_off)
+
+
+def ideal_currents(g: jax.Array, v_in: jax.Array) -> jax.Array:
+    """Column currents for r = 0: i_k = sum_j g[j,k] v_in[j]."""
+    return jnp.einsum("jk,j->k", g, v_in)
+
+
+def _stencil_matvec(g: jax.Array, cw: jax.Array, x: jax.Array) -> jax.Array:
+    """A @ x for the nodal system. x: (2, J, K) stacked [W, B] grids."""
+    W, B = x[0], x[1]
+    J, K = W.shape
+
+    # Wordline: left tie is source (k=0) or neighbour; right tie if k<K-1.
+    left = jnp.pad(W[:, :-1], ((0, 0), (1, 0)))            # neighbour W[:,k-1]
+    right = jnp.pad(W[:, 1:], ((0, 0), (0, 1)))            # neighbour W[:,k+1]
+    has_right = jnp.pad(jnp.ones((J, K - 1), x.dtype), ((0, 0), (0, 1)))
+    degW = 1.0 + has_right                                  # left tie always
+    yW = cw * (degW * W - left - right) + g * (W - B)
+
+    # Bitline: down tie is ground (j=0) or neighbour; up tie if j<J-1.
+    down = jnp.pad(B[:-1, :], ((1, 0), (0, 0)))            # neighbour B[j-1,:]
+    up = jnp.pad(B[1:, :], ((0, 1), (0, 0)))               # neighbour B[j+1,:]
+    has_up = jnp.pad(jnp.ones((J - 1, K), x.dtype), ((0, 1), (0, 0)))
+    degB = 1.0 + has_up
+    yB = cw * (degB * B - down - up) + g * (B - W)
+
+    return jnp.stack([yW, yB])
+
+
+def _rhs(v_in: jax.Array, cw: jax.Array, K: int) -> jax.Array:
+    J = v_in.shape[0]
+    bW = jnp.zeros((J, K), v_in.dtype).at[:, 0].set(cw * v_in)
+    return jnp.stack([bW, jnp.zeros((J, K), v_in.dtype)])
+
+
+def _jacobi_diag(g: jax.Array, cw: jax.Array) -> jax.Array:
+    J, K = g.shape
+    has_right = jnp.pad(jnp.ones((J, K - 1), g.dtype), ((0, 0), (0, 1)))
+    has_up = jnp.pad(jnp.ones((J - 1, K), g.dtype), ((0, 1), (0, 0)))
+    dW = cw * (1.0 + has_right) + g
+    dB = cw * (1.0 + has_up) + g
+    return jnp.stack([dW, dB])
+
+
+@partial(jax.jit, static_argnames=("maxiter",))
+def solve_crossbar(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
+                   maxiter: int = 4000) -> SolveResult:
+    """Solve one tile. ``spec_arr`` = [r, r_on, r_off] (f64) so the same
+    jitted solver serves sweeps over device parameters."""
+    dtype = jnp.float64
+    active = active.astype(dtype)
+    v_in = v_in.astype(dtype)
+    r, r_on, r_off = spec_arr[0], spec_arr[1], spec_arr[2]
+    g = jnp.where(active > 0, 1.0 / r_on, 1.0 / r_off)
+    cw = 1.0 / r
+    J, K = g.shape
+
+    b = _rhs(v_in, cw, K)
+    diag = _jacobi_diag(g, cw)
+    mv = lambda x: _stencil_matvec(g, cw, x)
+    pre = lambda x: x / diag
+
+    x, _ = jax.scipy.sparse.linalg.cg(mv, b, tol=1e-12, maxiter=maxiter, M=pre)
+    resid = jnp.linalg.norm(mv(x) - b) / jnp.linalg.norm(b)
+
+    currents = cw * x[1, 0, :]                 # (B[0,k] - 0) / r
+    ideal = jnp.einsum("jk,j->k", g, v_in)
+    di = currents - ideal
+    nf_cols = jnp.abs(di) / jnp.maximum(ideal, 1e-30)
+    nf_total = jnp.abs(jnp.sum(di)) / jnp.maximum(jnp.sum(ideal), 1e-30)
+    return SolveResult(currents, ideal, nf_cols, nf_total, resid)
+
+
+def measured_nf(active: jax.Array, spec: CrossbarSpec,
+                v_in: jax.Array | None = None, maxiter: int = 4000):
+    """Circuit-measured NF of one tile (or a batch: leading dims vmapped).
+
+    This is the quantity the paper probes in SPICE; comparing it against
+    ``repro.core.manhattan.nonideality_factor`` is the Fig-4 experiment.
+    """
+    with jax.enable_x64(True):
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((active.shape[-2],), spec.v_read, jnp.float64)
+        fn = lambda a: solve_crossbar(a, v_in, spec_arr, maxiter)
+        batch_shape = active.shape[:-2]
+        if batch_shape:
+            flat = active.reshape((-1,) + active.shape[-2:])
+            res = jax.lax.map(fn, flat)
+            res = jax.tree_util.tree_map(
+                lambda x: x.reshape(batch_shape + x.shape[1:]), res)
+            return res
+        return fn(active)
+
+
+# ----------------------------- dense oracle ------------------------------
+
+def _node_index(j: int, k: int, K: int, grid: int, JK: int) -> int:
+    return grid * JK + j * K + k
+
+
+def column_currents_dense(active: np.ndarray, v_in: np.ndarray,
+                          spec: CrossbarSpec) -> np.ndarray:
+    """Dense nodal-matrix solve (numpy, float64) — oracle for small tiles."""
+    J, K = active.shape
+    JK = J * K
+    n = 2 * JK
+    cw = 1.0 / spec.r
+    g = np.where(active > 0, 1.0 / spec.r_on, 1.0 / spec.r_off)
+    A = np.zeros((n, n))
+    b = np.zeros(n)
+    for j in range(J):
+        for k in range(K):
+            w = _node_index(j, k, K, 0, JK)
+            bb = _node_index(j, k, K, 1, JK)
+            # device
+            A[w, w] += g[j, k]; A[bb, bb] += g[j, k]
+            A[w, bb] -= g[j, k]; A[bb, w] -= g[j, k]
+            # wordline left tie
+            if k == 0:
+                A[w, w] += cw; b[w] += cw * v_in[j]
+            else:
+                wl = _node_index(j, k - 1, K, 0, JK)
+                A[w, w] += cw; A[wl, wl] += cw
+                A[w, wl] -= cw; A[wl, w] -= cw
+            # bitline down tie
+            if j == 0:
+                A[bb, bb] += cw  # to ground
+            else:
+                bd = _node_index(j - 1, k, K, 1, JK)
+                A[bb, bb] += cw; A[bd, bd] += cw
+                A[bb, bd] -= cw; A[bd, bb] -= cw
+    x = np.linalg.solve(A, b)
+    B0 = x[JK:].reshape(J, K)[0]
+    return cw * B0

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    RULE_SETS,
+    ShardingCtx,
+    logical_spec,
+    shard,
+)

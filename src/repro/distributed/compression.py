@@ -1,0 +1,68 @@
+"""Gradient compression for cross-pod all-reduce: int8 with error feedback.
+
+At multi-pod scale the "pod" axis rides the slowest links (DCI/optical),
+so the cross-pod gradient all-reduce is compressed: per-tensor-block
+scaled int8 quantisation, summed in int32, dequantised, with the
+quantisation residual fed back into the next step's gradient (error
+feedback keeps the scheme unbiased-in-the-limit; convergence tested in
+tests/test_compression.py).
+
+Implemented with shard_map over the "pod" axis: inside the mapped
+function the gradients are the per-pod partial sums; we quantise,
+psum over "pod", and dequantise.  Intra-pod reductions stay full
+precision (fast ICI), matching production practice.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(x: jax.Array):
+    """Round-trip (for error-feedback accounting). Returns (xq, residual)."""
+    q, s = quantize_int8(x)
+    xq = dequantize_int8(q, s)
+    return xq, x - xq
+
+
+def psum_compressed(grads, error, axis_name: str = "pod"):
+    """Error-feedback int8 psum over ``axis_name``.
+
+    grads/error: pytrees of f32 per-shard partial gradients.  Returns
+    (reduced_grads, new_error).  Must run inside shard_map with
+    ``axis_name`` in scope.
+    """
+
+    def one(g, e):
+        g = g + e                           # inject residual
+        q, s = quantize_int8(g)
+        # sum int8 payloads in int32; scales are tiny, psum them raw
+        qs = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        ssum = jax.lax.psum(s, axis_name)   # conservative shared scale
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        # dequantise with the mean scale (per-shard scales are close for
+        # statistically homogeneous DP gradients)
+        out = qs.astype(jnp.float32) * (ssum / n)
+        local = dequantize_int8(q, s)
+        return out, g - local               # residual of the local payload
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return red, new_e

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every tensor dim carries a *logical* name ("embed", "heads", "mlp", ...).
+A rule set maps each name to an ordered list of mesh-axis candidates; the
+first candidate whose axes (a) exist in the mesh, (b) are not already
+used by another dim of the same tensor, and (c) evenly divide the dim
+size, wins.  This gives MaxText-style 2-D (FSDP x TP) weight sharding
+that degrades gracefully for awkward dims — e.g. deepseek's 56 heads
+don't divide a 16-way model axis, so the "heads" dim replicates and the
+"head_dim" fallback picks up the model axis instead.
+
+Rule sets are selectable per-config (``cfg.logical_rules``) — the
+hillclimbing knob for §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> ordered candidates; each candidate is a tuple of mesh axes
+# (meaning "shard this dim over the product of these axes").
+Rules = dict[str, list[tuple[str, ...]]]
+
+_DEFAULT: Rules = {
+    # activations
+    "batch":     [("pod", "data"), ("data",)],
+    "seq":       [],                      # replicated (no sequence parallel)
+    "act_embed": [],
+    "act_mlp":   [("model",)],
+    "act_heads": [("model",)],
+    "act_kv":    [("model",)],
+    "act_head_dim": [("model",)],         # fallback after act_heads/act_kv
+    "act_seq_q": [("model",)],            # query-parallel attention
+    "act_vocab": [("model",)],
+    # weights: "embed" is the FSDP dim, feature dims take the TP axis
+    "embed":     [("data",)],
+    "mlp":       [("model",)],
+    "heads":     [("model",)],
+    "kv_heads":  [("model",)],
+    "head_dim":  [("model",)],
+    "vocab":     [("model",)],
+    "experts":   [],                      # E rarely divides an axis; TP inside
+    "inner":     [("model",)],
+    "state":     [],
+    "conv":      [],
+    "layers":    [],
+    # caches
+    "cache_batch": [("pod", "data"), ("data",)],
+    "cache_seq":   [],
+    "cache_kv":    [("model",)],
+    "cache_head_dim": [("model",)],
+}
+
+# FSDP extended over the pod axis (params sharded across pods too).
+_FSDP_PODS: Rules = dict(_DEFAULT, embed=[("pod", "data"), ("data",)])
+
+# Sequence-parallel activations: shard seq over "model" between blocks
+# (norms/elementwise), gathered at attention/matmul boundaries by SPMD.
+_SEQPAR: Rules = dict(_DEFAULT, seq=[("model",)])
+
+# Expert-parallel MoE: shard the expert dim over the model axis when E
+# divides it (falls back to TP-inside-expert otherwise, same as default).
+_EXPERT: Rules = dict(_DEFAULT, experts=[("model",)])
+
+RULE_SETS: dict[str, Rules] = {
+    "default": _DEFAULT,
+    "fsdp_pods": _FSDP_PODS,
+    "seqpar": _SEQPAR,
+    "expert": _EXPERT,
+}
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Mesh + rule set threaded through model code. mesh=None => no-op
+    (single-device smoke tests)."""
+
+    mesh: Mesh | None = None
+    rules_name: str = "default"
+
+    @property
+    def rules(self) -> Rules:
+        return RULE_SETS[self.rules_name]
+
+
+def logical_spec(shape: tuple[int, ...], dims: tuple[str | None, ...],
+                 mesh: Mesh | None, rules: Rules) -> P:
+    """Resolve logical dim names to a concrete PartitionSpec."""
+    if mesh is None:
+        return P()
+    if len(shape) != len(dims):
+        raise ValueError(f"shape {shape} vs dims {dims}")
+    axis_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    used: set[str] = set()
+    out: list = []
+    for size, name in zip(shape, dims):
+        picked = None
+        for cand in (rules.get(name, []) if name else []):
+            if not all(a in axis_sizes for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= axis_sizes[a]
+            if size % prod == 0:
+                picked = cand
+                used.update(cand)
+                break
+        out.append(picked if picked is None else
+                   (picked[0] if len(picked) == 1 else picked))
+    # Trim trailing Nones for tidy specs.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, ctx: ShardingCtx, *dims: str | None) -> jax.Array:
+    """with_sharding_constraint by logical dim names (no-op without mesh)."""
+    if ctx.mesh is None:
+        return x
+    spec = logical_spec(x.shape, tuple(dims), ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(ctx: ShardingCtx, shape: tuple[int, ...],
+                   dims: tuple[str | None, ...]) -> NamedSharding | None:
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh,
+                         logical_spec(shape, dims, ctx.mesh, ctx.rules))

@@ -1,0 +1,1 @@
+from repro.kernels.bitslice_pack.ops import bitslice_pack  # noqa: F401

@@ -1,0 +1,40 @@
+"""Bit-plane expansion kernel: quantisation codes -> crossbar bit image.
+
+Turns (I, N) integer codes into the (I, N, K) uint8 bit-plane tensor that
+is the physical programming image of a bit-sliced crossbar (optionally
+column-mirrored for reversed dataflow).  Used when exporting deployment
+images and by the NF benchmarks; on TPU the expansion runs in VMEM so the
+K-fold traffic blow-up happens on-chip, not over HBO->host DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(codes_ref, out_ref, *, n_bits: int, reversed_df: bool):
+    c = jnp.abs(codes_ref[...].astype(jnp.int32)).astype(jnp.uint32)
+    for k in range(n_bits):
+        plane = ((c >> (n_bits - 1 - k)) & 1).astype(jnp.uint8)
+        slot = (n_bits - 1 - k) if reversed_df else k
+        out_ref[..., slot] = plane
+
+
+def bitslice_pack_pallas(codes: jax.Array, *, n_bits: int, reversed_df: bool,
+                         block_i: int, block_n: int, interpret: bool):
+    I, N = codes.shape
+    grid = (I // block_i, N // block_n)
+    kernel = functools.partial(_pack_kernel, n_bits=n_bits,
+                               reversed_df=reversed_df)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_i, block_n), lambda i, n: (i, n))],
+        out_specs=pl.BlockSpec((block_i, block_n, n_bits),
+                               lambda i, n: (i, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((I, N, n_bits), jnp.uint8),
+        interpret=interpret,
+    )(codes)

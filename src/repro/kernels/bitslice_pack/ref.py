@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the bit-plane expansion kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitslice import codes_to_bits
+
+
+def bitslice_pack_ref(codes: jax.Array, n_bits: int,
+                      reversed_df: bool = False) -> jax.Array:
+    bits = codes_to_bits(jnp.abs(codes.astype(jnp.int32)).astype(jnp.uint32),
+                         n_bits)
+    return bits[..., ::-1] if reversed_df else bits

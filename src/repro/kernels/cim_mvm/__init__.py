@@ -1,0 +1,1 @@
+from repro.kernels.cim_mvm.ops import cim_mvm  # noqa: F401

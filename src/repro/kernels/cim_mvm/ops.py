@@ -1,0 +1,114 @@
+"""Public jit'd wrapper for the fused CIM matmul kernel.
+
+``deploy()`` turns a dense weight matrix into a :class:`CimDeployment`
+(signed quantisation codes + MDM physical-position table) once, at
+deployment time; ``cim_mvm()`` then computes the PR-distorted matmul for
+any activation batch.  This is the layer the model zoo's ``cim.enabled``
+mode routes matmuls through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitslice import quantize_magnitude
+from repro.core.mdm import MdmPlan, plan_from_bits
+from repro.core.bitslice import codes_to_bits
+from repro.core.noise import PAPER_ETA
+from repro.core.tiling import CrossbarSpec
+from repro.kernels.cim_mvm.kernel import cim_mvm_pallas
+from repro.kernels.runtime import INTERPRET, round_up
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("codes", "pos", "scale"),
+         meta_fields=("n_bits", "wpt", "cols", "eta", "reversed_df",
+                      "in_dim", "out_dim"))
+@dataclasses.dataclass
+class CimDeployment:
+    """A weight matrix deployed onto bit-sliced crossbars.
+
+    codes: (I_tiles*rows, N_tiles*wpt) int16 signed codes (sign*magnitude).
+    pos:   (I_tiles*rows, N_tiles)     int32 physical row positions.
+    scale: ()                          f32 quantisation scale.
+    """
+
+    codes: jax.Array
+    pos: jax.Array
+    scale: jax.Array
+    n_bits: int
+    wpt: int
+    cols: int
+    eta: float
+    reversed_df: bool
+    in_dim: int
+    out_dim: int
+
+
+def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+           eta: float = PAPER_ETA) -> tuple[CimDeployment, MdmPlan]:
+    """Quantise, plan (MDM or ablation) and package a weight matrix."""
+    if w.ndim != 2:
+        raise ValueError("deploy expects (in_dim, out_dim)")
+    I, N = w.shape
+    codes, sign, scale = quantize_magnitude(w, spec.n_bits)
+    bits = codes_to_bits(codes, spec.n_bits)
+    plan = plan_from_bits(bits, scale, spec, mode)
+
+    ti, tn = spec.grid(I, N)
+    rows, wpt = spec.rows, spec.weights_per_tile
+    i_pad, n_pad = ti * rows, tn * wpt
+    signed = (codes.astype(jnp.int32) * sign.astype(jnp.int32)).astype(jnp.int16)
+    signed = jnp.pad(signed, ((0, i_pad - I), (0, n_pad - N)))
+
+    # pos[i, tn] = physical row position of input i in column-tile tn.
+    qi = jnp.arange(i_pad) % rows
+    tii = jnp.arange(i_pad) // rows
+    pos = plan.row_position[tii, :, qi].astype(jnp.int32)      # (i_pad, tn)
+
+    return CimDeployment(
+        codes=signed, pos=pos, scale=scale, n_bits=spec.n_bits, wpt=wpt,
+        cols=spec.cols, eta=float(eta),
+        reversed_df=mode in ("reverse", "mdm"), in_dim=I, out_dim=N), plan
+
+
+def _block_sizes(M: int, I: int, N: int, wpt: int) -> tuple[int, int, int]:
+    bm = 128 if M >= 128 else round_up(M, 8)
+    bi = 256 if I >= 256 else round_up(I, 8)
+    n_unit = math.lcm(wpt, 8)
+    bn = 128 if N >= 128 and 128 % n_unit == 0 else round_up(min(N, 128), n_unit)
+    return bm, bi, bn
+
+
+@partial(jax.jit, static_argnames=("interpret", "blocks"))
+def cim_mvm(x: jax.Array, dep: CimDeployment,
+            interpret: bool = INTERPRET,
+            blocks: tuple[int, int, int] | None = None) -> jax.Array:
+    """y = x @ W_effective for a CIM-deployed weight matrix.
+
+    x: (..., in_dim); returns (..., out_dim) f32.
+    """
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    M, I = x2.shape
+    if I != dep.in_dim:
+        raise ValueError(f"x feature dim {I} != deployed in_dim {dep.in_dim}")
+
+    i_pad, n_pad = dep.codes.shape
+    bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)
+
+    mp, ip, np_ = round_up(M, bm), round_up(i_pad, bi), round_up(n_pad, bn)
+    x2 = jnp.pad(x2, ((0, mp - M), (0, ip - I)))
+    codes = jnp.pad(dep.codes, ((0, ip - i_pad), (0, np_ - n_pad)))
+    pos = jnp.pad(dep.pos, ((0, ip - i_pad), (0, (np_ - n_pad) // dep.wpt)))
+
+    y = cim_mvm_pallas(
+        x2, codes, pos, dep.scale.reshape(1, 1),
+        n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols, eta=dep.eta,
+        reversed_df=dep.reversed_df, block_m=bm, block_n=bn, block_i=bi,
+        interpret=interpret)
+    return y[:M, :dep.out_dim].reshape(*batch_shape, dep.out_dim)

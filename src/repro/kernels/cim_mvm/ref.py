@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused CIM matmul kernel.
+
+Builds the effective PR-distorted weight matrix with the (independently
+tested) ``repro.core.noise`` path and performs a plain matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitslice import codes_to_bits
+from repro.core.mdm import MdmPlan
+from repro.core.noise import noisy_magnitude
+from repro.core.tiling import CrossbarSpec
+
+
+def cim_mvm_ref(x: jax.Array, codes_signed: jax.Array, plan: MdmPlan,
+                spec: CrossbarSpec, eta: float) -> jax.Array:
+    """y = x @ W' from signed codes (I, N) and an MDM plan."""
+    mag = jnp.abs(codes_signed).astype(jnp.uint32)
+    sign = jnp.where(codes_signed < 0, -1.0, 1.0).astype(jnp.float32)
+    bits = codes_to_bits(mag, spec.n_bits)
+    w_mag = noisy_magnitude(bits, plan.scale, plan, spec, eta)
+    w_eff = sign * w_mag
+    return jnp.dot(x.astype(jnp.float32), w_eff,
+                   preferred_element_type=jnp.float32)

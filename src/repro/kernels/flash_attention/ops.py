@@ -1,0 +1,54 @@
+"""Jit'd wrapper for the Pallas flash-attention kernel.
+
+Drop-in for ``repro.models.attention.flash_attention`` on TPU: same
+(B, S, H, Dh) interfaces and position-based masking.  The wrapper
+flattens (B, H) onto the grid axis, pads sequence dims to block
+multiples (padded keys get EMPTY_POS and self-mask), and restores
+layout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.runtime import INTERPRET, round_up
+
+EMPTY_POS = jnp.int32(2 ** 30)
+
+
+@partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_positions: jax.Array, k_positions: jax.Array,
+                        window: int = 0, block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = INTERPRET) -> jax.Array:
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+
+    bq = min(block_q, round_up(Sq, 8))
+    bk = min(block_k, round_up(Skv, 8))
+    sq_p, sk_p = round_up(Sq, bq), round_up(Skv, bk)
+
+    qp = jnp.pad(q_positions.astype(jnp.int32), (0, sq_p - Sq))
+    kp = jnp.pad(k_positions.astype(jnp.int32), (0, sk_p - Skv),
+                 constant_values=EMPTY_POS)
+    qt = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    kt = jnp.pad(k, ((0, 0), (0, sk_p - Skv), (0, 0), (0, 0)))
+    vt = jnp.pad(v, ((0, 0), (0, sk_p - Skv), (0, 0), (0, 0)))
+
+    # (B, S, H, Dh) -> (B*H, S, Dh); kv -> (B*Hkv, S, Dh)
+    qt = qt.transpose(0, 2, 1, 3).reshape(B * H, sq_p, Dh)
+    kt = kt.transpose(0, 2, 1, 3).reshape(B * Hkv, sk_p, Dh)
+    vt = vt.transpose(0, 2, 1, 3).reshape(B * Hkv, sk_p, Dh)
+
+    out = flash_attention_pallas(
+        qt, kt, vt, qp, kp, scale=Dh ** -0.5, window=window, group=G,
+        block_q=bq, block_k=bk, interpret=interpret)
+    out = out.reshape(B, H, sq_p, Dh).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: exact softmax attention with position masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, q_positions, k_positions, *, window: int = 0):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh). Exact (materialised)
+    causal attention with absolute-position masking."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    head_map = jnp.arange(H) // G
+    kk = jnp.take(k, head_map, axis=2).astype(jnp.float32)
+    vv = jnp.take(v, head_map, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+    s = s * Dh ** -0.5
+    valid = k_positions[None, :] <= q_positions[:, None]
+    if window:
+        valid &= (q_positions[:, None] - k_positions[None, :]) < window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    return out.astype(q.dtype)

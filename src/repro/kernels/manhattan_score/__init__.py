@@ -1,0 +1,1 @@
+from repro.kernels.manhattan_score.ops import manhattan_score  # noqa: F401

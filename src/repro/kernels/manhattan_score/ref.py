@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Manhattan score/NF reduction kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import manhattan
+
+
+def manhattan_score_ref(masks: jax.Array, nf_unit: float):
+    """masks: (T, R, C). Returns (scores (T,R), counts (T,R), nf (T,))."""
+    scores = manhattan.row_scores(masks)
+    counts = manhattan.row_counts(masks)
+    nf = nf_unit * manhattan.aggregate_distance(masks)
+    return scores, counts, nf

@@ -1,0 +1,13 @@
+"""Kernel runtime switches."""
+from __future__ import annotations
+
+import jax
+
+# pallas_call(interpret=True) on non-TPU backends: the kernel body runs
+# block-by-block in the Python interpreter, giving bit-faithful validation
+# of the BlockSpec tiling logic without TPU hardware.
+INTERPRET: bool = jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

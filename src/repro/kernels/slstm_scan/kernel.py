@@ -1,0 +1,102 @@
+"""Pallas TPU sLSTM scan (beyond-paper §Perf kernel for xlstm-1.3b).
+
+The sLSTM recurrence is strictly sequential (hidden-to-gate feedback),
+so XLA lowers it to a 4096-iteration while loop whose body re-reads the
+(H, Dh, 4Dh) recurrent weights from HBM and — when TP-sharded — issues a
+tiny all-reduce *every timestep* (98k collectives per train step; the
+dominant collective site of the xlstm train cell, and pure latency
+poison on real ICI).
+
+This kernel pins the recurrent weights and the (h, c) state in VMEM for
+an entire time *chunk* (weights stream HBM->VMEM once per chunk instead
+of once per step: a chunk=128 sweep cuts recurrent-weight traffic 128x),
+and runs the recurrence replicated per shard — no per-step collectives.
+
+Grid: (B/BB, T/chunk); T is the fastest-varying axis so the state
+scratch persists across the whole sequence sweep of one batch block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(gx_ref, r_ref, h0_ref, c0_ref, hs_ref, hT_ref, cT_ref,
+                  h_s, c_s, *, chunk: int, n_t: int, t_valid: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)                  # (H, Dh, 4Dh)
+
+    def step(t, carry):
+        h, c = carry
+        g_t = gx_ref[:, t].astype(jnp.float32)          # (BB, H, 4Dh)
+        pre = g_t + jax.lax.dot_general(
+            h, r, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32).transpose(1, 0, 2)
+        i, f, z, o = jnp.split(pre, 4, axis=-1)
+        c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        # freeze the state on padded timesteps (T padded to the chunk)
+        live = (ti * chunk + t) < t_valid
+        c = jnp.where(live, c_new, c)
+        h = jnp.where(live, h_new, h)
+        hs_ref[:, t] = h_new.astype(hs_ref.dtype)
+        return h, c
+
+    h, c = jax.lax.fori_loop(0, chunk, step,
+                             (h_s[...], c_s[...]), unroll=False)
+    h_s[...] = h
+    c_s[...] = c
+
+    @pl.when(ti == n_t - 1)
+    def _finish():
+        hT_ref[...] = h.astype(hT_ref.dtype)
+        cT_ref[...] = c.astype(cT_ref.dtype)
+
+
+def slstm_scan_pallas(gx: jax.Array, r_gates: jax.Array, h0: jax.Array,
+                      c0: jax.Array, *, block_b: int, chunk: int,
+                      t_valid: int, interpret: bool):
+    """gx: (B, T, H, 4Dh); r_gates: (H, Dh, 4Dh); h0/c0: (B, H, Dh).
+    Returns (hs (B, T, H, Dh) f32, hT, cT)."""
+    B, T, H, Dh4 = gx.shape
+    Dh = Dh4 // 4
+    grid = (B // block_b, T // chunk)
+    kernel = functools.partial(_slstm_kernel, chunk=chunk,
+                               n_t=T // chunk, t_valid=t_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, chunk, H, Dh4),
+                         lambda bi, ti: (bi, ti, 0, 0)),
+            pl.BlockSpec((H, Dh, Dh4), lambda bi, ti: (0, 0, 0)),
+            pl.BlockSpec((block_b, H, Dh), lambda bi, ti: (bi, 0, 0)),
+            pl.BlockSpec((block_b, H, Dh), lambda bi, ti: (bi, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, chunk, H, Dh),
+                         lambda bi, ti: (bi, ti, 0, 0)),
+            pl.BlockSpec((block_b, H, Dh), lambda bi, ti: (bi, 0, 0)),
+            pl.BlockSpec((block_b, H, Dh), lambda bi, ti: (bi, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, T, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, H, Dh), jnp.float32),
+            pltpu.VMEM((block_b, H, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gx, r_gates, h0, c0)

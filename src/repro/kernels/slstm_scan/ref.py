@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: the sequential sLSTM scan (matches
+repro.models.recurrent.slstm_mixer's recurrence exactly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(gx: jax.Array, r_gates: jax.Array, h0: jax.Array,
+                   c0: jax.Array):
+    """gx: (B, T, H, 4Dh) f32; returns (hs (B,T,H,Dh) f32, hT, cT)."""
+
+    def body(carry, g_t):
+        h, c = carry
+        pre = g_t.astype(jnp.float32) + jnp.einsum(
+            "bhd,hdg->bhg", h, r_gates.astype(jnp.float32))
+        i, f, z, o = jnp.split(pre, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (hT, cT), hs = jax.lax.scan(body, (h0.astype(jnp.float32),
+                                       c0.astype(jnp.float32)),
+                                gx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), hT, cT

@@ -1,0 +1,395 @@
+"""Trip-count-aware cost walker over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation exactly once, so a
+``lax.scan`` over 80 layers reports 1/80th of the real FLOPs.  This
+module re-derives FLOPs / bytes-accessed / collective bytes by walking
+the HLO with loop multipliers taken from the ``known_trip_count``
+backend_config that XLA attaches to while ops:
+
+  * FLOPs: dots = 2 * result_elems * contracted_elems (shapes from the
+    per-computation symbol table); elementwise/reduce ops = input elems.
+  * bytes: per top-level op, operands + result (fusion bodies contribute
+    FLOPs only — their memory traffic is the fusion call site's).
+  * collectives: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (+ their async
+    -start forms), scaled by the enclosing loop multipliers.
+
+This is a structural model (no wall clock on CPU), but it is *consistent*
+— the same workload change moves the same term — which is what the §Perf
+hillclimb needs.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\]{},]+)\s+"
+    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_ELEMENTWISE_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "custom-call", "infeed", "outfeed", "rng-bit-generator",
+}
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_info(s: str):
+    """(total_bytes, dims_of_first_array) for a result type string."""
+    total = 0
+    dims0: list[int] | None = None
+    for dt, dm in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in dm.split(",") if x.strip()]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if dims0 is None:
+            dims0 = dims
+    return total, (dims0 or [])
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    result: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list[_Op] = field(default_factory=list)
+    symtab: dict = field(default_factory=dict)   # op name -> result type str
+
+
+def parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and _COMP_HDR.match(line) and \
+                line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line)
+            cur = _Comp(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            # parameters: "  %p = f32[..] parameter(0)" matches _OP_RE;
+            # non-op lines fall through here.
+            continue
+        name, result, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end():]
+        close = rest.find(")")
+        operand_str = rest[:close if close >= 0 else len(rest)]
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.ops.append(_Op(name, opcode, result, operands, rest))
+        cur.symtab[name] = result
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _multipliers(comps: dict[str, _Comp]) -> dict[str, float]:
+    """Execution-count multiplier per computation (while trip counts)."""
+    mult: dict[str, float] = defaultdict(float)
+    entry = comps["__entry__"].name
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # Build edges on demand (call graph is a DAG in HLO).
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        for op in comp.ops:
+            edges: list[tuple[str, float]] = []
+            if op.opcode == "while":
+                t = _TRIP_RE.search(op.attrs)
+                trips = float(t.group(1)) if t else 1.0
+                for key in ("body", "condition"):
+                    m = re.search(key + r"=%?([\w.\-]+)", op.attrs)
+                    if m:
+                        edges.append((m.group(1), trips))
+            elif op.opcode in ("fusion", "call", "async-start"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
+                if m:
+                    edges.append((m.group(1), 1.0))
+            elif op.opcode == "conditional":
+                for m in re.finditer(r"%([\w.\-]+)", op.attrs):
+                    if m.group(1) in comps:
+                        edges.append((m.group(1), 1.0))
+            for child, k in edges:
+                if child not in comps:
+                    continue
+                mult[child] += mult[cname] * k
+                if child not in seen:
+                    seen.add(child)
+                    order.append(child)
+    return mult
+
+
+def _fusion_bodies(comps: dict[str, _Comp]) -> set[str]:
+    bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m:
+                    bodies.add(m.group(1))
+    return bodies
+
+
+# Ops that read only their *result*-sized window of a big operand.
+_SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+
+
+def _param_effective_bytes(comp: _Comp) -> dict[int, float]:
+    """For a fusion body: param index -> effective bytes read, when every
+    use of that parameter is slice-like (dynamic-slice of a scan input
+    reads one step's window, not the whole stacked buffer)."""
+    by_name = {op.name: op for op in comp.ops}
+    uses: dict[str, list[_Op]] = defaultdict(list)
+    for op in comp.ops:
+        for o in op.operands:
+            uses[o].append(op)
+    out: dict[int, float] = {}
+    for op in comp.ops:
+        if op.opcode != "parameter":
+            continue
+        m = re.match(r"\s*(\d+)", op.attrs)
+        if not m:
+            continue
+        idx = int(m.group(1))
+        use_list = uses.get(op.name, [])
+        if use_list and all(u.opcode in _SLICE_LIKE for u in use_list):
+            out[idx] = sum(_shape_info(u.result)[0] for u in use_list)
+    return out
+
+
+def _root_op(comp: _Comp) -> _Op | None:
+    return comp.ops[-1] if comp.ops else None
+
+
+def _op_bytes(op: _Op, comp: _Comp, comps: dict,
+              eff_cache: dict) -> float:
+    """HBM traffic model for one top-level op."""
+    res_bytes, _ = _shape_info(op.result)
+    sym = comp.symtab
+
+    def osize(name: str) -> float:
+        return _shape_info(sym.get(name, ""))[0]
+
+    if op.opcode in _SLICE_LIKE:
+        # reads the sliced window (~= result) + writes result
+        return 2.0 * res_bytes
+    if op.opcode == "dynamic-update-slice":
+        upd = osize(op.operands[1]) if len(op.operands) > 1 else res_bytes
+        return 2.0 * upd       # read-modify-write of the update window
+    if op.opcode == "scatter":
+        idx = osize(op.operands[1]) if len(op.operands) > 1 else 0.0
+        upd = osize(op.operands[2]) if len(op.operands) > 2 else res_bytes
+        return idx + 2.0 * upd
+    if op.opcode == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        body = comps.get(m.group(1)) if m else None
+        total = 0.0
+        if body is not None:
+            if m.group(1) not in eff_cache:
+                eff_cache[m.group(1)] = _fusion_effective(body)
+            eff, alias_res = eff_cache[m.group(1)]
+            for i, o in enumerate(op.operands):
+                total += eff.get(i, osize(o))
+            return total + (0.0 if alias_res else res_bytes)
+        total = sum(osize(o) for o in op.operands)
+        return total + res_bytes
+    return sum(osize(o) for o in op.operands) + res_bytes
+
+
+def _fusion_effective(body: _Comp) -> tuple[dict[int, float], bool]:
+    """(param index -> effective bytes, result_aliases_input).
+
+    Two in-place patterns matter beyond plain slicing:
+      * dynamic-update-slice of a parameter (scan output stacking / cache
+        writes): traffic is 2x the update window, and the fusion result
+        aliases the input buffer — charging the full carried buffer per
+        step inflates an 80-layer scan by the buffer/step ratio (observed
+        as 13 PB of phantom traffic on the xlstm cell).
+      * scatter into a parameter: indices + 2x updates.
+    """
+    eff = _param_effective_bytes(body)
+    by_name = {o.name: o for o in body.ops}
+    param_idx = {}
+    for o in body.ops:
+        if o.opcode == "parameter":
+            mi = re.match(r"\s*(\d+)", o.attrs)
+            if mi:
+                param_idx[o.name] = int(mi.group(1))
+
+    def trace_param(name: str) -> int | None:
+        seen = 0
+        while name in by_name and seen < 8:
+            o = by_name[name]
+            if o.opcode == "parameter":
+                return param_idx.get(name)
+            # convert/copy included: XLA-CPU wraps loop-carried updates
+            # in full-buffer dtype converts that the TPU pipeline sinks
+            # into the update window — model the intended in-place op.
+            if o.opcode in ("bitcast", "reshape", "transpose", "convert",
+                            "copy") and o.operands:
+                name = o.operands[0]
+                seen += 1
+                continue
+            return None
+        return param_idx.get(name)
+
+    def obytes(name: str) -> float:
+        return _shape_info(body.symtab.get(name, ""))[0]
+
+    alias = False
+    for o in body.ops:
+        if o.opcode == "dynamic-update-slice" and len(o.operands) > 1:
+            pi = trace_param(o.operands[0])
+            upd = obytes(o.operands[1])
+            if pi is not None:
+                eff[pi] = 2.0 * upd
+                alias = True
+        elif o.opcode == "scatter" and len(o.operands) > 2:
+            pi = trace_param(o.operands[0])
+            cost = obytes(o.operands[1]) + 2.0 * obytes(o.operands[2])
+            if pi is not None:
+                eff[pi] = cost
+                alias = True
+    return eff, alias
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    res_bytes, res_dims = _shape_info(op.result)
+    res_elems = 1
+    for d in res_dims:
+        res_elems *= d
+    lhs = op.operands[0] if op.operands else None
+    lhs_dims = _shape_info(comp.symtab.get(lhs, ""))[1] if lhs else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contracted = 1
+    if m and lhs_dims:
+        for i in m.group(1).split(","):
+            if i.strip():
+                idx = int(i)
+                if idx < len(lhs_dims):
+                    contracted *= lhs_dims[idx]
+    return 2.0 * res_elems * contracted
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    coll_breakdown: dict = field(default_factory=dict)
+    loop_trip_counts: list = field(default_factory=list)
+    top_coll_sites: list = field(default_factory=list)   # (bytes, desc)
+    top_bytes_sites: list = field(default_factory=list)  # (bytes, desc)
+
+
+def _op_meta(op: _Op) -> str:
+    m = re.search(r'op_name="([^"]+)"', op.attrs)
+    return m.group(1) if m else op.name
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    mult = _multipliers(comps)
+    fusion_bodies = _fusion_bodies(comps)
+    out = HloCost()
+    coll = defaultdict(float)
+    coll_sites: list = []
+    bytes_sites: list = []
+    eff_cache: dict = {}
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        k = mult.get(cname, 0.0)
+        if k == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            res_bytes, res_dims = _shape_info(op.result)
+            res_elems = 1
+            for d in res_dims:
+                res_elems *= d
+            # ---- FLOPs
+            if op.opcode == "dot":
+                out.flops += k * _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                # treat like dot via operand kernel size (rare here)
+                out.flops += k * 2.0 * res_elems
+            elif op.opcode in ("reduce", "reduce-window"):
+                opd = op.operands[0] if op.operands else None
+                in_elems = 1
+                for d in _shape_info(comp.symtab.get(opd, ""))[1]:
+                    in_elems *= d
+                out.flops += k * in_elems
+            elif op.opcode not in _ELEMENTWISE_SKIP and \
+                    op.opcode not in ("fusion", "while", "call",
+                                      "conditional"):
+                out.flops += k * res_elems
+            # ---- collectives (operand bytes)
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+                ob = sum(_shape_info(comp.symtab.get(o, ""))[0]
+                         for o in op.operands)
+                coll[base] += k * ob
+                out.collective_bytes += k * ob
+                coll_sites.append(
+                    (k * ob, f"{base} x{k:g} {op.result[:40]} "
+                             f"[{_op_meta(op)[:90]}]"))
+            # ---- bytes
+            if not in_fusion and op.opcode not in _NO_BYTES and \
+                    op.opcode not in ("while", "conditional"):
+                b = _op_bytes(op, comp, comps, eff_cache)
+                out.bytes_accessed += k * b
+                bytes_sites.append(
+                    (k * b,
+                     f"{op.opcode} x{k:g} {op.result[:40]} "
+                     f"[{_op_meta(op)[:90]}]"))
+
+    coll_sites.sort(key=lambda t: -t[0])
+    bytes_sites.sort(key=lambda t: -t[0])
+    out.top_coll_sites = coll_sites[:20]
+    out.top_bytes_sites = bytes_sites[:20]
+    out.coll_breakdown = dict(coll)
+    out.loop_trip_counts = [int(m.group(1))
+                            for m in _TRIP_RE.finditer(hlo)]
+    return out

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    # more devices than the mesh needs (e.g. 512 placeholders, single-pod
+    # mesh): use the first n.
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """1-device mesh with production axis names (smoke tests)."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(shape), axes)

@@ -1,0 +1,137 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs   / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes   / (chips * 819e9   HBM B/s)
+    collective = coll_bytes  / (chips * 50e9    per-link ICI B/s)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+not reported there, so we parse the optimized HLO and sum the result
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (loop-body collectives are multiplied by the
+enclosing while trip count when derivable from the scan length).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.3 = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind over the HLO module text."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            b = sum(_shape_bytes(dt, dm)
+                    for dt, dm in _TUPLE_ELT_RE.findall(tuple_body))
+        else:
+            b = _shape_bytes(dtype, dims)
+        totals[kind] += b
+    return totals
+
+
+def loop_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts of while loops, from trip_count annotations if present."""
+    return [int(x) for x in re.findall(r'known_trip_count=\{"?(\d+)"?\}',
+                                       hlo_text)]
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+    model_flops: float = 0.0
+    coll_breakdown: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term roofline that is useful model
+        compute: (model_flops / peak) / bound_time."""
+        if not self.model_flops or not self.bound_time:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_time
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops(cfg, shape_cfg, n_params_active: int, n_params_embed: int):
+    """6*N*D train FLOPs (2*N*D forward-only), N = active non-embedding
+    params (MoE counts routed experts at top-k/E utilisation)."""
+    tokens = shape_cfg.global_batch * (
+        shape_cfg.seq_len if shape_cfg.kind != "decode" else 1)
+    n = n_params_active - n_params_embed
+    per_tok = 6 * n if shape_cfg.kind == "train" else 2 * n
+    return float(per_tok) * tokens

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    ModelState,
+    apply_model,
+    init_decode_state,
+    init_params,
+    param_partition_specs,
+    state_partition_specs,
+    train_loss,
+)

@@ -1,0 +1,29 @@
+"""Modality frontend STUBS for [vlm]/[audio] architectures.
+
+Per the assignment, the transformer BACKBONE is the deliverable; the
+modality frontend (InternViT for internvl2, EnCodec for musicgen) is a
+stub whose contract is: ``input_specs()`` provides *precomputed*
+patch/frame embeddings of backbone width.  These helpers generate
+deterministic synthetic embeddings with realistic statistics for smoke
+tests and examples; the dry-run uses ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_embeddings(cfg: ModelConfig, batch: int, seq: int,
+                         key: jax.Array, dtype=None) -> jax.Array:
+    """Stand-in for frontend output: unit-variance (B, S, D) embeddings."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32) \
+        .astype(dtype)
+
+
+def embedding_spec(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=None) -> jax.ShapeDtypeStruct:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)

@@ -1,0 +1,426 @@
+"""Model assembly: pattern-scanned decoder stack covering the whole
+assigned architecture pool (dense GQA / MoE / Mamba hybrid / xLSTM /
+frontend-stub VLM & audio).
+
+Layers are stacked per pattern slot and iterated with ``lax.scan`` so the
+HLO stays O(1) in depth (essential for the 80-layer dry-runs).  The same
+``apply_model`` serves training (no state), prefill (state threaded, all
+positions) and decode (state threaded, one position): attention caches
+are ring buffers keyed by absolute positions, recurrent blocks carry
+O(1) states.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingCtx, logical_spec, shard
+from repro.models import schema as sch
+from repro.models.attention import EMPTY_POS, flash_attention, rope
+from repro.models.moe import moe_ffn
+from repro.models.recurrent import (
+    mamba_decode,
+    mamba_mixer,
+    mlstm_decode,
+    mlstm_mixer,
+    slstm_mixer,
+)
+
+ModelState = dict[str, Any]
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def dense_mlp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+              prefix: str = "ffn_") -> jax.Array:
+    g = lambda n: p[prefix + n]
+    if cfg.mlp_type == "swiglu":
+        h = _silu(x @ g("w_gate")) * (x @ g("w_up"))
+    else:
+        h = jax.nn.gelu(x @ g("w_up"))
+    h = shard(h, ctx, "batch", "seq", "act_mlp")
+    return h @ g("w_down")
+
+
+# ----------------------------- attention ---------------------------------
+
+def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+               positions: jax.Array, cache: dict | None,
+               prefix: str = ""):
+    g = lambda n: p[prefix + n]
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, g("wq"))
+    k = jnp.einsum("bsd,dhk->bshk", x, g("wk"))
+    v = jnp.einsum("bsd,dhk->bshk", x, g("wv"))
+    if cfg.qkv_bias:
+        q, k, v = q + g("bq"), k + g("bk"), v + g("bv")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    H = q.shape[2]
+    tp = dict(ctx.mesh.shape).get("model", 1) if ctx.mesh else 1
+    if cfg.attn_fallback_shard == "query" and H % tp != 0:
+        # Heads can't take the TP axis: shard queries instead of the QK
+        # contraction dim (head_dim) — scores stay shard-local.
+        q = shard(q, ctx, "batch", "act_seq_q", None, None)
+        k = shard(k, ctx, "batch", None, None, None)
+        v = shard(v, ctx, "batch", None, None, None)
+    else:
+        q = shard(q, ctx, "batch", "seq", "act_heads", "act_head_dim")
+        k = shard(k, ctx, "batch", "seq", "act_kv", "act_head_dim")
+        v = shard(v, ctx, "batch", "seq", "act_kv", "act_head_dim")
+
+    new_cache = None
+    if cache is None:
+        k_all, v_all, k_pos = k, v, positions
+    else:
+        C = cache["k"].shape[1]
+        Sw = min(S, C)
+        kw, vw, pw = k[:, S - Sw:], v[:, S - Sw:], positions[S - Sw:]
+        if cfg.cache_update == "dus" and not cfg.sliding_window:
+            # No ring wraparound without a window (C >= max position):
+            # one contiguous dynamic-update-slice keeps the cache write
+            # shard-local (the index-array scatter below replicates the
+            # cache under SPMD — the dominant prefill collective).
+            start = pw[0]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], kw.astype(cache["k"].dtype), (0, start, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vw.astype(cache["v"].dtype), (0, start, 0, 0))
+            cp = jax.lax.dynamic_update_slice(cache["kpos"], pw, (start,))
+        else:
+            idx = pw % C
+            ck = cache["k"].at[:, idx].set(kw.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, idx].set(vw.astype(cache["v"].dtype))
+            cp = cache["kpos"].at[idx].set(pw)
+        new_cache = {"k": ck, "v": cv, "kpos": cp}
+        k_all, v_all, k_pos = ck, cv, cp
+
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention_tpu
+        out = flash_attention_tpu(q, k_all, v_all, q_positions=positions,
+                                  k_positions=k_pos,
+                                  window=cfg.sliding_window)
+    else:
+        out = flash_attention(q, k_all, v_all, q_positions=positions,
+                              k_positions=k_pos, window=cfg.sliding_window,
+                              chunk=cfg.attn_chunk,
+                              gqa_broadcast=cfg.gqa_broadcast,
+                              remat_chunk=cfg.attn_remat_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, g("wo"))
+    return y, new_cache
+
+
+# --------------------------- block dispatch ------------------------------
+
+def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
+                ctx: ShardingCtx, positions: jax.Array,
+                state: dict | None, decode: bool):
+    """Apply one block. Returns (x, new_state_slice, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_state: dict = {}
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+
+    if bt == "attn":
+        y, cache = attn_apply(p, h, cfg, ctx, positions,
+                              None if state is None else state)
+        if cache is not None:
+            new_state = cache
+    elif bt == "hybrid":
+        cache_in = None if state is None else \
+            {k: state[k] for k in ("k", "v", "kpos")}
+        y_attn, cache = attn_apply(p, h, cfg, ctx, positions, cache_in,
+                                   prefix="attn_")
+        ssm_in = None if state is None else (state["conv"], state["ssm"])
+        if decode:
+            y_ssm, (cs, hs) = mamba_decode(p, h, ssm_in, prefix="ssm_")
+        else:
+            y_ssm, (cs, hs) = mamba_mixer(p, h, ssm_in,
+                                          chunk=cfg.ssm_chunk, prefix="ssm_")
+        y = 0.5 * (y_attn + y_ssm)
+        if state is not None:
+            new_state = dict(cache, conv=cs, ssm=hs)
+    elif bt == "mamba":
+        ssm_in = None if state is None else (state["conv"], state["ssm"])
+        if decode:
+            y, (cs, hs) = mamba_decode(p, h, ssm_in)
+        else:
+            y, (cs, hs) = mamba_mixer(p, h, ssm_in, chunk=cfg.ssm_chunk)
+        if state is not None:
+            new_state = {"conv": cs, "ssm": hs}
+    elif bt == "mlstm":
+        st = None if state is None else (state["S"], state["n"])
+        if decode:
+            y, (Sm, nv) = mlstm_decode(p, h, st)
+        else:
+            y, (Sm, nv) = mlstm_mixer(p, h, st, chunk=cfg.mlstm_chunk)
+        if state is not None:
+            new_state = {"S": Sm, "n": nv}
+    elif bt == "slstm":
+        st = None if state is None else (state["h"], state["c"])
+        y, (hh, cc) = slstm_mixer(p, h, st, ctx=ctx, tp=cfg.slstm_tp)
+        if state is not None:
+            new_state = {"h": hh, "c": cc}
+    else:
+        raise ValueError(f"unknown block type {bt}")
+
+    x = x + y
+    x = shard(x, ctx, "batch", "seq", "act_embed")
+
+    if bt in ("attn", "hybrid") and cfg.mlp_type != "none":
+        hf = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            yf, aux = moe_ffn(p, hf, cfg, ctx)
+        else:
+            yf = dense_mlp(p, hf, cfg, ctx)
+        x = x + yf
+        x = shard(x, ctx, "batch", "seq", "act_embed")
+    return x, new_state, aux
+
+
+# ----------------------------- full model --------------------------------
+
+def _remat_wrap(fn, cfg: ModelConfig, train: bool):
+    if not train or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": recompute everything
+
+
+def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
+                tokens: jax.Array | None = None,
+                embeds: jax.Array | None = None,
+                state: ModelState | None = None,
+                decode: bool = False,
+                return_hidden: bool = False):
+    """Returns (logits_or_hidden, new_state, aux_loss)."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    B, S = x.shape[0], x.shape[1]
+    x = shard(x, ctx, "batch", "seq", "act_embed")
+
+    pos0 = jnp.zeros((), jnp.int32) if state is None else state["pos"]
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)
+
+    pattern = cfg.block_pattern
+    slot_names = [f"slot{i}_{bt}" for i, bt in enumerate(pattern)]
+    xs: dict = {"params": {n: params[n] for n in slot_names}}
+    if state is not None:
+        xs["state"] = {n: state[n] for n in slot_names}
+
+    train = state is None
+
+    def repeat_body(carry, xs_t):
+        x, aux = carry
+        new_states = {}
+        for i, bt in enumerate(pattern):
+            n = slot_names[i]
+            st = xs_t["state"][n] if state is not None else None
+            x, ns, a = block_apply(bt, xs_t["params"][n], x, cfg, ctx,
+                                   positions, st, decode)
+            new_states[n] = ns
+            aux = aux + a
+        return (x, aux), new_states
+
+    body = _remat_wrap(repeat_body, cfg, train)
+    (x, aux), ys = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    new_state = None
+    if state is not None:
+        new_state = dict(ys, pos=pos0 + S)
+
+    if return_hidden:
+        return x, new_state, aux
+
+    logits = lm_logits(params, cfg, ctx, x)
+    return logits, new_state, aux
+
+
+def lm_logits(params: dict, cfg: ModelConfig, ctx: ShardingCtx,
+              hidden: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", hidden,
+                        params["lm_head"]).astype(jnp.float32)
+    logits = shard(logits, ctx, "batch", "seq", "act_vocab")
+    if cfg.padded_vocab > cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = logits - 1e9 * pad_mask.astype(jnp.float32)
+    return logits
+
+
+# ------------------------------- state -----------------------------------
+
+def _state_defs(cfg: ModelConfig, batch: int, cache_len: int):
+    """shape/dtype/logical-dims/fill for every decode-state tensor."""
+    R = cfg.pattern_repeats
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    H = cfg.n_heads
+    Di = cfg.d_model * cfg.ssm_expand
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    C = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def attn_defs():
+        return {
+            "k": ((R, batch, C, Hkv, Dh), dt,
+                  ("layers", "cache_batch", "cache_seq", "cache_kv",
+                   "cache_head_dim"), 0),
+            "v": ((R, batch, C, Hkv, Dh), dt,
+                  ("layers", "cache_batch", "cache_seq", "cache_kv",
+                   "cache_head_dim"), 0),
+            "kpos": ((R, C), jnp.int32, ("layers", None), int(EMPTY_POS)),
+        }
+
+    def mamba_defs():
+        return {
+            "conv": ((R, batch, K - 1, Di), dt,
+                     ("layers", "cache_batch", None, "inner"), 0),
+            "ssm": ((R, batch, Di, N), jnp.float32,
+                    ("layers", "cache_batch", "inner", "state"), 0),
+        }
+
+    defs: dict = {}
+    for i, bt in enumerate(cfg.block_pattern):
+        n = f"slot{i}_{bt}"
+        if bt == "attn":
+            defs[n] = attn_defs()
+        elif bt == "hybrid":
+            defs[n] = dict(attn_defs(), **mamba_defs())
+        elif bt == "mamba":
+            defs[n] = mamba_defs()
+        elif bt == "mlstm":
+            Dhm = (cfg.d_model * cfg.ssm_expand) // H
+            defs[n] = {
+                "S": ((R, batch, H, Dhm, Dhm), jnp.float32,
+                      ("layers", "cache_batch", "heads", "head_dim", None), 0),
+                "n": ((R, batch, H, Dhm), jnp.float32,
+                      ("layers", "cache_batch", "heads", "head_dim"), 0),
+            }
+        elif bt == "slstm":
+            Dhs = cfg.d_model // H
+            defs[n] = {
+                "h": ((R, batch, H, Dhs), jnp.float32,
+                      ("layers", "cache_batch", "heads", "head_dim"), 0),
+                "c": ((R, batch, H, Dhs), jnp.float32,
+                      ("layers", "cache_batch", "heads", "head_dim"), 0),
+            }
+    return defs
+
+
+def _map_state(defs: dict, fn):
+    out = {}
+    for slot, d in defs.items():
+        out[slot] = {k: fn(*v) for k, v in d.items()}
+    return out
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      abstract: bool = False) -> ModelState:
+    """Fresh decode state. ``kpos`` slots start at EMPTY_POS (self-masking).
+
+    Attention caches per slot are (R, B, C, Hkv, Dh) ring buffers with
+    C = min(cache_len, sliding_window or cache_len).
+    """
+    defs = _state_defs(cfg, batch, cache_len)
+    if abstract:
+        st = _map_state(defs, lambda sh, dt, dims, fill:
+                        jax.ShapeDtypeStruct(sh, dt))
+        st["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return st
+    st = _map_state(defs, lambda sh, dt, dims, fill:
+                    jnp.full(sh, fill, dt))
+    st["pos"] = jnp.zeros((), jnp.int32)
+    return st
+
+
+def state_partition_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int,
+                          cache_len: int):
+    defs = _state_defs(cfg, batch, cache_len)
+    specs = _map_state(defs, lambda sh, dt, dims, fill:
+                       logical_spec(sh, dims, ctx.mesh, ctx.rules))
+    from jax.sharding import PartitionSpec as P
+    specs["pos"] = P()
+    return specs
+
+
+# ------------------------------- params ----------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    return sch.materialize(cfg, key, dtype)
+
+
+def param_partition_specs(cfg: ModelConfig, ctx: ShardingCtx):
+    return sch.partition_specs(cfg, ctx)
+
+
+# -------------------------------- loss -----------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE; labels < 0 are masked."""
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * valid
+    return ce.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def train_loss(params: dict, cfg: ModelConfig, ctx: ShardingCtx,
+               batch: dict) -> tuple[jax.Array, dict]:
+    """batch: {"tokens": (B, S+1)} or {"embeds": (B,S,D), "labels": (B,S)}."""
+    if "embeds" in batch:
+        embeds, labels = batch["embeds"], batch["labels"]
+        hidden, _, aux = apply_model(params, cfg, ctx, embeds=embeds,
+                                     return_hidden=True)
+    else:
+        toks = batch["tokens"]
+        hidden, _, aux = apply_model(params, cfg, ctx, tokens=toks[:, :-1],
+                                     return_hidden=True)
+        labels = toks[:, 1:]
+
+    if cfg.loss_chunk and hidden.shape[1] % cfg.loss_chunk == 0:
+        nc = hidden.shape[1] // cfg.loss_chunk
+        B = hidden.shape[0]
+        hs = hidden.reshape(B, nc, cfg.loss_chunk, -1).swapaxes(0, 1)
+        ls = labels.reshape(B, nc, cfg.loss_chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_ce(h_c, l_c):
+            lg = lm_logits(params, cfg, ctx, h_c)
+            valid = l_c >= 0
+            safe = jnp.maximum(l_c, 0)
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+            return ((logz - gold) * valid).sum(), valid.sum()
+
+        def body(carry, xs):
+            tot, cnt = carry
+            s, c = chunk_ce(*xs)
+            return (tot + s, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            (hs, ls))
+        ce = tot / jnp.maximum(cnt, 1)
+    else:
+        logits = lm_logits(params, cfg, ctx, hidden)
+        ce = cross_entropy(logits, labels)
+
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,271 @@
+"""Recurrent sequence mixers: selective SSM (Mamba), mLSTM, sLSTM.
+
+Training uses *chunked* recurrences: an outer ``lax.scan`` carries the
+state across fixed-size chunks while the inside of a chunk is computed
+in parallel (associative scan for the SSM, decay-masked quasi-attention
+for mLSTM).  This keeps the transient (B, chunk, dim, state) tensors in
+on-chip memory range instead of materialising (B, S, dim, state).
+
+sLSTM keeps the genuine per-step recurrence of the xLSTM paper (its
+hidden-to-gate feedback is not associative); its state is O(d_model) so
+the sequential scan is memory-light.  Simplifications vs. the papers
+(documented in DESIGN.md): sigmoid input gates instead of stabilised
+exponential gates; hymba's hybrid block averages the two paths after
+separate projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ------------------------------ Mamba ------------------------------------
+
+def mamba_chunk_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (chunk), with initial h0.
+
+    a, b: (B, c, Di, N); h0: (B, Di, N). Returns (h (B,c,Di,N), h_last).
+    """
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+
+    a_cum, b_cum = jax.lax.associative_scan(op, (a, b), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba_mixer(p: dict, x: jax.Array, state: tuple | None,
+                chunk: int = 64, prefix: str = ""):
+    """Selective SSM over (B, S, D). state = (conv_state (B, K-1, Di),
+    ssm_state (B, Di, N)) or None for zero-init training.
+    Returns (y (B, S, D), new_state)."""
+    g = lambda n: p[prefix + n]
+    B, S, D = x.shape
+    conv_w = g("conv_w")
+    K, Di = conv_w.shape
+    N = g("a_log").shape[-1]
+
+    xz = x @ g("w_in")
+    x_in, z = jnp.split(xz, 2, axis=-1)                   # (B, S, Di)
+
+    conv_state = (jnp.zeros((B, K - 1, Di), x_in.dtype)
+                  if state is None else state[0])
+    h0 = (jnp.zeros((B, Di, N), jnp.float32)
+          if state is None else state[1])
+
+    x_pad = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    xf = x_pad.astype(jnp.float32)                        # match decode path
+    conv = sum(xf[:, k:k + S] * g("conv_w").astype(jnp.float32)[k]
+               for k in range(K)) + g("conv_b").astype(jnp.float32)
+    new_conv_state = x_pad[:, S:][:, -(K - 1):] if K > 1 else conv_state
+    xc = _silu(conv)                                      # (B, S, Di) f32
+
+    dt = jax.nn.softplus(
+        xc @ g("w_dt").astype(jnp.float32) + g("b_dt")).astype(jnp.float32)
+    bc = (xc @ g("w_bc").astype(jnp.float32)).astype(jnp.float32)
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)              # (B, S, N)
+    A = -jnp.exp(g("a_log").astype(jnp.float32))          # (Di, N)
+
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        xc_p = jnp.pad(xc.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p, dt_p, b_p, c_p = xc.astype(jnp.float32), dt, b_ssm, c_ssm
+
+    def reshape_chunks(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(reshape_chunks, (xc_p, dt_p, b_p, c_p)))
+
+    def body(h, inp):
+        xc_c, dt_c, b_c, c_c = inp                        # (B, c, ...)
+        a = jnp.exp(dt_c[..., None] * A)                  # (B, c, Di, N)
+        bx = (dt_c * xc_c)[..., None] * b_c[:, :, None, :]
+        h_all, h_last = mamba_chunk_scan(a, bx, h)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        return h_last, y_c
+
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, Di)[:, :S]
+    y = y + xc.astype(jnp.float32) * g("d_skip")
+    y = (y * _silu(z.astype(jnp.float32))) @ g("w_out").astype(jnp.float32)
+    return y.astype(x.dtype), (new_conv_state, h_last)
+
+
+def mamba_decode(p: dict, x: jax.Array, state: tuple, prefix: str = ""):
+    """Single-token step. x: (B, 1, D)."""
+    g = lambda n: p[prefix + n]
+    B = x.shape[0]
+    conv_w = g("conv_w")
+    K, Di = conv_w.shape
+    conv_state, h = state
+
+    xz = x[:, 0] @ g("w_in")
+    x_in, z = jnp.split(xz, 2, axis=-1)                   # (B, Di)
+
+    window = jnp.concatenate([conv_state, x_in[:, None]], axis=1)  # (B,K,Di)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                      conv_w.astype(jnp.float32)) + g("conv_b")
+    new_conv_state = window[:, 1:]
+    xc = _silu(conv)
+
+    dt = jax.nn.softplus(
+        xc @ g("w_dt").astype(jnp.float32) + g("b_dt")).astype(jnp.float32)
+    bc = (xc @ g("w_bc").astype(jnp.float32)).astype(jnp.float32)
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)
+    A = -jnp.exp(g("a_log").astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                        # (B, Di, N)
+    h_new = a * h + (dt * xc.astype(jnp.float32))[..., None] * b_ssm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h_new, c_ssm)
+    y = y + xc.astype(jnp.float32) * g("d_skip")
+    y = (y * _silu(z.astype(jnp.float32))) @ g("w_out").astype(jnp.float32)
+    return y[:, None].astype(x.dtype), (new_conv_state, h_new)
+
+
+# ------------------------------ mLSTM ------------------------------------
+
+def mlstm_mixer(p: dict, x: jax.Array, state: tuple | None,
+                chunk: int = 128):
+    """Chunkwise matrix-LSTM. x: (B, S, D).
+    state = (S_mat (B,H,Dh,Dh), n_vec (B,H,Dh)) or None."""
+    B, S, D = x.shape
+    up = x @ p["w_up"]
+    xi, o_pre = jnp.split(up, 2, axis=-1)                 # (B, S, Di)
+    Di = xi.shape[-1]
+    H = p["wq"].shape[1]
+    Dh = p["wq"].shape[2]
+
+    q = jnp.einsum("bsi,ihd->bshd", xi, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsi,ihd->bshd", xi, p["wk"]).astype(jnp.float32) * Dh ** -0.5
+    v = jnp.einsum("bsi,ihd->bshd", xi, p["wv"]).astype(jnp.float32)
+    if_pre = (xi @ p["w_if"] + p["b_if"]).astype(jnp.float32)  # (B, S, 2H)
+    i_g = jax.nn.sigmoid(if_pre[..., :H])
+    logf = jax.nn.log_sigmoid(if_pre[..., H:])            # (B, S, H)
+
+    S0 = jnp.zeros((B, H, Dh, Dh), jnp.float32) if state is None else state[0]
+    n0 = jnp.zeros((B, H, Dh), jnp.float32) if state is None else state[1]
+
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+
+    def pc(t):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (pc(q), pc(k), pc(v), pc(i_g), pc(logf))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(carry, inp):
+        S_m, n_v = carry
+        q_c, k_c, v_c, i_c, lf_c = inp                    # (B, c, ...)
+        lf_cum = jnp.cumsum(lf_c, axis=1)                 # (B, c, H)
+        decay = jnp.exp(lf_cum)
+        # inter-chunk
+        y_int = jnp.einsum("bchd,bhde->bche", q_c, S_m) * decay[..., None]
+        n_int = jnp.einsum("bchd,bhd->bch", q_c, n_v) * decay
+        # intra-chunk
+        att = jnp.einsum("bchd,bshd->bhcs", q_c, k_c)     # (B, H, c, s)
+        # decay ratio exp(lf_cum[t] - lf_cum[s]) for s <= t:
+        dm = lf_cum.transpose(0, 2, 1)                    # (B, H, c)
+        dmat = jnp.exp(jnp.clip(dm[..., :, None] - dm[..., None, :], -60, 0))
+        w = att * dmat * causal * i_c.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhcs,bshd->bchd", w, v_c)
+        n_intra = jnp.sum(w, axis=-1).transpose(0, 2, 1)  # (B, c, H)
+        num = y_int + y_intra
+        den = jnp.maximum(jnp.abs(n_int + n_intra), 1.0)[..., None]
+        y_c = num / den
+        # state update
+        tot = jnp.exp(lf_cum[:, -1])                      # (B, H)
+        decay_to_end = jnp.exp(jnp.clip(
+            lf_cum[:, -1][:, None] - lf_cum, -60, 0)) * i_c  # (B, c, H)
+        S_new = S_m * tot[..., None, None] + jnp.einsum(
+            "bchd,bche,bch->bhde", k_c, v_c, decay_to_end)
+        n_new = n_v * tot[..., None] + jnp.einsum(
+            "bchd,bch->bhd", k_c, decay_to_end)
+        return (S_new, n_new), y_c
+
+    (S_m, n_v), ys = jax.lax.scan(body, (S0, n0), xs)
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, H * Dh)[:, :S]
+    y = y * jax.nn.sigmoid(o_pre.astype(jnp.float32))
+    y = y @ p["w_down"].astype(jnp.float32)
+    return y.astype(x.dtype), (S_m, n_v)
+
+
+def mlstm_decode(p: dict, x: jax.Array, state: tuple):
+    """Single-token mLSTM step. x: (B, 1, D)."""
+    B = x.shape[0]
+    up = x[:, 0] @ p["w_up"]
+    xi, o_pre = jnp.split(up, 2, axis=-1)
+    H, Dh = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bi,ihd->bhd", xi, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bi,ihd->bhd", xi, p["wk"]).astype(jnp.float32) * Dh ** -0.5
+    v = jnp.einsum("bi,ihd->bhd", xi, p["wv"]).astype(jnp.float32)
+    if_pre = (xi @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(if_pre[..., :H])
+    f_g = jax.nn.sigmoid(if_pre[..., H:])
+    S_m, n_v = state
+    S_new = S_m * f_g[..., None, None] + (i_g[..., None, None]
+                                          * k[..., :, None] * v[..., None, :])
+    n_new = n_v * f_g[..., None] + i_g[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, S_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), 1.0)
+    y = (num / den[..., None]).reshape(B, -1)
+    y = y * jax.nn.sigmoid(o_pre.astype(jnp.float32))
+    y = y @ p["w_down"].astype(jnp.float32)
+    return y[:, None].astype(x.dtype), (S_new, n_new)
+
+
+# ------------------------------ sLSTM ------------------------------------
+
+def slstm_mixer(p: dict, x: jax.Array, state: tuple | None,
+                ctx=None, tp: str = "shard"):
+    """Sequential scalar-LSTM with block-diagonal (per-head) recurrence.
+    x: (B, S, D). state = (h (B,H,Dh), c (B,H,Dh)).
+
+    tp="replicate": gx is all-gathered once per layer and the per-step
+    recurrence runs replicated on every model shard — trading one bulk
+    collective for 98k per-step all-reduces (§Perf xlstm iteration)."""
+    B, S, D = x.shape
+    H, Dh4 = p["w_gates"].shape[1], p["w_gates"].shape[2]
+    Dh = Dh4 // 4
+    gx = jnp.einsum("bsd,dhg->bshg", x, p["w_gates"]) + p["b_gates"]
+    if tp == "replicate" and ctx is not None:
+        from repro.distributed.sharding import shard
+        gx = shard(gx, ctx, "batch", "seq", None, None)  # bulk gather
+
+    h0 = jnp.zeros((B, H, Dh), jnp.float32) if state is None else state[0]
+    c0 = jnp.zeros((B, H, Dh), jnp.float32) if state is None else state[1]
+
+    def body(carry, g_t):
+        h, c = carry
+        pre = g_t.astype(jnp.float32) + jnp.einsum(
+            "bhd,hdg->bhg", h, p["r_gates"].astype(jnp.float32))
+        i, f, z, o = jnp.split(pre, 4, axis=-1)
+        c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        return (h_new, c_new), h_new
+
+    (h, c), hs = jax.lax.scan(body, (h0, c0), gx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, H * Dh)
+    y = y @ p["w_out"].astype(jnp.float32)
+    return y.astype(x.dtype), (h, c)
+
+
+def slstm_decode(p: dict, x: jax.Array, state: tuple):
+    y, st = slstm_mixer(p, x, state)
+    return y, st

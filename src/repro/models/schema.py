@@ -1,0 +1,239 @@
+"""Parameter schema: single source of truth for shapes, logical sharding
+dims and initialisation of every parameter in the zoo.
+
+A schema is a nested dict mirroring the parameter pytree whose leaves are
+:class:`ParamSpec`.  From it we derive (a) initialised parameters,
+(b) PartitionSpecs for pjit, (c) abstract ShapeDtypeStructs for the
+dry-run — guaranteeing the three can never drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingCtx, logical_spec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    dims: tuple                  # logical dim names (len == len(shape))
+    init: str = "normal"         # normal | zeros | ones
+    scale: float = 0.0           # stddev; 0 -> 1/sqrt(fan_in as shape[0] prod)
+
+    def stddev(self) -> float:
+        if self.scale:
+            return self.scale
+        fan_in = self.shape[0] if len(self.shape) == 1 else 1
+        if len(self.shape) >= 2:
+            fan_in = 1
+            for s in self.shape[:-1]:
+                fan_in *= s
+            # for 3-D projections (D,H,K) fan-in is D only
+            if len(self.shape) == 3:
+                fan_in = self.shape[0]
+        return fan_in ** -0.5
+
+
+def _stack(spec: ParamSpec, repeats: int) -> ParamSpec:
+    """Prepend the scanned-layers dim."""
+    return ParamSpec((repeats,) + spec.shape, ("layers",) + spec.dims,
+                     spec.init, spec.scale)
+
+
+# --------------------------- block schemas -------------------------------
+
+def attn_schema(cfg: ModelConfig) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "wq": ParamSpec((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, Hkv, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, Hkv, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, Dh, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, Dh), ("heads", "head_dim"), "zeros")
+        s["bk"] = ParamSpec((Hkv, Dh), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamSpec((Hkv, Dh), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def mlp_schema(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    s = {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "w_up": ParamSpec((D, F), ("embed", "mlp")),
+        "w_down": ParamSpec((F, D), ("mlp", "embed")),
+    }
+    if cfg.mlp_type == "swiglu":
+        s["w_gate"] = ParamSpec((D, F), ("embed", "mlp"))
+    return s
+
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    D, E = cfg.d_model, cfg.n_experts
+    Fe = cfg.moe_d_ff or cfg.d_ff
+    s = {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "router": ParamSpec((D, E), ("embed", "experts")),
+        "we_gate": ParamSpec((E, D, Fe), ("experts", "embed", "mlp")),
+        "we_up": ParamSpec((E, D, Fe), ("experts", "embed", "mlp")),
+        "we_down": ParamSpec((E, Fe, D), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        F = cfg.d_ff  # fused shared-expert width
+        s["ws_gate"] = ParamSpec((D, F), ("embed", "mlp"))
+        s["ws_up"] = ParamSpec((D, F), ("embed", "mlp"))
+        s["ws_down"] = ParamSpec((F, D), ("mlp", "embed"))
+        s["shared_gate"] = ParamSpec((D, 1), ("embed", None))
+    return s
+
+
+def mamba_schema(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Di = D * cfg.ssm_expand
+    N = cfg.ssm_state
+    return {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "w_in": ParamSpec((D, 2 * Di), ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, Di), ("conv", "inner"),
+                            "normal", 0.5),
+        "conv_b": ParamSpec((Di,), ("inner",), "zeros"),
+        "w_dt": ParamSpec((Di, Di), ("inner", None), "normal", 1e-3),
+        "b_dt": ParamSpec((Di,), ("inner",), "ones"),
+        "w_bc": ParamSpec((Di, 2 * N), ("inner", "state")),
+        "a_log": ParamSpec((Di, N), ("inner", "state"), "zeros"),
+        "d_skip": ParamSpec((Di,), ("inner",), "ones"),
+        "w_out": ParamSpec((Di, D), ("inner", "embed")),
+    }
+
+
+def mlstm_schema(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Di = D * cfg.ssm_expand
+    H = cfg.n_heads
+    Dh = Di // H
+    return {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "w_up": ParamSpec((D, 2 * Di), ("embed", "inner")),
+        "wq": ParamSpec((Di, H, Dh), ("inner", "heads", "head_dim")),
+        "wk": ParamSpec((Di, H, Dh), ("inner", "heads", "head_dim")),
+        "wv": ParamSpec((Di, H, Dh), ("inner", "heads", "head_dim")),
+        "w_if": ParamSpec((Di, 2 * H), ("inner", None), "normal", 0.01),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros"),
+        "w_down": ParamSpec((Di, D), ("inner", "embed")),
+    }
+
+
+def slstm_schema(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    Dh = D // H
+    if cfg.slstm_tp == "replicate":
+        # Input projection stays TP-sharded (computed once, gx
+        # all-gathered once per layer in the mixer); the small recurrence
+        # itself is replicated across the model axis — no per-step
+        # collectives.
+        gd = ("embed", "heads", "head_dim")
+        rd, bd = (None, None, None), (None, None)
+        od = ("embed", "mlp")
+    else:
+        gd = ("embed", "heads", "head_dim")
+        rd = ("heads", "head_dim", None)
+        bd = ("heads", "head_dim")
+        od = ("embed", "embed2")
+    return {
+        "norm": ParamSpec((D,), (None,), "ones"),
+        "w_gates": ParamSpec((D, H, 4 * Dh), gd),
+        "r_gates": ParamSpec((H, Dh, 4 * Dh), rd, "normal", 0.02),
+        "b_gates": ParamSpec((H, 4 * Dh), bd, "zeros"),
+        "w_out": ParamSpec((D, D), od),
+    }
+
+
+def hybrid_schema(cfg: ModelConfig) -> dict:
+    """Hymba-style parallel attention + mamba heads sharing one block."""
+    s = {f"attn_{k}": v for k, v in attn_schema(cfg).items() if k != "norm"}
+    s.update({f"ssm_{k}": v for k, v in mamba_schema(cfg).items()
+              if k != "norm"})
+    s["norm"] = ParamSpec((cfg.d_model,), (None,), "ones")
+    return s
+
+
+_BLOCK_SCHEMAS = {
+    "attn": attn_schema,
+    "mamba": mamba_schema,
+    "mlstm": mlstm_schema,
+    "slstm": slstm_schema,
+    "hybrid": hybrid_schema,
+}
+
+
+def block_schema(cfg: ModelConfig, block_type: str) -> dict:
+    s = dict(_BLOCK_SCHEMAS[block_type](cfg))
+    # FFN attachment: attn/hybrid blocks carry an MLP or MoE; recurrent
+    # xLSTM blocks are self-contained (d_ff == 0).
+    if block_type in ("attn", "hybrid") and cfg.mlp_type != "none":
+        ffn = moe_schema(cfg) if cfg.n_experts else mlp_schema(cfg)
+        s.update({f"ffn_{k}": v for k, v in ffn.items()})
+    return s
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    """Full parameter schema. Blocks are stacked over pattern repeats."""
+    V, D = cfg.padded_vocab, cfg.d_model
+    reps = cfg.pattern_repeats
+    schema: dict = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), "normal", 0.02),
+        "final_norm": ParamSpec((D,), (None,), "ones"),
+        "lm_head": ParamSpec((D, V), ("embed", "vocab")),
+    }
+    for i, bt in enumerate(cfg.block_pattern):
+        slot = {k: _stack(v, reps) for k, v in block_schema(cfg, bt).items()}
+        schema[f"slot{i}_{bt}"] = slot
+    return schema
+
+
+# ------------------------ schema consumers -------------------------------
+
+def materialize(cfg: ModelConfig, key: jax.Array, dtype=None):
+    """Initialised parameter pytree matching :func:`model_schema`."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    schema = model_schema(cfg)
+
+    def is_spec(x):
+        return isinstance(x, ParamSpec)
+
+    leaves = jax.tree_util.tree_leaves_with_path(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    key_of = {jax.tree_util.keystr(p): k for (p, _), k in zip(leaves, keys)}
+
+    def build(path, spec: ParamSpec):
+        k = key_of[jax.tree_util.keystr(path)]
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * spec.stddev()).astype(dtype)
+
+    return jax.tree_util.tree_map_with_path(build, schema, is_leaf=is_spec)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        model_schema(cfg), is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def partition_specs(cfg: ModelConfig, ctx: ShardingCtx):
+    """PartitionSpec pytree matching the parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: logical_spec(s.shape, s.dims, ctx.mesh, ctx.rules),
+        model_schema(cfg), is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,79 @@
+"""AdamW with f32 master weights and fully-sharded state.
+
+State tensors (m, v, master) inherit the parameter PartitionSpecs, which
+under the default rules are 2-D sharded (FSDP x TP) — ZeRO-style: every
+chip holds 1/(data*model) of the optimizer state.  Decoupled weight
+decay, global-norm clipping, bf16 params with f32 masters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    master: dict          # f32 master copy of params
+    ef_error: dict | None  # error-feedback residual (grad compression)
+
+
+def adamw_init(params, use_error_feedback: bool = False) -> AdamWState:
+    # copy=True: when params are already f32, astype would alias the
+    # param buffer and break donation (same buffer donated twice).
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    ef = zeros(params) if use_error_feedback else None
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params),
+                      f32(params), ef)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, beta1=0.9,
+                 beta2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    tmap = jax.tree_util.tree_map
+
+    grads = tmap(lambda g: g.astype(jnp.float32) * clip, grads)
+    m = tmap(lambda mu, g: beta1 * mu + (1 - beta1) * g, state.m, grads)
+    v = tmap(lambda nu, g: beta2 * nu + (1 - beta2) * g * g, state.v, grads)
+    bc1 = 1 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1 - beta2 ** step.astype(jnp.float32)
+
+    def upd(master, mu, nu):
+        update = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        return master - lr * (update + weight_decay * master)
+
+    master = tmap(upd, state.master, m, v)
+    new_params = tmap(lambda w, ref: w.astype(ref.dtype), master, params)
+    new_state = AdamWState(step, m, v, master, state.ef_error)
+    return new_params, new_state, {"grad_norm": gnorm, "clip": clip}
+
+
+def optimizer_partition_specs(param_specs):
+    """State PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(
+        step=P(), m=param_specs, v=param_specs, master=param_specs,
+        ef_error=None)
+
+
+def abstract_opt_state(abstract_params, use_error_feedback: bool = False):
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    ef = f32(abstract_params) if use_error_feedback else None
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      f32(abstract_params), f32(abstract_params),
+                      f32(abstract_params), ef)

@@ -1,0 +1,84 @@
+"""Serving: prefill + batched autoregressive decode over ring-buffer
+caches, with greedy/temperature sampling.
+
+``make_prefill`` / ``make_decode_step`` are the two lowerables the
+inference dry-run cells compile (prefill_32k lowers prefill; decode_32k
+and long_500k lower one decode step against a seq_len-deep cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models.model import apply_model, init_decode_state
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperature: float = 0.0) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
+    """(params, state, tokens|embeds, key) -> (first_token, state)."""
+
+    def prefill(params, state, inputs, key):
+        kw = {"embeds": inputs} if cfg.frontend else {"tokens": inputs}
+        logits, state, _ = apply_model(params, cfg, ctx, state=state,
+                                       decode=False, **kw)
+        tok = sample_tokens(logits[:, -1], key, temperature)
+        return tok, state
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardingCtx,
+                     temperature: float = 0.0):
+    """(params, state, token (B,), key) -> (next_token, state)."""
+
+    def decode_step(params, state, token, key):
+        logits, state, _ = apply_model(params, cfg, ctx,
+                                       tokens=token[:, None], state=state,
+                                       decode=True)
+        tok = sample_tokens(logits[:, 0], key, temperature)
+        return tok, state
+
+    return decode_step
+
+
+class ServeEngine:
+    """Minimal batched engine: prefill a batch of prompts, decode N steps."""
+
+    def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx | None = None,
+                 max_seq: int = 2048, temperature: float = 0.0):
+        self.cfg = cfg
+        self.ctx = ctx or ShardingCtx()
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(make_prefill(cfg, self.ctx, temperature))
+        self._decode = jax.jit(
+            make_decode_step(cfg, self.ctx, temperature),
+            donate_argnums=(1,))
+
+    def generate(self, prompts: jax.Array, n_tokens: int,
+                 seed: int = 0) -> jax.Array:
+        """prompts: (B, S) tokens (or (B, S, D) embeds for stub frontends).
+        Returns (B, n_tokens) generated ids."""
+        B = prompts.shape[0]
+        state = init_decode_state(self.cfg, B, self.max_seq)
+        key = jax.random.PRNGKey(seed)
+        key, k0 = jax.random.split(key)
+        tok, state = self._prefill(self.params, state, prompts, k0)
+        out = [tok]
+        for _ in range(n_tokens - 1):
+            key, k = jax.random.split(key)
+            tok, state = self._decode(self.params, state, tok, k)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,109 @@
+"""The jitted training step: loss -> grads -> AdamW, with optional
+gradient-accumulation microbatching and cross-pod int8 error-feedback
+gradient compression (shard_map over the "pod" axis, other axes left to
+SPMD auto partitioning).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.compression import psum_compressed
+from repro.distributed.sharding import ShardingCtx
+from repro.models.model import train_loss
+from repro.optim.adamw import AdamWState, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def _split_micro(batch: dict, n: int):
+    def r(x):
+        B = x.shape[0]
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree_util.tree_map(r, batch)
+
+
+def _grads_of(cfg: ModelConfig, ctx: ShardingCtx, tcfg: TrainConfig):
+    """(params, batch) -> (grads, metrics), with microbatch accumulation."""
+
+    def loss_fn(params, batch):
+        return train_loss(params, cfg, ctx, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, dict(metrics, loss=loss)
+
+    if tcfg.microbatches <= 1:
+        return single
+
+    def accumulated(params, batch):
+        micro = _split_micro(batch, tcfg.microbatches)
+
+        def body(carry, mb):
+            g_acc, l_acc = carry
+            (loss, metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, loss_sum), ms = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / tcfg.microbatches
+        g = jax.tree_util.tree_map(lambda x: x * inv, g)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        return g, dict(metrics, loss=loss_sum * inv)
+
+    return accumulated
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardingCtx):
+    """Build the (params, opt_state, batch) -> (params, opt_state, metrics)
+    step function (jit it with the shardings from launch/train.py)."""
+    grads_of = _grads_of(cfg, ctx, tcfg)
+
+    use_compression = (tcfg.grad_compression == "int8_ef" and ctx.mesh
+                       is not None and "pod" in ctx.mesh.axis_names)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if use_compression:
+            from jax.sharding import PartitionSpec as P
+
+            def per_pod(params_l, ef_l, batch_l):
+                g, metrics = grads_of(params_l, batch_l)
+                # mean over pods with int8 error-feedback payload
+                g, new_ef = psum_compressed(g, ef_l, "pod")
+                npods = jax.lax.psum(jnp.ones((), jnp.float32), "pod")
+                g = jax.tree_util.tree_map(lambda x: x / npods, g)
+                metrics = jax.lax.pmean(metrics, "pod")
+                return g, new_ef, metrics
+
+            rep = jax.tree_util.tree_map(lambda _: P(), params)
+            ef_spec = jax.tree_util.tree_map(lambda _: P(), opt_state.ef_error)
+            bspec = jax.tree_util.tree_map(lambda _: P("pod"), batch)
+            mspec = {"loss": P(), "ce": P(), "aux": P()}
+            grads, new_ef, metrics = jax.shard_map(
+                per_pod, mesh=ctx.mesh,
+                in_specs=(rep, ef_spec, bspec),
+                out_specs=(rep, ef_spec, mspec),
+                axis_names=frozenset({"pod"}),  # other axes stay auto/SPMD
+                check_vma=False,
+            )(params, opt_state.ef_error, batch)
+            opt_state = opt_state._replace(ef_error=new_ef)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        lr = cosine_schedule(opt_state.step, peak_lr=tcfg.learning_rate,
+                             warmup_steps=tcfg.warmup_steps,
+                             total_steps=tcfg.total_steps)
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr=lr, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip)
+        return new_params, new_opt, dict(metrics, **om, lr=lr)
+
+    return train_step

@@ -1,0 +1,132 @@
+"""Trainer: checkpointed, restartable training loop with straggler
+watchdog and deterministic data.
+
+Fault-tolerance model (single-controller JAX):
+  * the data stream is a pure function of (seed, step) -> any restart
+    from checkpoint replays the identical token stream;
+  * checkpoints (params + full optimizer state + step) are atomic and
+    mesh-agnostic -> restart may use a different mesh/device count
+    (elastic) — restore resbards on load;
+  * ``run()`` survives injected step failures: on exception it reloads
+    the latest checkpoint and continues (bounded retries), which is the
+    single-process analogue of a coordinator rescheduling a failed pod;
+  * the watchdog tracks a step-time EMA and logs outliers (straggler
+    surface; on real multi-host deployments this feeds the preemption/
+    re-slice decision).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, load_checkpoint
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models.model import init_params
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_train_step
+
+
+class Watchdog:
+    """Step-time EMA; flags steps slower than ``threshold`` x EMA."""
+
+    def __init__(self, threshold: float = 2.0, decay: float = 0.9):
+        self.ema = None
+        self.threshold = threshold
+        self.decay = decay
+        self.stragglers: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        flagged = self.ema is not None and dt > self.threshold * self.ema
+        if flagged:
+            self.stragglers.append((step, dt))
+        self.ema = dt if self.ema is None else \
+            self.decay * self.ema + (1 - self.decay) * dt
+        return flagged
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, dataset,
+                 ctx: ShardingCtx | None = None, donate: bool = True):
+        self.cfg, self.tcfg, self.dataset = cfg, tcfg, dataset
+        self.ctx = ctx or ShardingCtx()
+        self.watchdog = Watchdog()
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      async_save=tcfg.async_checkpoint)
+        step_fn = make_train_step(cfg, tcfg, self.ctx)
+        self._step = jax.jit(step_fn,
+                             donate_argnums=(0, 1) if donate else ())
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        self.params = init_params(self.cfg, key)
+        self.opt_state = adamw_init(
+            self.params,
+            use_error_feedback=self.tcfg.grad_compression == "int8_ef")
+        self.step = 0
+
+    def resume_or_init(self):
+        last = latest_step(self.tcfg.checkpoint_dir)
+        if last is None:
+            self.init_state()
+            return False
+        self.init_state()  # build structure, then overwrite from disk
+        state = {"params": self.params, "opt": self.opt_state}
+        restored = load_checkpoint(self.tcfg.checkpoint_dir, last, state)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step = last
+        return True
+
+    def save(self):
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state})
+
+    # ------------------------------------------------------------------
+    def _device_batch(self, step: int) -> dict:
+        toks = self.dataset.batch_at(step)
+        return {"tokens": jax.numpy.asarray(toks)}
+
+    def run(self, n_steps: int | None = None, fail_at=None,
+            max_retries: int = 2):
+        """Train for n_steps (default tcfg.total_steps). ``fail_at`` is a
+        test hook: a set of step numbers at which a simulated failure is
+        raised *after* the forward/backward ran (pre-checkpoint)."""
+        n_steps = n_steps or self.tcfg.total_steps
+        retries = 0
+        while self.step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                batch = self._device_batch(self.step)
+                if fail_at and self.step in fail_at:
+                    fail_at = set(fail_at) - {self.step}
+                    raise RuntimeError(f"injected failure @ {self.step}")
+                self.params, self.opt_state, metrics = self._step(
+                    self.params, self.opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(self.step, dt)
+                self.step += 1
+                if self.step % self.tcfg.log_every == 0 or \
+                        self.step == n_steps:
+                    m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                    m["step"], m["dt"] = self.step, dt
+                    self.metrics_log.append(m)
+                if self.step % self.tcfg.checkpoint_every == 0:
+                    self.save()
+            except Exception:
+                retries += 1
+                if retries > max_retries:
+                    raise
+                # recovery: reload latest checkpoint (or reinit) and go on
+                self.ckpt.wait()
+                if not self.resume_or_init():
+                    self.init_state()
+        self.ckpt.wait()
+        return self.metrics_log

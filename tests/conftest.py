@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the single real CPU device (the 512-device forcing is the
+# dry-run's job only — see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

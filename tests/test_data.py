@@ -1,0 +1,49 @@
+"""Data pipeline determinism (the fault-tolerance keystone)."""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.data import MemmapTokenDataset, SyntheticTokenDataset
+
+
+def test_synthetic_deterministic_in_step():
+    a = SyntheticTokenDataset(1000, 64, 8, seed=7)
+    b = SyntheticTokenDataset(1000, 64, 8, seed=7)
+    np.testing.assert_array_equal(a.batch_at(5), b.batch_at(5))
+    assert not np.array_equal(a.batch_at(5), a.batch_at(6))
+
+
+def test_synthetic_seed_changes_stream():
+    a = SyntheticTokenDataset(1000, 64, 8, seed=1)
+    b = SyntheticTokenDataset(1000, 64, 8, seed=2)
+    assert not np.array_equal(a.batch_at(0), b.batch_at(0))
+
+
+def test_synthetic_shapes_and_range():
+    ds = SyntheticTokenDataset(517, 32, 4)
+    x = ds.batch_at(0)
+    assert x.shape == (4, 33) and x.dtype == np.int32
+    assert x.min() >= 0 and x.max() < 517
+
+
+def test_synthetic_is_learnable():
+    """75% of transitions are a deterministic function of the previous
+    two tokens — a competent LM must beat uniform entropy."""
+    ds = SyntheticTokenDataset(256, 128, 4, seed=0)
+    x = ds.batch_at(0).astype(np.int64)
+    det = ((x[:, :-1] * 2654435761 + np.roll(x, 1, 1)[:, :-1] * 40503)
+           % 256) == x[:, 1:]
+    assert det.mean() > 0.5
+
+
+def test_memmap_dataset():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "toks.bin")
+        arr = (np.arange(10_000) % 900).astype(np.uint16)
+        arr.tofile(path)
+        ds = MemmapTokenDataset(path, 1000, 64, 4, seed=0)
+        x = ds.batch_at(3)
+        assert x.shape == (4, 65)
+        np.testing.assert_array_equal(x, ds.batch_at(3))
+        assert x.max() < 1000

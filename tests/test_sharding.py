@@ -1,0 +1,47 @@
+"""Logical-axis rule resolution: divisibility fallback, axis reuse."""
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import RULE_SETS, logical_spec
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+RULES = RULE_SETS["default"]
+
+
+def test_basic_2d_weight():
+    assert logical_spec((4096, 14336), ("embed", "mlp"), MESH, RULES) \
+        == P("data", "model")
+
+
+def test_divisibility_fallback_heads():
+    # 56 heads don't divide 16 -> replicate; head_dim 128 picks model up
+    assert logical_spec((7168, 56, 128), ("embed", "heads", "head_dim"),
+                        MESH, RULES) == P("data", None, "model")
+
+
+def test_axis_used_once():
+    # both dims want "model": first wins, second replicates
+    assert logical_spec((4096, 4096), ("mlp", "inner"), MESH, RULES) \
+        == P("model")
+
+
+def test_batch_prefers_pod_data():
+    assert logical_spec((256, 4097), ("batch", "seq"), POD, RULES) \
+        == P(("pod", "data"))
+    # batch=8 not divisible by 32 -> falls to data(16)? 8%16!=0 -> None
+    assert logical_spec((8, 4097), ("batch", "seq"), POD, RULES) == P()
+
+
+def test_odd_vocab_replicates():
+    assert logical_spec((32001, 1600), ("vocab", "embed"), MESH, RULES) \
+        == P(None, "data")
+
+
+def test_fsdp_pods_ruleset():
+    rules = RULE_SETS["fsdp_pods"]
+    assert logical_spec((8192, 28672), ("embed", "mlp"), POD, rules) \
+        == P(("pod", "data"), "model")
+
+
+def test_no_mesh_is_noop():
+    assert logical_spec((4, 4), ("embed", "mlp"), None, RULES) == P()

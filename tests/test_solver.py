@@ -1,0 +1,90 @@
+"""Circuit-level solver: CG vs dense oracle, physics sanity, and the
+Manhattan Hypothesis (Fig-2/Fig-4 analogues at test scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import manhattan
+from repro.core.tiling import CrossbarSpec
+from repro.crossbar.solver import column_currents_dense, measured_nf
+
+SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
+
+
+def rand_mask(key, j, k, p=0.2):
+    return (jax.random.uniform(key, (j, k)) < p).astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("shape", [(8, 8), (12, 6), (16, 16)])
+def test_cg_matches_dense_oracle(seed, shape):
+    J, K = shape
+    m = rand_mask(jax.random.PRNGKey(seed), J, K)
+    res = measured_nf(jnp.asarray(m), SPEC)
+    dense = column_currents_dense(np.asarray(m),
+                                  np.full(J, SPEC.v_read), SPEC)
+    np.testing.assert_allclose(np.asarray(res.currents), dense, rtol=1e-7)
+    assert float(res.residual) < 1e-9
+
+
+def test_zero_wire_resistance_limit():
+    """With r -> 0 the measured currents approach the ideal MVM."""
+    m = rand_mask(jax.random.PRNGKey(3), 8, 8, 0.3)
+    spec = CrossbarSpec(rows=8, cols=8, n_bits=8, r=1e-6)
+    res = measured_nf(jnp.asarray(m), spec)
+    np.testing.assert_allclose(np.asarray(res.currents),
+                               np.asarray(res.ideal), rtol=1e-5)
+    assert float(res.nf_total) < 1e-4
+
+
+def test_nf_grows_with_distance():
+    """A single active cell farther from the I/O corner has larger NF."""
+    nfs = []
+    for (j, k) in [(0, 0), (4, 4), (7, 7)]:
+        m = np.zeros((8, 8), np.float32)
+        m[j, k] = 1
+        res = measured_nf(jnp.asarray(m), SPEC)
+        nfs.append(float(res.nf_total))
+    assert nfs[0] < nfs[1] < nfs[2]
+
+
+def test_antidiagonal_symmetry_circuit():
+    """Fig-2: mirror-related configurations measure (nearly) equal NF."""
+    m = rand_mask(jax.random.PRNGKey(5), 12, 12, 0.25)
+    r1 = measured_nf(jnp.asarray(m), SPEC)
+    r2 = measured_nf(jnp.asarray(m.T), SPEC)
+    a, b = float(r1.nf_total), float(r2.nf_total)
+    assert abs(a - b) / max(a, b) < 0.05
+
+
+def test_manhattan_hypothesis_correlation():
+    """Measured NF correlates linearly with the Eq-16 prediction across
+    random tiles of fixed sparsity (test-scale Fig 4)."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 24)
+    masks = np.stack([rand_mask(k, 16, 16, 0.2) for k in keys])
+    res = measured_nf(jnp.asarray(masks), SPEC)
+    measured = np.asarray(res.nf_total)
+    predicted = np.asarray(
+        manhattan.nonideality_factor(jnp.asarray(masks), SPEC.r, SPEC.r_on))
+    r = np.corrcoef(measured, predicted)[0, 1]
+    assert r > 0.8, f"Manhattan Hypothesis correlation too weak: r={r}"
+
+
+def test_mdm_reduces_measured_nf():
+    """End-to-end: the MDM permutation lowers *circuit-measured* NF, not
+    just the analytical score."""
+    from repro.core.bitslice import bitslice
+    from repro.core.mdm import placed_masks, plan_from_bits
+
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (16, 2)) * 0.05
+    spec = CrossbarSpec(rows=16, cols=16, n_bits=8)
+    sliced = bitslice(w, 8)
+    base = plan_from_bits(sliced.bits, sliced.scale, spec, "baseline")
+    mdm = plan_from_bits(sliced.bits, sliced.scale, spec, "mdm")
+    m_base = placed_masks(sliced.bits, base, spec)[0, 0]
+    m_mdm = placed_masks(sliced.bits, mdm, spec)[0, 0]
+    nf_base = float(measured_nf(m_base, spec).nf_total)
+    nf_mdm = float(measured_nf(m_mdm, spec).nf_total)
+    assert nf_mdm < nf_base
