@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import TrainConfig
-from repro.core.noise import tree_noisy_weights
+from repro.core.noise import calibrate_eta, tree_noisy_weights
 from repro.core.tiling import CrossbarSpec
 from repro.data import SyntheticTokenDataset
 from repro.distributed.sharding import ShardingCtx
@@ -58,11 +58,16 @@ def run(train_steps: int = 250, etas=(1e-2, 3e-2), verbose: bool = True,
         return sum(losses) / len(losses)
 
     clean = float(eval_ce(tr.params))
+    # Circuit-grounded eta at the benchmark's crossbar spec: one fused
+    # batched solve (repro.crossbar.batched) instead of the paper's SPICE
+    # sweep; reported alongside the sweep so the eta grid is anchored.
+    eta_circuit = calibrate_eta(spec, n_tiles=8)
     out = {"train_final_loss": log[-1]["loss"], "clean_ce": clean,
-           "noisy": {}}
+           "eta_circuit_calibrated": eta_circuit, "noisy": {}}
     if verbose:
         print(f"  trained {train_steps} steps: loss {log[-1]['loss']:.3f}; "
-              f"clean eval CE {clean:.4f}")
+              f"clean eval CE {clean:.4f}; "
+              f"circuit-calibrated eta {eta_circuit:.2e}")
     for eta in etas:
         row = {}
         for mode in MODES:

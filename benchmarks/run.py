@@ -22,6 +22,7 @@ from benchmarks import (  # noqa: E402
     nf_reduction,
     planning_cost,
     roofline_table,
+    solver_throughput,
     theorem1,
 )
 
@@ -47,6 +48,9 @@ def main() -> None:
             train_steps=60 if q else 250),
         # paper §IV "lightweight" claim
         "mdm_planning_cost": lambda: planning_cost.run(),
+        # §Perf: batched circuit solver vs seed lax.map path
+        "solver_throughput": lambda: solver_throughput.run(
+            n_tiles=64, rows=32 if q else 64, cols=32 if q else 64),
         # §Perf: fused CIM path vs materialised bit-planes
         "cim_traffic": lambda: cim_traffic.run(),
         # §Dry-run / §Roofline summary
@@ -101,6 +105,9 @@ def _derive(name: str, res: dict) -> str:
             return f"cells_ok={res['ok']}/{res['cells']}"
         if name == "mdm_planning_cost":
             return f"plan_4096x4096={res['plan_4096x4096']['seconds']:.3f}s"
+        if name == "solver_throughput":
+            return (f"speedup=x{res['speedup']:.1f};"
+                    f"{res['batched_tiles_per_s']:.0f}tiles/s")
         if name == "cim_traffic":
             return (f"kernel_traffic_reduction=x{res['kernel_ratio']:.1f};"
                     f"xla=x{res['xla_ratio']:.2f}")

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Full (nightly) test profile: includes the @slow solver-oracle shapes
+# and full-batch equivalence sweeps that the tier-1 default
+# (`pytest.ini` addopts = -m "not slow") skips.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -m "slow or not slow" "$@"

@@ -1,0 +1,76 @@
+"""Version-compatibility shims for the JAX APIs this repo depends on.
+
+Two JAX API moves bit this codebase (both are handled here so call sites
+stay version-agnostic):
+
+* ``jax.enable_x64`` — removed as a public context manager; the
+  supported spelling is ``jax.experimental.enable_x64()`` (a
+  config-scoped context manager that affects *tracing*, so wrap the
+  jit'd call site, not the kernel body).  Use :func:`enable_x64`.
+* ``jax.sharding.AbstractMesh`` — since JAX 0.4.35 the constructor
+  takes a single ``shape_tuple`` of ``(name, size)`` pairs instead of
+  the older ``(axis_sizes, axis_names)`` pair of tuples.  Use
+  :func:`make_abstract_mesh` with the old-style arguments.
+* ``jax.shard_map`` — newer JAX exposes it at top level with a
+  ``check_vma`` kwarg; 0.4.x has ``jax.experimental.shard_map`` with
+  ``check_rep``.  Use :func:`shard_map` (``check_vma`` spelling).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, ContextManager, Sequence
+
+import jax
+
+
+def enable_x64(enabled: bool = True) -> ContextManager:
+    """Config-scoped float64 enablement across JAX versions.
+
+    Prefer wrapping the *outermost* (trace-time) call: inside an already
+    traced jit the dtypes are frozen and the flag has no effect.
+    """
+    try:  # JAX >= 0.4.x: the supported public location
+        from jax.experimental import enable_x64 as _enable_x64
+        return _enable_x64(enabled)
+    except ImportError:  # pragma: no cover - very old JAX
+        return jax.enable_x64(enabled)  # type: ignore[attr-defined]
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]):
+    """Build an ``AbstractMesh`` from old-style (sizes, names) arguments.
+
+    JAX >= 0.4.35 wants ``AbstractMesh((("data", 16), ("model", 16)))``;
+    earlier releases wanted ``AbstractMesh((16, 16), ("data", "model"))``.
+    """
+    from jax.sharding import AbstractMesh
+
+    if len(axis_sizes) != len(axis_names):
+        raise ValueError(
+            f"axis_sizes {tuple(axis_sizes)} and axis_names "
+            f"{tuple(axis_names)} must have equal length")
+    shape_tuple = tuple(zip(axis_names, axis_sizes))
+    try:
+        return AbstractMesh(shape_tuple)
+    except TypeError:  # pragma: no cover - pre-0.4.35 signature
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True,
+              axis_names: frozenset | None = None) -> Callable:
+    """``jax.shard_map`` across versions, with the new-style arguments.
+
+    ``check_vma`` maps onto 0.4.x's ``check_rep``; ``axis_names`` (the
+    set of *manual* mesh axes in the new API) maps onto 0.4.x's ``auto``
+    (its complement: the mesh axes left automatic).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma, **kw)

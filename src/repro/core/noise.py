@@ -91,19 +91,21 @@ def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
 
     Least-squares: match the Eq-17 predicted per-tile current deficit,
     sum_cells eta * d(j,k), to the circuit-measured |sum di| / i_cell on
-    random tiles of the target sparsity.
+    random tiles of the target sparsity.  All tiles are solved in one
+    fused call to the batched engine (``repro.crossbar.batched``), so
+    calibration cost is one PCG solve, not ``n_tiles`` of them.
     """
     import jax as _jax
     import numpy as _np
 
     from repro.core import manhattan
-    from repro.crossbar.solver import measured_nf
+    from repro.crossbar.batched import measured_nf_batched
 
     key = key if key is not None else _jax.random.PRNGKey(0)
     masks = (_jax.random.uniform(
         key, (n_tiles, spec.rows, spec.cols)) < (1 - sparsity)
     ).astype(jnp.float32)
-    res = measured_nf(masks, spec)
+    res = measured_nf_batched(masks, spec)
     # per-cell-normalised measured deficit: |sum di| / (g_on * v_read)
     i_cell = spec.v_read / spec.r_on
     measured = _np.abs(_np.asarray(res.currents - res.ideal)).sum(-1) / i_cell

@@ -1,7 +1,13 @@
+from repro.crossbar.batched import (  # noqa: F401
+    BatchedSolveResult,
+    measured_nf_batched,
+    solve_crossbar_batched,
+)
 from repro.crossbar.solver import (  # noqa: F401
     SolveResult,
     column_currents_dense,
     ideal_currents,
     measured_nf,
+    measured_nf_sequential,
     solve_crossbar,
 )

@@ -1,0 +1,206 @@
+"""Batched crossbar circuit-solver engine.
+
+The seed solver (:mod:`repro.crossbar.solver`) solves one tile per CG
+invocation and walks batches with ``jax.lax.map`` — correct, but the
+whole (Ti, Tn) tile grid of a layer pays one sequential CG per tile.
+This module solves the *entire batch in one jitted call*:
+
+* the preconditioned-CG state is stacked along a leading tile axis
+  ``(T, 2, J, K)`` and every stencil matvec / axpy runs across all
+  tiles at once (one fused XLA program instead of T dispatches);
+* the preconditioner is a **line (tridiagonal) preconditioner**: the
+  nodal matrix is two families of wire chains — wordline chains along
+  ``k`` and bitline chains along ``j`` — coupled only through the
+  memristor conductances, and ``g/cw ~ r/R_on ~ 1e-5`` makes that
+  coupling weak.  Solving the per-chain tridiagonal systems exactly
+  (batched ``jax.lax.linalg.tridiagonal_solve`` over T*J + T*K chains)
+  leaves ``M^-1 A ~= I + O(g/cw)``, so CG converges in a handful of
+  iterations where the seed's Jacobi preconditioner needs hundreds;
+* convergence is tracked **per tile**: a boolean ``done`` mask freezes a
+  tile's iterates (its step sizes are zeroed) the moment its relative
+  residual passes ``tol``, while the shared iteration loop keeps running
+  the stragglers;
+* the shared ``lax.while_loop`` exits early as soon as *all* tiles have
+  converged, so a batch is never slower than its hardest member;
+* float64 is obtained with the config-scoped
+  :func:`repro.compat.enable_x64` at trace time (the old
+  ``jax.enable_x64`` context manager no longer exists in JAX >= 0.4.x).
+
+The single-tile Jacobi-CG path in :mod:`repro.crossbar.solver` is kept
+as the oracle; ``tests/test_solver.py`` pins this engine against both
+that path and the dense nodal solve.  Throughput is tracked by
+``benchmarks/solver_throughput.py`` (the acceptance bar is >= 10x over
+the seed ``lax.map`` path on a 64-tile batch).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import enable_x64
+from repro.core.tiling import CrossbarSpec
+from repro.crossbar.solver import _jacobi_diag, _stencil_matvec
+
+
+class BatchedSolveResult(NamedTuple):
+    """Per-tile solve results, leading axes = tile batch.
+
+    Identical field layout to :class:`repro.crossbar.solver.SolveResult`
+    (so consumers can treat the two interchangeably) plus the shared
+    iteration count the early-exit loop actually ran.
+    """
+
+    currents: jax.Array    # (..., K) actual column currents under PR
+    ideal: jax.Array       # (..., K) ideal currents (r = 0)
+    nf_cols: jax.Array     # (..., K) per-column |di/i0|
+    nf_total: jax.Array    # (...,)  aggregate |sum di| / sum i0
+    residual: jax.Array    # (...,)  final per-tile relative CG residual
+    iterations: jax.Array  # ()      shared CG iterations until all done
+
+
+# The stencil physics lives once, in the oracle (solver.py); the batched
+# matvec is its vmap over the leading tile axis: g (T,J,K), x (T,2,J,K).
+_stencil_matvec_batched = jax.vmap(_stencil_matvec, in_axes=(0, None, 0))
+_jacobi_diag_batched = jax.vmap(_jacobi_diag, in_axes=(0, None))
+
+
+def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-tile inner product over the (2, J, K) node axes."""
+    return jnp.sum(a * b, axis=(1, 2, 3))
+
+
+def _line_preconditioner(g: jax.Array, cw: jax.Array):
+    """Exact per-chain solver for the block-diagonal part of A.
+
+    M = blockdiag(Dw + diag(g), Db + diag(g)) where Dw couples each
+    wordline chain along k and Db each bitline chain along j; both are
+    SPD tridiagonal, so M is a valid SPD preconditioner and captures
+    everything except the weak W<->B memristor coupling.
+
+    ``jax.lax.linalg.tridiagonal_solve`` requires chains of length >= 3;
+    degenerate geometries (rows or cols < 3) fall back to the Jacobi
+    diagonal — at those sizes the chains are short enough that plain
+    Jacobi CG converges quickly anyway.
+    """
+    T, J, K = g.shape
+    dt = g.dtype
+    diag = _jacobi_diag_batched(g, cw)                      # (T, 2, J, K)
+    if min(J, K) < 3:
+        return lambda r: r / diag
+    dW = diag[:, 0]                                         # (T, J, K)
+    dBt = diag[:, 1].transpose(0, 2, 1)                     # (T, K, J)
+    lo_k = jnp.broadcast_to(
+        jnp.where(jnp.arange(K) > 0, -cw, 0.0).astype(dt), (T, J, K))
+    hi_k = jnp.broadcast_to(
+        jnp.where(jnp.arange(K) < K - 1, -cw, 0.0).astype(dt), (T, J, K))
+    lo_j = jnp.broadcast_to(
+        jnp.where(jnp.arange(J) > 0, -cw, 0.0).astype(dt), (T, K, J))
+    hi_j = jnp.broadcast_to(
+        jnp.where(jnp.arange(J) < J - 1, -cw, 0.0).astype(dt), (T, K, J))
+
+    def pre(r):
+        zW = jax.lax.linalg.tridiagonal_solve(
+            lo_k, dW, hi_k, r[:, 0][..., None])[..., 0]
+        zBt = jax.lax.linalg.tridiagonal_solve(
+            lo_j, dBt, hi_j, r[:, 1].transpose(0, 2, 1)[..., None])[..., 0]
+        return jnp.stack([zW, zBt.transpose(0, 2, 1)], axis=1)
+
+    return pre
+
+
+@partial(jax.jit, static_argnames=("maxiter",))
+def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
+                           spec_arr: jax.Array, maxiter: int = 4000,
+                           tol: float = 1e-12) -> BatchedSolveResult:
+    """Solve a (T, J, K) batch of tiles in one fused PCG loop.
+
+    ``active``: (T, J, K) activity masks; ``v_in``: (J,) shared or
+    (T, J) per-tile drive voltages; ``spec_arr`` = [r, r_on, r_off].
+    Tiles that converge early are frozen (zero step) while the shared
+    loop finishes the rest; the loop exits when every tile's relative
+    residual is <= ``tol`` or at ``maxiter``.
+    """
+    dtype = spec_arr.dtype
+    active = active.astype(dtype)
+    v_in = jnp.broadcast_to(v_in.astype(dtype),
+                            active.shape[:1] + v_in.shape[-1:])
+    r, r_on, r_off = spec_arr[0], spec_arr[1], spec_arr[2]
+    g = jnp.where(active > 0, 1.0 / r_on, 1.0 / r_off)
+    cw = 1.0 / r
+    T, J, K = g.shape
+
+    bW = jnp.zeros((T, J, K), dtype).at[:, :, 0].set(cw * v_in)
+    b = jnp.stack([bW, jnp.zeros((T, J, K), dtype)], axis=1)
+    mv = lambda x: _stencil_matvec_batched(g, cw, x)
+    pre = _line_preconditioner(g, cw)
+
+    b_norm2 = jnp.maximum(_dot(b, b), jnp.finfo(dtype).tiny)
+    tol2 = jnp.asarray(tol, dtype) ** 2
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = pre(r0)
+    rz0 = _dot(r0, z0)
+    done0 = _dot(r0, r0) <= tol2 * b_norm2
+
+    def cond(state):
+        k, _, _, _, _, done = state
+        return (k < maxiter) & ~jnp.all(done)
+
+    def body(state):
+        k, x, res, p, rz, done = state
+        Ap = mv(p)
+        pAp = _dot(p, Ap)
+        # Frozen (done) tiles and degenerate directions take a zero step.
+        ok = ~done & (pAp > 0)
+        alpha = jnp.where(ok, rz / jnp.where(ok, pAp, 1.0), 0.0)
+        a4 = alpha[:, None, None, None]
+        x = x + a4 * p
+        res = res - a4 * Ap
+        z = pre(res)
+        rz_new = _dot(res, z)
+        beta = jnp.where(ok, rz_new / jnp.where(rz > 0, rz, 1.0), 0.0)
+        p = jnp.where(done[:, None, None, None], p,
+                      z + beta[:, None, None, None] * p)
+        done = done | (_dot(res, res) <= tol2 * b_norm2)
+        return k + 1, x, res, p, jnp.where(ok, rz_new, rz), done
+
+    k, x, res, _, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), x0, r0, z0, rz0, done0))
+
+    resid = jnp.sqrt(_dot(res, res) / b_norm2)
+    currents = cw * x[:, 1, 0, :]               # (B[0,k] - 0) / r
+    ideal = jnp.einsum("tjk,tj->tk", g, v_in)
+    di = currents - ideal
+    nf_cols = jnp.abs(di) / jnp.maximum(ideal, 1e-30)
+    nf_total = jnp.abs(jnp.sum(di, axis=-1)) / jnp.maximum(
+        jnp.sum(ideal, axis=-1), 1e-30)
+    return BatchedSolveResult(currents, ideal, nf_cols, nf_total, resid, k)
+
+
+def measured_nf_batched(active: jax.Array, spec: CrossbarSpec,
+                        v_in: jax.Array | None = None,
+                        maxiter: int = 4000) -> BatchedSolveResult:
+    """Circuit-measured NF of a batch of tiles in one jitted solve.
+
+    ``active``: (..., J, K) with arbitrary leading batch dims (a single
+    (J, K) tile becomes a batch of one); the result carries the same
+    leading dims.  The f64 requirement is met with the config-scoped
+    x64 flag at trace time (``jax.enable_x64`` no longer exists).
+    """
+    with enable_x64():
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((active.shape[-2],), spec.v_read, jnp.float64)
+        batch_shape = active.shape[:-2]
+        flat = active.reshape((-1,) + active.shape[-2:])
+        flat_v = v_in.reshape((-1, v_in.shape[-1])) if v_in.ndim > 1 else v_in
+        res = solve_crossbar_batched(flat, flat_v, spec_arr, maxiter)
+        if batch_shape != flat.shape[:1]:
+            res = BatchedSolveResult(
+                *(f.reshape(batch_shape + f.shape[1:])
+                  for f in res[:-1]), res.iterations)
+        return res

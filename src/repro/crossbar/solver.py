@@ -11,9 +11,23 @@ resistance ``r`` per segment (paper §III-B / Fig 2):
     (1/R_on if the cell is active, 1/R_off otherwise)
 
 The resulting SPD system is solved with Jacobi-preconditioned CG whose
-matvec is a pure stencil (O(JK) per iteration, vmap-batched over tiles);
-a dense nodal-matrix ``jnp.linalg.solve`` oracle validates it for small
-tiles.  Everything runs in float64 (the NF signal is ~1e-3 relative).
+matvec is a pure stencil (O(JK) per iteration); a dense nodal-matrix
+``jnp.linalg.solve`` oracle validates it for small tiles.  Everything
+runs in float64 (the NF signal is ~1e-3 relative).
+
+This module is the *single-tile oracle path*.  Batches of tiles are
+solved by :mod:`repro.crossbar.batched`, which runs one fused PCG loop
+over the whole tile stack with per-tile convergence tracking —
+``measured_nf`` transparently routes batched inputs there.  The
+sequential ``lax.map`` walk is kept as ``measured_nf_sequential`` so the
+throughput benchmark (``benchmarks/solver_throughput.py``) and the
+equivalence tests can compare the two.
+
+JAX-version pitfall: float64 is enabled with the config-scoped
+``jax.experimental.enable_x64()`` (via :func:`repro.compat.enable_x64`)
+around the *trace-time* call — the old ``jax.enable_x64`` context
+manager was removed from the public namespace and dtypes are frozen
+once a jit has been traced.
 """
 from __future__ import annotations
 
@@ -24,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core.tiling import CrossbarSpec
 
 
@@ -113,12 +128,33 @@ def solve_crossbar(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
 
 def measured_nf(active: jax.Array, spec: CrossbarSpec,
                 v_in: jax.Array | None = None, maxiter: int = 4000):
-    """Circuit-measured NF of one tile (or a batch: leading dims vmapped).
+    """Circuit-measured NF of one tile (or a batch over leading dims).
 
     This is the quantity the paper probes in SPICE; comparing it against
     ``repro.core.manhattan.nonideality_factor`` is the Fig-4 experiment.
+    Batched inputs are dispatched to the fused engine in
+    :mod:`repro.crossbar.batched` (one jitted PCG over all tiles);
+    single tiles take the oracle path below.
     """
-    with jax.enable_x64(True):
+    if active.ndim > 2:
+        from repro.crossbar.batched import measured_nf_batched
+        return measured_nf_batched(active, spec, v_in, maxiter)
+    with enable_x64():
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((active.shape[-2],), spec.v_read, jnp.float64)
+        return solve_crossbar(active, v_in, spec_arr, maxiter)
+
+
+def measured_nf_sequential(active: jax.Array, spec: CrossbarSpec,
+                           v_in: jax.Array | None = None,
+                           maxiter: int = 4000):
+    """Seed behaviour: walk a tile batch with ``jax.lax.map``, one CG per
+    tile.  Kept as the baseline for ``benchmarks/solver_throughput.py``
+    and the batched-vs-sequential equivalence tests — use
+    :func:`measured_nf` (batched engine) for real workloads.
+    """
+    with enable_x64():
         spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
         if v_in is None:
             v_in = jnp.full((active.shape[-2],), spec.v_read, jnp.float64)

@@ -86,7 +86,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardingCtx):
             ef_spec = jax.tree_util.tree_map(lambda _: P(), opt_state.ef_error)
             bspec = jax.tree_util.tree_map(lambda _: P("pod"), batch)
             mspec = {"loss": P(), "ce": P(), "aux": P()}
-            grads, new_ef, metrics = jax.shard_map(
+            from repro.compat import shard_map
+            grads, new_ef, metrics = shard_map(
                 per_pod, mesh=ctx.mesh,
                 in_specs=(rep, ef_spec, bspec),
                 out_specs=(rep, ef_spec, mspec),

@@ -1,0 +1,24 @@
+"""JAX version-compat shims: x64 scoping + AbstractMesh construction."""
+import jax.numpy as jnp
+import pytest
+
+from repro.compat import enable_x64, make_abstract_mesh
+
+
+def test_enable_x64_scopes_dtype():
+    assert jnp.zeros((1,), jnp.float64).dtype == jnp.float32  # off outside
+    with enable_x64():
+        assert jnp.zeros((1,), jnp.float64).dtype == jnp.float64
+    assert jnp.zeros((1,), jnp.float64).dtype == jnp.float32  # restored
+
+
+def test_make_abstract_mesh_old_style_args():
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
+    assert dict(mesh.shape) == {"data": 16, "model": 16}
+    pod = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert tuple(pod.axis_names) == ("pod", "data", "model")
+
+
+def test_make_abstract_mesh_rejects_mismatched_args():
+    with pytest.raises(ValueError):
+        make_abstract_mesh((16, 16), ("data",))

@@ -1,8 +1,12 @@
-"""Gradient compression: quantisation bounds + error-feedback property."""
+"""Gradient compression: quantisation bounds + error-feedback property.
+
+Property tests are deterministic seeded parametrize grids (the
+``hypothesis`` package is not installable in the offline CI image).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.distributed.compression import (
     compress_decompress,
@@ -12,8 +16,8 @@ from repro.distributed.compression import (
 )
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 1000), scale=st.floats(1e-6, 1e3))
+@pytest.mark.parametrize("seed", [0, 1, 17, 123, 999])
+@pytest.mark.parametrize("scale", [1e-6, 1e-2, 1.0, 37.5, 1e3])
 def test_int8_roundtrip_error_bound(seed, scale):
     x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
     q, s = quantize_int8(x)
@@ -43,6 +47,8 @@ def test_psum_compressed_single_shard():
     """On a 1-member axis, psum_compressed reduces to the identity up to
     quantisation error and returns a bounded residual."""
     from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("pod",))
     g = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,))}
     e = {"w": jnp.zeros((64,))}
@@ -50,10 +56,10 @@ def test_psum_compressed_single_shard():
     def f(g, e):
         return psum_compressed(g, e, "pod")
 
-    out, new_e = jax.shard_map(f, mesh=mesh,
-                               in_specs=({"w": P()}, {"w": P()}),
-                               out_specs=({"w": P()}, {"w": P()}),
-                               check_vma=False)(g, e)
+    out, new_e = shard_map(f, mesh=mesh,
+                           in_specs=({"w": P()}, {"w": P()}),
+                           out_specs=({"w": P()}, {"w": P()}),
+                           check_vma=False)(g, e)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
                                atol=float(jnp.max(jnp.abs(g["w"]))) / 100)
     np.testing.assert_allclose(np.asarray(new_e["w"]),

@@ -6,6 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
@@ -34,6 +35,7 @@ def test_restore_onto_different_sharding():
         shutil.rmtree(d, ignore_errors=True)
 
 
+@pytest.mark.slow
 def test_trainer_state_restores_into_fresh_trainer_different_batch():
     """Elastic DP resize: the same checkpoint drives a trainer whose
     dataset has a different global batch (the param/opt state is batch-

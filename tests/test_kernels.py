@@ -1,10 +1,15 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret
-mode on CPU — the kernel body executes block-by-block faithfully)."""
+mode on CPU — the kernel body executes block-by-block faithfully).
+
+Sweeps are deterministic seeded parametrize grids (the ``hypothesis``
+package is not installable in the offline CI image); the cases keep the
+original strategies' edge coverage (minimal dims, non-multiples of the
+block sizes, both n_bits).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.tiling import CrossbarSpec
 from repro.kernels.bitslice_pack import bitslice_pack
@@ -18,7 +23,10 @@ from repro.kernels.manhattan_score.ref import manhattan_score_ref
 # ------------------------------ cim_mvm ----------------------------------
 
 @pytest.mark.parametrize("mode", ["baseline", "reverse", "sort", "mdm"])
-@pytest.mark.parametrize("shape", [(64, 8, 4), (70, 13, 5), (200, 100, 130)])
+@pytest.mark.parametrize("shape", [
+    (64, 8, 4), (70, 13, 5),
+    pytest.param((200, 100, 130), marks=pytest.mark.slow),
+])
 def test_cim_mvm_matches_ref(mode, shape):
     I, N, M = shape
     k1, k2 = jax.random.split(jax.random.PRNGKey(I * N + M))
@@ -34,11 +42,17 @@ def test_cim_mvm_matches_ref(mode, shape):
                                rtol=2e-5, atol=2e-5)
 
 
-@settings(max_examples=12, deadline=None)
-@given(
-    i=st.integers(4, 96), n=st.integers(2, 40), m=st.integers(1, 40),
-    n_bits=st.sampled_from([4, 8]), seed=st.integers(0, 99),
-)
+@pytest.mark.parametrize("i,n,m,n_bits,seed", [
+    (4, 2, 1, 4, 0),        # minimal dims
+    pytest.param(96, 40, 40, 8, 1, marks=pytest.mark.slow),  # maxima
+    (33, 7, 5, 4, 2),       # nothing divides the tile
+    (32, 4, 8, 8, 3),       # exact tile fit
+    pytest.param(64, 17, 13, 8, 5, marks=pytest.mark.slow),
+    (48, 40, 1, 4, 6),      # single activation row
+    pytest.param(96, 2, 16, 8, 7, marks=pytest.mark.slow),
+    pytest.param(31, 9, 40, 4, 8, marks=pytest.mark.slow),
+    (7, 5, 11, 8, 99),
+])
 def test_cim_mvm_property_sweep(i, n, m, n_bits, seed):
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     w = jax.random.normal(k1, (i, n)) * 0.5
@@ -80,9 +94,14 @@ def test_cim_mvm_batched_input():
 
 # --------------------------- manhattan_score -----------------------------
 
-@settings(max_examples=10, deadline=None)
-@given(t=st.integers(1, 9), r=st.sampled_from([16, 64]),
-       c=st.sampled_from([16, 64]), seed=st.integers(0, 99))
+@pytest.mark.parametrize("t,r,c,seed", [
+    (1, 16, 16, 0),         # single tile, smallest geometry
+    (9, 64, 64, 1),         # strategy maxima
+    (3, 16, 64, 2),         # rectangular both ways
+    (5, 64, 16, 3),
+    (2, 64, 64, 42),
+    (7, 16, 16, 99),
+])
 def test_manhattan_score_sweep(t, r, c, seed):
     masks = (jax.random.uniform(jax.random.PRNGKey(seed), (t, r, c)) < 0.3
              ).astype(jnp.uint8)
@@ -102,10 +121,16 @@ def test_manhattan_score_batch_dims():
 
 # ---------------------------- bitslice_pack ------------------------------
 
-@settings(max_examples=10, deadline=None)
-@given(i=st.integers(1, 130), n=st.integers(1, 70),
-       n_bits=st.sampled_from([4, 8, 12]), rev=st.booleans(),
-       seed=st.integers(0, 99))
+@pytest.mark.parametrize("i,n,n_bits,rev,seed", [
+    (1, 1, 4, False, 0),    # minimal dims
+    (130, 70, 12, True, 1), # strategy maxima
+    (128, 64, 8, False, 2), # power-of-two block fit
+    (129, 65, 8, True, 3),  # one past the block
+    (17, 33, 4, True, 4),
+    (64, 1, 12, False, 5),
+    (1, 70, 8, True, 42),
+    (100, 23, 4, False, 99),
+])
 def test_bitslice_pack_sweep(i, n, n_bits, rev, seed):
     codes = jax.random.randint(jax.random.PRNGKey(seed), (i, n),
                                -(2 ** n_bits) + 1, 2 ** n_bits)

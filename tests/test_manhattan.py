@@ -1,8 +1,12 @@
-"""Manhattan NF model + MDM algorithm invariants."""
+"""Manhattan NF model + MDM algorithm invariants.
+
+Property tests are deterministic seeded parametrize grids (the
+``hypothesis`` package is not installable in the offline CI image).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import manhattan
 from repro.core.bitslice import bitslice
@@ -34,8 +38,8 @@ def test_antidiagonal_symmetry_analytical():
     assert jnp.allclose(nf1, nf2)
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000), p=st.floats(0.05, 0.5))
+@pytest.mark.parametrize("seed", [0, 7, 123, 999, 4242, 9001])
+@pytest.mark.parametrize("p", [0.05, 0.2, 0.35, 0.5])
 def test_optimal_row_order_beats_random(seed, p):
     """The count-descending order minimises sum_j pos_j * n_j: it must be
     <= any random permutation's placement cost (rearrangement ineq.)."""

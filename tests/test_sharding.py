@@ -1,10 +1,11 @@
 """Logical-axis rule resolution: divisibility fallback, axis reuse."""
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.distributed.sharding import RULE_SETS, logical_spec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+POD = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 RULES = RULE_SETS["default"]
 
 

@@ -1,5 +1,10 @@
 """Circuit-level solver: CG vs dense oracle, physics sanity, and the
-Manhattan Hypothesis (Fig-2/Fig-4 analogues at test scale)."""
+Manhattan Hypothesis (Fig-2/Fig-4 analogues at test scale).
+
+Covers both the single-tile oracle path (repro.crossbar.solver) and the
+fused batched engine (repro.crossbar.batched); large shapes are marked
+``slow`` and run in the nightly profile (scripts/test_nightly.sh).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +12,12 @@ import pytest
 
 from repro.core import manhattan
 from repro.core.tiling import CrossbarSpec
-from repro.crossbar.solver import column_currents_dense, measured_nf
+from repro.crossbar.batched import measured_nf_batched
+from repro.crossbar.solver import (
+    column_currents_dense,
+    measured_nf,
+    measured_nf_sequential,
+)
 
 SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
 
@@ -69,6 +79,98 @@ def test_manhattan_hypothesis_correlation():
         manhattan.nonideality_factor(jnp.asarray(masks), SPEC.r, SPEC.r_on))
     r = np.corrcoef(measured, predicted)[0, 1]
     assert r > 0.8, f"Manhattan Hypothesis correlation too weak: r={r}"
+
+
+def test_batched_matches_dense_oracle():
+    """The fused engine solves a mixed-density batch to oracle accuracy."""
+    keys = jax.random.split(jax.random.PRNGKey(13), 6)
+    masks = np.stack([rand_mask(k, 12, 12, p)
+                      for k, p in zip(keys, (0.05, 0.1, 0.2, 0.3, 0.5, 0.8))])
+    res = measured_nf_batched(jnp.asarray(masks), SPEC)
+    assert float(np.asarray(res.residual).max()) < 1e-9
+    for i in range(masks.shape[0]):
+        dense = column_currents_dense(masks[i], np.full(12, SPEC.v_read),
+                                      SPEC)
+        np.testing.assert_allclose(np.asarray(res.currents[i]), dense,
+                                   rtol=1e-7)
+
+
+def test_batched_matches_single_tile_path():
+    """measured_nf routes batches to the engine; per-tile results must
+    equal the single-tile oracle path bit-for-tolerance."""
+    keys = jax.random.split(jax.random.PRNGKey(17), 5)
+    masks = np.stack([rand_mask(k, 16, 16) for k in keys])
+    batched = measured_nf(jnp.asarray(masks), SPEC)   # routes to engine
+    for i in range(5):
+        single = measured_nf(jnp.asarray(masks[i]), SPEC)
+        # The two paths use different preconditioners; they agree to the
+        # CG tolerance (1e-12 residual -> ~1e-7 in the currents; nf_total
+        # is |sum di| — a cancellation-amplified difference — so looser).
+        np.testing.assert_allclose(np.asarray(batched.currents[i]),
+                                   np.asarray(single.currents), rtol=1e-6)
+        np.testing.assert_allclose(float(batched.nf_total[i]),
+                                   float(single.nf_total), rtol=1e-3)
+
+
+def test_batched_early_exit_and_batch_dims():
+    """The shared loop exits early (iterations << maxiter) and leading
+    batch dims are preserved through the engine."""
+    masks = (jax.random.uniform(jax.random.PRNGKey(19), (2, 3, 8, 8))
+             < 0.25).astype(np.float32)
+    res = measured_nf(jnp.asarray(masks), SPEC)
+    assert res.nf_total.shape == (2, 3)
+    assert res.currents.shape == (2, 3, 8)
+    assert int(res.iterations) < 100          # line preconditioner: ~5
+    assert float(np.asarray(res.residual).max()) < 1e-9
+
+
+@pytest.mark.parametrize("shape", [(8, 2), (2, 8), (1, 4), (8, 1)])
+def test_batched_degenerate_geometries(shape):
+    """rows/cols < 3 fall back to the Jacobi preconditioner (the
+    tridiagonal solve needs chains >= 3) and still match the oracle."""
+    J, K = shape
+    m = rand_mask(jax.random.PRNGKey(37), J, K, 0.4)
+    res = measured_nf_batched(jnp.asarray(m)[None], SPEC)
+    dense = column_currents_dense(np.asarray(m), np.full(J, SPEC.v_read),
+                                  SPEC)
+    np.testing.assert_allclose(np.asarray(res.currents[0]), dense,
+                               rtol=1e-7)
+
+
+def test_batched_per_tile_drive_voltages():
+    """(T, J) per-tile v_in is honoured (superposition sanity: doubling
+    the drive doubles the currents)."""
+    m = np.stack([rand_mask(jax.random.PRNGKey(23), 8, 8, 0.3)] * 2)
+    v = np.stack([np.full(8, SPEC.v_read), np.full(8, 2 * SPEC.v_read)])
+    res = measured_nf_batched(jnp.asarray(m), SPEC, v_in=jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(res.currents[1]),
+                               2 * np.asarray(res.currents[0]), rtol=1e-7)
+
+
+@pytest.mark.slow
+def test_batched_matches_sequential_large():
+    """Full-scale equivalence: 64-tile batch of the paper's 64x64 tiles,
+    fused engine vs the seed lax.map walk."""
+    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    masks = (jax.random.uniform(jax.random.PRNGKey(29), (64, 64, 64))
+             < 0.2).astype(np.float32)
+    rb = measured_nf_batched(jnp.asarray(masks), spec)
+    rs = measured_nf_sequential(jnp.asarray(masks), spec)
+    np.testing.assert_allclose(np.asarray(rb.currents),
+                               np.asarray(rs.currents), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(rb.nf_total),
+                               np.asarray(rs.nf_total), rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_cg_matches_dense_oracle_paper_geometry():
+    """Oracle check on the paper's 128x10 crossbar (1280-node system)."""
+    spec = CrossbarSpec(rows=128, cols=10, n_bits=10)
+    m = rand_mask(jax.random.PRNGKey(31), 128, 10, 0.3)
+    res = measured_nf(jnp.asarray(m), spec)
+    dense = column_currents_dense(np.asarray(m),
+                                  np.full(128, spec.v_read), spec)
+    np.testing.assert_allclose(np.asarray(res.currents), dense, rtol=1e-7)
 
 
 def test_mdm_reduces_measured_nf():

@@ -1,9 +1,12 @@
-"""Theorem 1 (bit-level structured sparsity): property tests."""
+"""Theorem 1 (bit-level structured sparsity): property tests.
+
+Property tests are deterministic seeded parametrize grids (the
+``hypothesis`` package is not installable in the offline CI image).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import theory
 from repro.core.bitslice import bitslice
@@ -25,8 +28,8 @@ def test_theorem1_bound_quadrature(k, make, f0):
     assert abs(p - 0.5) <= bound + 5e-4  # quadrature tolerance
 
 
-@settings(max_examples=20, deadline=None)
-@given(sigma=st.floats(0.05, 2.0), k=st.integers(1, 6))
+@pytest.mark.parametrize("sigma", [0.05, 0.3, 1.0, 2.0])
+@pytest.mark.parametrize("k", [1, 3, 6])
 def test_theorem1_bound_empirical_halfnormal(sigma, k):
     """Sampled |w| ~ half-normal respects the bound within sampling noise."""
     key = jax.random.PRNGKey(int(sigma * 1e4) + k)

@@ -27,6 +27,7 @@ def make_trainer(d, **kw):
     return Trainer(CFG, tcfg, ds)
 
 
+@pytest.mark.slow
 def test_restart_reproduces_trajectory():
     d = tempfile.mkdtemp()
     try:
@@ -46,6 +47,7 @@ def test_restart_reproduces_trajectory():
         shutil.rmtree(d, ignore_errors=True)
 
 
+@pytest.mark.slow
 def test_injected_failure_recovery():
     """A mid-run failure recovers from checkpoint and converges to the
     same final loss as an uninterrupted run."""
@@ -66,6 +68,7 @@ def test_injected_failure_recovery():
         shutil.rmtree(d2, ignore_errors=True)
 
 
+@pytest.mark.slow
 def test_microbatch_grad_accumulation_equivalence():
     """microbatches=4 produces (numerically) the same update as one batch."""
     ctx = ShardingCtx()
