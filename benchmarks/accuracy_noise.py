@@ -27,13 +27,19 @@ from repro.train import Trainer
 MODES = ("baseline", "reverse", "sort", "mdm")
 
 
-def run(train_steps: int = 250, etas=(1e-2, 3e-2), verbose: bool = True,
-        arch: str = "phi3-mini-3.8b") -> dict:
-    """Note on the eta range: at the paper's eta=2e-3 the CE deltas sit
-    inside evaluation noise for this model scale; 1e-2..3e-2 is the
-    regime where degradation is unambiguous.  Expected pattern under
-    first-order Eq-17 injection: sort < baseline < mdm (reversal hurts
-    the 2^-k-weighted distortion) — the *circuit-level* check in
+def run(train_steps: int = 250, etas=None, eta_scales=(1.0, 50.0, 150.0),
+        verbose: bool = True, arch: str = "phi3-mini-3.8b") -> dict:
+    """The eta sweep grid is anchored to the *circuit-calibrated* eta
+    (one fused batched solve against ``repro.crossbar``; the paper's
+    SPICE analogue gives 2e-3 at r=2.5ohm; this spec's 64x64 tiles
+    calibrate to ~1.5e-4): grid = eta_circuit * ``eta_scales``.  The 1x
+    point is the physical operating point; at that scale the CE deltas
+    sit inside evaluation noise for this model size, so the 50x/150x
+    points (landing on the formerly hand-picked 1e-2..3e-2 regime) keep
+    the degradation ordering unambiguous.  Pass ``etas`` explicitly to
+    override the calibrated grid.  Expected pattern under first-order
+    Eq-17 injection: sort < baseline < mdm (reversal hurts the
+    2^-k-weighted distortion) — the *circuit-level* check in
     nf_reduction.py shows full MDM winning once second-order IR-drop
     physics is included; see DESIGN.md §5b."""
     t0 = time.perf_counter()
@@ -59,15 +65,20 @@ def run(train_steps: int = 250, etas=(1e-2, 3e-2), verbose: bool = True,
 
     clean = float(eval_ce(tr.params))
     # Circuit-grounded eta at the benchmark's crossbar spec: one fused
-    # batched solve (repro.crossbar.batched) instead of the paper's SPICE
-    # sweep; reported alongside the sweep so the eta grid is anchored.
-    eta_circuit = calibrate_eta(spec, n_tiles=8)
+    # batched solve (repro.crossbar.batched) instead of the paper's
+    # SPICE sweep.  The mixed f32/f64 precision policy matches the f64
+    # oracle far below the fit noise at a fraction of the solve cost.
+    eta_circuit = calibrate_eta(spec, n_tiles=8, precision="mixed")
+    if etas is None:
+        etas = tuple(eta_circuit * s for s in eta_scales)
     out = {"train_final_loss": log[-1]["loss"], "clean_ce": clean,
-           "eta_circuit_calibrated": eta_circuit, "noisy": {}}
+           "eta_circuit_calibrated": eta_circuit,
+           "eta_grid": list(etas), "noisy": {}}
     if verbose:
         print(f"  trained {train_steps} steps: loss {log[-1]['loss']:.3f}; "
               f"clean eval CE {clean:.4f}; "
-              f"circuit-calibrated eta {eta_circuit:.2e}")
+              f"circuit-calibrated eta {eta_circuit:.2e} -> grid "
+              + ",".join(f"{e:.2e}" for e in etas))
     for eta in etas:
         row = {}
         for mode in MODES:

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import manhattan
 from repro.core.tiling import CrossbarSpec
-from repro.crossbar.batched import measured_nf_batched
+from repro.distributed.solver_shard import measured_nf_sharded
 
 
 def run(n_tiles: int = 500, sparsity: float = 0.8, rows: int = 64,
@@ -27,7 +27,9 @@ def run(n_tiles: int = 500, sparsity: float = 0.8, rows: int = 64,
              < (1 - sparsity)).astype(jnp.float32)
 
     t0 = time.perf_counter()
-    res = measured_nf_batched(masks, spec)   # one fused PCG over all tiles
+    # Device-sharded fused PCG (all local devices; f64 oracle policy —
+    # this is the Fig-4 *validation*, so no mixed-precision shortcut).
+    res = measured_nf_sharded(masks, spec)
     measured = np.asarray(res.nf_total, np.float64)
     solve_s = time.perf_counter() - t0
 

@@ -15,6 +15,14 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# 8-way host-device simulation for the sharded-solver rows (must land
+# before the first jax import initialises the backend); append so an
+# operator-supplied XLA_FLAGS still wins.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
 from benchmarks import (  # noqa: E402
     accuracy_noise,
     cim_traffic,
@@ -48,9 +56,16 @@ def main() -> None:
             train_steps=60 if q else 250),
         # paper §IV "lightweight" claim
         "mdm_planning_cost": lambda: planning_cost.run(),
-        # §Perf: batched circuit solver vs seed lax.map path
+        # §Perf: solver scale-out matrix (seed lax.map vs batched vs
+        # sharded/mixed on the 8-way device simulation), both regimes:
+        # 64x64 paper-scale tiles (work-bound on small hosts) and
+        # 32x32 tiles (latency-bound; the sharded engine's >= 2x row).
         "solver_throughput": lambda: solver_throughput.run(
-            n_tiles=64, rows=32 if q else 64, cols=32 if q else 64),
+            n_tiles=128 if q else 512, rows=32 if q else 64,
+            cols=32 if q else 64, seq_tiles=32 if q else 64),
+        "solver_throughput_32x32": lambda: solver_throughput.run(
+            n_tiles=128 if q else 512, rows=32, cols=32,
+            seq_tiles=32 if q else 64),
         # §Perf: fused CIM path vs materialised bit-planes
         "cim_traffic": lambda: cim_traffic.run(),
         # §Dry-run / §Roofline summary
@@ -105,9 +120,15 @@ def _derive(name: str, res: dict) -> str:
             return f"cells_ok={res['ok']}/{res['cells']}"
         if name == "mdm_planning_cost":
             return f"plan_4096x4096={res['plan_4096x4096']['seconds']:.3f}s"
-        if name == "solver_throughput":
+        if name.startswith("solver_throughput"):
             return (f"speedup=x{res['speedup']:.1f};"
-                    f"{res['batched_tiles_per_s']:.0f}tiles/s")
+                    f"{res['batched_tiles_per_s']:.0f}tiles/s;"
+                    f"scaleout=x"
+                    f"{res['speedup_scaleout_best_vs_batched_f64']:.2f};"
+                    f"sharded_mixed=x"
+                    f"{res['speedup_sharded_mixed_vs_batched_f64']:.2f}"
+                    f"@{res['sharded_mixed_tiles_per_s']:.0f}tiles/s;"
+                    f"mixed_err={res['mixed_max_rel_voltage_err']:.1e}")
         if name == "cim_traffic":
             return (f"kernel_traffic_reduction=x{res['kernel_ratio']:.1f};"
                     f"xla=x{res['xla_ratio']:.2f}")

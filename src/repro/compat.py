@@ -14,9 +14,18 @@ stay version-agnostic):
 * ``jax.shard_map`` — newer JAX exposes it at top level with a
   ``check_vma`` kwarg; 0.4.x has ``jax.experimental.shard_map`` with
   ``check_rep``.  Use :func:`shard_map` (``check_vma`` spelling).
+
+Backend capability probes also live here:
+
+* :func:`has_batched_tridiagonal_solve` — whether
+  ``jax.lax.linalg.tridiagonal_solve`` lowers (and executes) with
+  leading batch dimensions on the active backend.  The batched crossbar
+  engine's line preconditioner depends on it; backends without the
+  batched lowering fall back to the Jacobi diagonal.
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Any, Callable, ContextManager, Sequence
 
 import jax
@@ -74,3 +83,53 @@ def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any,
         kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=check_vma, **kw)
+
+
+@lru_cache(maxsize=None)
+def has_batched_tridiagonal_solve(platform: str | None = None) -> bool:
+    """Probe: does ``tridiagonal_solve`` have a batched lowering here?
+
+    The line preconditioner in :mod:`repro.crossbar.batched` solves
+    ``(T, J)``-batched tridiagonal chains in one call; some backends
+    (historically GPU's cusparse ``gtsv2`` path) reject leading batch
+    dims or specific dtypes at lowering time.  This executes a tiny
+    2-dim-batched solve on ``platform`` (default: the active backend)
+    and reports whether it compiles *and* returns finite values, so the
+    engine can decide between the line and Jacobi preconditioners
+    without call-site version/backend guards.  Cached per platform —
+    the probe runs at most once per process.
+    """
+    import threading
+
+    # The probe is typically triggered at *trace time* (inside the
+    # engine's jit).  JAX's ambient trace state is thread-local, so a
+    # fresh worker thread is the one reliable way to run an independent
+    # eager execution from inside a trace: jnp constants would become
+    # tracers in the caller's trace, and ensure_compile_time_eval leaks
+    # the eval trace into tridiagonal_solve's scan-based CPU lowering
+    # (NotImplementedError: evaluation rule for 'empty').
+    out: list[bool] = []
+    t = threading.Thread(target=lambda: out.append(_probe_tridiagonal(
+        platform)), daemon=True)
+    t.start()
+    t.join()
+    return bool(out and out[0])
+
+
+def _probe_tridiagonal(platform: str | None) -> bool:
+    try:
+        import numpy as np
+
+        m = 4
+        dl = np.zeros((2, 3, m), np.float32)
+        d = np.full((2, 3, m), 2.0, np.float32)
+        du = np.zeros((2, 3, m), np.float32)
+        b = np.ones((2, 3, m, 1), np.float32)
+        args = (dl, d, du, b)
+        if platform:  # jit follows input placement
+            args = jax.device_put(args, jax.devices(platform)[0])
+        out = np.asarray(
+            jax.jit(jax.lax.linalg.tridiagonal_solve)(*args))
+        return bool(np.all(np.isfinite(out)) and np.allclose(out, 0.5))
+    except Exception:  # lowering/runtime rejection -> Jacobi fallback
+        return False

@@ -87,11 +87,12 @@ def optimal_row_order(active: jax.Array) -> jax.Array:
     """
     n = row_counts(active)
     s = row_scores(active)
-    J = active.shape[-2]
-    # Composite descending key: primary count, secondary score, tertiary
-    # original index (stability).
-    key = n * (J * 16.0) + s / (s.max() + 1.0)
-    return jnp.argsort(-key, stable=True)
+    # Collision-free composite sort: lexsort's last key is primary, and
+    # stability supplies the index tiebreak.  (A packed float key
+    # ``n * C + s / (s.max() + 1)`` cannot work for wide tiles: once
+    # ``n * C`` outgrows the f32 mantissa the sub-1 score term is
+    # rounded away entirely and ties fall back to index order.)
+    return jnp.lexsort((-s, -n))
 
 
 def antidiagonal_mirror(active: jax.Array) -> jax.Array:

@@ -85,7 +85,7 @@ def noisy_weights(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
 
 
 def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
-                  sparsity: float = 0.8) -> float:
+                  sparsity: float = 0.8, precision=None) -> float:
     """Calibrate eta against the circuit-level solver (paper §V-C: the
     paper does this in SPICE, obtaining eta = 2e-3 for r = 2.5 ohm).
 
@@ -94,6 +94,13 @@ def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
     random tiles of the target sparsity.  All tiles are solved in one
     fused call to the batched engine (``repro.crossbar.batched``), so
     calibration cost is one PCG solve, not ``n_tiles`` of them.
+
+    ``precision`` selects the engine arithmetic (a
+    :class:`repro.crossbar.batched.SolverPrecision`, a policy name, or
+    None = all-f64); the mixed f32/f64 policy matches the f64 oracle to
+    ~1e-10 relative — far below the least-squares fit noise — at a
+    fraction of the solve cost, so sweeps calibrating eta per device
+    spec can safely run ``precision="mixed"``.
     """
     import jax as _jax
     import numpy as _np
@@ -105,7 +112,7 @@ def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
     masks = (_jax.random.uniform(
         key, (n_tiles, spec.rows, spec.cols)) < (1 - sparsity)
     ).astype(jnp.float32)
-    res = measured_nf_batched(masks, spec)
+    res = measured_nf_batched(masks, spec, precision=precision)
     # per-cell-normalised measured deficit: |sum di| / (g_on * v_read)
     i_cell = spec.v_read / spec.r_on
     measured = _np.abs(_np.asarray(res.currents - res.ideal)).sum(-1) / i_cell

@@ -1,6 +1,11 @@
 from repro.crossbar.batched import (  # noqa: F401
+    F32,
+    F64,
+    MIXED,
     BatchedSolveResult,
+    SolverPrecision,
     measured_nf_batched,
+    resolve_precision,
     solve_crossbar_batched,
 )
 from repro.crossbar.solver import (  # noqa: F401

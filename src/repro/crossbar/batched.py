@@ -1,4 +1,4 @@
-"""Batched crossbar circuit-solver engine.
+"""Batched crossbar circuit-solver engine with precision policies.
 
 The seed solver (:mod:`repro.crossbar.solver`) solves one tile per CG
 invocation and walks batches with ``jax.lax.map`` — correct, but the
@@ -15,34 +15,110 @@ This module solves the *entire batch in one jitted call*:
   coupling weak.  Solving the per-chain tridiagonal systems exactly
   (batched ``jax.lax.linalg.tridiagonal_solve`` over T*J + T*K chains)
   leaves ``M^-1 A ~= I + O(g/cw)``, so CG converges in a handful of
-  iterations where the seed's Jacobi preconditioner needs hundreds;
+  iterations where the seed's Jacobi preconditioner needs hundreds.
+  Backends whose ``tridiagonal_solve`` lacks a batched lowering are
+  detected by :func:`repro.compat.has_batched_tridiagonal_solve` and
+  fall back to the Jacobi diagonal automatically;
 * convergence is tracked **per tile**: a boolean ``done`` mask freezes a
   tile's iterates (its step sizes are zeroed) the moment its relative
   residual passes ``tol``, while the shared iteration loop keeps running
   the stragglers;
 * the shared ``lax.while_loop`` exits early as soon as *all* tiles have
   converged, so a batch is never slower than its hardest member;
-* float64 is obtained with the config-scoped
-  :func:`repro.compat.enable_x64` at trace time (the old
-  ``jax.enable_x64`` context manager no longer exists in JAX >= 0.4.x).
+* **precision is a policy** (:class:`SolverPrecision`): the default
+  :data:`F64` runs the classic all-float64 solve; :data:`MIXED` runs
+  the CG iterations in float32 (half the memory traffic — the stencil
+  matvec and chain solves are bandwidth-bound) and then *polishes* the
+  promoted iterate with warm-started float64 CG.  Because the line
+  preconditioner contracts the residual by ~``g/cw`` per iteration,
+  the polish reaches the f64 fixed point in 1–2 iterations, so the
+  mixed path matches the f64 oracle to ~1e-12 relative while doing
+  most of its arithmetic in f32.  :data:`F32` (no polish) is the
+  throwaway-accuracy screening mode.
+
+float64 is obtained with the config-scoped
+:func:`repro.compat.enable_x64` at trace time (the old
+``jax.enable_x64`` context manager no longer exists in JAX >= 0.4.x).
 
 The single-tile Jacobi-CG path in :mod:`repro.crossbar.solver` is kept
 as the oracle; ``tests/test_solver.py`` pins this engine against both
-that path and the dense nodal solve.  Throughput is tracked by
-``benchmarks/solver_throughput.py`` (the acceptance bar is >= 10x over
-the seed ``lax.map`` path on a 64-tile batch).
+that path and the dense nodal solve.  Device-sharded layer-scale solves
+live in :mod:`repro.distributed.solver_shard`, which shard_maps the
+same :func:`_solve_core` over a tile mesh.  Throughput is tracked by
+``benchmarks/solver_throughput.py``.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.compat import enable_x64
+from repro.compat import enable_x64, has_batched_tridiagonal_solve
 from repro.core.tiling import CrossbarSpec
 from repro.crossbar.solver import _jacobi_diag, _stencil_matvec
+
+
+@dataclass(frozen=True)
+class SolverPrecision:
+    """How the batched PCG spends its flops (hashable => jit-static).
+
+    ``cg_dtype``
+        dtype of the main CG iteration ("float64" or "float32").
+    ``coarse_tol``
+        relative-residual target of a float32 main loop (float32 CG
+        stalls near its ~1e-7 epsilon, so the final ``tol`` is not
+        reachable there; ignored when ``cg_dtype`` is float64).  1e-5
+        sits safely above the f32 floor — pushing it lower trades f64
+        polish iterations for f32 ones only until the floor, after
+        which the coarse loop just spins against the stall guard.
+    ``coarse_maxiter``
+        stall guard on the float32 loop — if ``coarse_tol`` undershoots
+        the f32 floor for an ill-conditioned batch, the coarse phase
+        hands over to the polish after this many iterations instead of
+        spinning to the caller's ``maxiter``.
+    ``polish``
+        run warm-started float64 CG from the promoted f32 iterate down
+        to the caller's ``tol``.  With the line preconditioner this
+        costs 1–2 iterations (residual contracts by ~g/cw per step).
+    ``polish_maxiter``
+        safety cap on the polish loop.
+    """
+
+    cg_dtype: str = "float64"
+    coarse_tol: float = 1e-5
+    coarse_maxiter: int = 64
+    polish: bool = False
+    polish_maxiter: int = 64
+
+    @property
+    def is_f64(self) -> bool:
+        return self.cg_dtype == "float64"
+
+
+F64 = SolverPrecision()
+MIXED = SolverPrecision(cg_dtype="float32", polish=True)
+F32 = SolverPrecision(cg_dtype="float32", polish=False)
+
+_POLICIES = {"f64": F64, "float64": F64, "mixed": MIXED,
+             "f32": F32, "float32": F32}
+
+
+def resolve_precision(
+        precision: SolverPrecision | str | None) -> SolverPrecision:
+    """None -> F64 oracle policy; strings name the canned policies."""
+    if precision is None:
+        return F64
+    if isinstance(precision, str):
+        try:
+            return _POLICIES[precision.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision policy {precision!r}; "
+                f"expected one of {sorted(_POLICIES)}") from None
+    return precision
 
 
 class BatchedSolveResult(NamedTuple):
@@ -50,7 +126,7 @@ class BatchedSolveResult(NamedTuple):
 
     Identical field layout to :class:`repro.crossbar.solver.SolveResult`
     (so consumers can treat the two interchangeably) plus the shared
-    iteration count the early-exit loop actually ran.
+    iteration count the early-exit loop actually ran (main + polish).
     """
 
     currents: jax.Array    # (..., K) actual column currents under PR
@@ -72,7 +148,57 @@ def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.sum(a * b, axis=(1, 2, 3))
 
 
-def _line_preconditioner(g: jax.Array, cw: jax.Array):
+def _thomas_factor(lo: jax.Array, d: jax.Array, hi: jax.Array):
+    """Thomas (LU) factorisation of batched tridiagonal chains.
+
+    ``lo``/``d``/``hi``: (..., M) with the chain along the last axis
+    (``lo[..., 0]`` and ``hi[..., M-1]`` ignored/zero).  Returns the
+    eliminated superdiagonal ``c`` and pivots ``denom``; runs once per
+    preconditioner *construction* (a single 2M-step scan), after which
+    every application is two log-depth associative scans.  The chains
+    are strictly diagonally dominant (wire Laplacian + g), so no
+    pivoting is needed.
+    """
+
+    def step(c_prev, x):
+        lo_i, d_i, hi_i = x
+        denom = d_i - lo_i * c_prev
+        c = hi_i / denom
+        return c, (c, denom)
+
+    xs = (jnp.moveaxis(lo, -1, 0), jnp.moveaxis(d, -1, 0),
+          jnp.moveaxis(hi, -1, 0))
+    _, (c, denom) = jax.lax.scan(step, jnp.zeros_like(lo[..., 0]), xs)
+    return jnp.moveaxis(c, 0, -1), jnp.moveaxis(denom, 0, -1)
+
+
+def _affine_scan(alpha: jax.Array, beta: jax.Array,
+                 reverse: bool = False) -> jax.Array:
+    """Solve y_i = alpha_i * y_(i-1) + beta_i along the last axis via a
+    log-depth associative scan (the affine maps compose associatively).
+    Stable here because diagonal dominance keeps |alpha| < 1."""
+
+    def comb(a, b):
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+
+    ax = alpha.ndim - 1
+    return jax.lax.associative_scan(comb, (alpha, beta), axis=ax,
+                                    reverse=reverse)[1]
+
+
+def _thomas_apply(lo: jax.Array, c: jax.Array, denom: jax.Array,
+                  r: jax.Array) -> jax.Array:
+    """Forward/back substitution with a precomputed factorisation, each
+    sweep a log-depth associative scan instead of an M-step sequential
+    scan — the latency-optimal shape for the sharded engine's small
+    per-shard batches (and for accelerators without a batched
+    ``tridiagonal_solve`` lowering)."""
+    y = _affine_scan(-lo / denom, r / denom)
+    return _affine_scan(-c, y, reverse=True)
+
+
+def _line_preconditioner(g: jax.Array, cw: jax.Array,
+                         chain_impl: str = "lax"):
     """Exact per-chain solver for the block-diagonal part of A.
 
     M = blockdiag(Dw + diag(g), Db + diag(g)) where Dw couples each
@@ -80,15 +206,33 @@ def _line_preconditioner(g: jax.Array, cw: jax.Array):
     SPD tridiagonal, so M is a valid SPD preconditioner and captures
     everything except the weak W<->B memristor coupling.
 
-    ``jax.lax.linalg.tridiagonal_solve`` requires chains of length >= 3;
-    degenerate geometries (rows or cols < 3) fall back to the Jacobi
-    diagonal — at those sizes the chains are short enough that plain
-    Jacobi CG converges quickly anyway.
+    ``chain_impl`` picks the chain-solver kernel by regime:
+
+    * ``"lax"`` — batched ``jax.lax.linalg.tridiagonal_solve``, one call
+      per family (the two calls are independent so XLA overlaps their
+      sequential scans across the intra-op pool; a merged (T, J+K)
+      batch serialises the doubled per-step work and measures ~1.6x
+      slower on CPU).  Bandwidth-optimal for wide single-device
+      batches.  Requires a batched lowering on the active backend —
+      probed via :func:`repro.compat.has_batched_tridiagonal_solve`,
+      with a Jacobi-diagonal fallback where it is missing.
+    * ``"assoc"`` — Thomas factorisation applied via log-depth
+      associative scans (:func:`_thomas_apply`): latency-optimal for
+      the sharded engine's small per-shard batches (~3-4x over the lax
+      scan at 64 tiles/shard) and portable to every backend, since it
+      uses only elementwise ops and ``lax.associative_scan``.
+    * ``"jacobi"`` — the diagonal alone (the seed preconditioner).
+
+    Degenerate geometries (rows or cols < 3) always use Jacobi — the
+    chains are too short to matter and ``tridiagonal_solve`` rejects
+    them.
     """
     T, J, K = g.shape
     dt = g.dtype
     diag = _jacobi_diag_batched(g, cw)                      # (T, 2, J, K)
-    if min(J, K) < 3:
+    if (min(J, K) < 3 or chain_impl == "jacobi"
+            or (chain_impl == "lax"
+                and not has_batched_tridiagonal_solve())):
         return lambda r: r / diag
     dW = diag[:, 0]                                         # (T, J, K)
     dBt = diag[:, 1].transpose(0, 2, 1)                     # (T, K, J)
@@ -101,6 +245,18 @@ def _line_preconditioner(g: jax.Array, cw: jax.Array):
     hi_j = jnp.broadcast_to(
         jnp.where(jnp.arange(J) < J - 1, -cw, 0.0).astype(dt), (T, K, J))
 
+    if chain_impl == "assoc":
+        cW, denW = _thomas_factor(lo_k, dW, hi_k)
+        cB, denB = _thomas_factor(lo_j, dBt, hi_j)
+
+        def pre(r):
+            zW = _thomas_apply(lo_k, cW, denW, r[:, 0])
+            zBt = _thomas_apply(lo_j, cB, denB,
+                                r[:, 1].transpose(0, 2, 1))
+            return jnp.stack([zW, zBt.transpose(0, 2, 1)], axis=1)
+
+        return pre
+
     def pre(r):
         zW = jax.lax.linalg.tridiagonal_solve(
             lo_k, dW, hi_k, r[:, 0][..., None])[..., 0]
@@ -111,37 +267,27 @@ def _line_preconditioner(g: jax.Array, cw: jax.Array):
     return pre
 
 
-@partial(jax.jit, static_argnames=("maxiter",))
-def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
-                           spec_arr: jax.Array, maxiter: int = 4000,
-                           tol: float = 1e-12) -> BatchedSolveResult:
-    """Solve a (T, J, K) batch of tiles in one fused PCG loop.
+def _pcg_loop(g: jax.Array, cw: jax.Array, b: jax.Array,
+              x0: jax.Array | None, tol, maxiter: int,
+              chain_impl: str = "lax"):
+    """Fused preconditioned-CG over a (T, 2, J, K) state stack.
 
-    ``active``: (T, J, K) activity masks; ``v_in``: (J,) shared or
-    (T, J) per-tile drive voltages; ``spec_arr`` = [r, r_on, r_off].
-    Tiles that converge early are frozen (zero step) while the shared
-    loop finishes the rest; the loop exits when every tile's relative
-    residual is <= ``tol`` or at ``maxiter``.
+    Runs in the dtype of ``g``; per-tile freeze + shared early exit.
+    ``x0=None`` starts from zero (saves the warm-start matvec).
+    Returns (x, residual_vec, iterations).
     """
-    dtype = spec_arr.dtype
-    active = active.astype(dtype)
-    v_in = jnp.broadcast_to(v_in.astype(dtype),
-                            active.shape[:1] + v_in.shape[-1:])
-    r, r_on, r_off = spec_arr[0], spec_arr[1], spec_arr[2]
-    g = jnp.where(active > 0, 1.0 / r_on, 1.0 / r_off)
-    cw = 1.0 / r
-    T, J, K = g.shape
-
-    bW = jnp.zeros((T, J, K), dtype).at[:, :, 0].set(cw * v_in)
-    b = jnp.stack([bW, jnp.zeros((T, J, K), dtype)], axis=1)
+    dtype = g.dtype
     mv = lambda x: _stencil_matvec_batched(g, cw, x)
-    pre = _line_preconditioner(g, cw)
+    pre = _line_preconditioner(g, cw, chain_impl)
 
     b_norm2 = jnp.maximum(_dot(b, b), jnp.finfo(dtype).tiny)
     tol2 = jnp.asarray(tol, dtype) ** 2
 
-    x0 = jnp.zeros_like(b)
-    r0 = b
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+        r0 = b
+    else:
+        r0 = b - mv(x0)
     z0 = pre(r0)
     rz0 = _dot(r0, z0)
     done0 = _dot(r0, r0) <= tol2 * b_norm2
@@ -170,7 +316,51 @@ def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
 
     k, x, res, _, _, _ = jax.lax.while_loop(
         cond, body, (jnp.asarray(0), x0, r0, z0, rz0, done0))
+    return x, res, k
 
+
+def _solve_core(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
+                maxiter: int, tol, precision: SolverPrecision,
+                chain_impl: str = "lax") -> BatchedSolveResult:
+    """Trace-level batched solve shared by the jitted single-device entry
+    point below and the per-shard body in
+    :mod:`repro.distributed.solver_shard` (which shard_maps it;
+    ``chain_impl`` selects the preconditioner kernel per call)."""
+    dtype = spec_arr.dtype
+    active = active.astype(dtype)
+    v_in = jnp.broadcast_to(v_in.astype(dtype),
+                            active.shape[:1] + v_in.shape[-1:])
+    r, r_on, r_off = spec_arr[0], spec_arr[1], spec_arr[2]
+    g = jnp.where(active > 0, 1.0 / r_on, 1.0 / r_off)
+    cw = 1.0 / r
+    T, J, K = g.shape
+
+    bW = jnp.zeros((T, J, K), dtype).at[:, :, 0].set(cw * v_in)
+    b = jnp.stack([bW, jnp.zeros((T, J, K), dtype)], axis=1)
+
+    if precision.is_f64:
+        x, res, iters = _pcg_loop(g, cw, b, None, tol, maxiter,
+                                  chain_impl)
+    else:
+        # Coarse phase: all CG arithmetic in f32 (half the bytes moved).
+        cdt = jnp.dtype(precision.cg_dtype)
+        x32, _, k32 = _pcg_loop(g.astype(cdt), cw.astype(cdt),
+                                b.astype(cdt), None,
+                                max(float(tol), precision.coarse_tol),
+                                min(maxiter, precision.coarse_maxiter),
+                                chain_impl)
+        x = x32.astype(dtype)
+        iters = k32
+        if precision.polish:
+            # The polish loop recomputes the true f64 residual from its
+            # warm start, so none is needed here.
+            x, res, kp = _pcg_loop(g, cw, b, x, tol,
+                                   precision.polish_maxiter, chain_impl)
+            iters = iters + kp
+        else:
+            res = b - _stencil_matvec_batched(g, cw, x)  # true f64 resid
+
+    b_norm2 = jnp.maximum(_dot(b, b), jnp.finfo(dtype).tiny)
     resid = jnp.sqrt(_dot(res, res) / b_norm2)
     currents = cw * x[:, 1, 0, :]               # (B[0,k] - 0) / r
     ideal = jnp.einsum("tjk,tj->tk", g, v_in)
@@ -178,19 +368,48 @@ def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
     nf_cols = jnp.abs(di) / jnp.maximum(ideal, 1e-30)
     nf_total = jnp.abs(jnp.sum(di, axis=-1)) / jnp.maximum(
         jnp.sum(ideal, axis=-1), 1e-30)
-    return BatchedSolveResult(currents, ideal, nf_cols, nf_total, resid, k)
+    return BatchedSolveResult(currents, ideal, nf_cols, nf_total, resid,
+                              iters)
+
+
+@partial(jax.jit,
+         static_argnames=("maxiter", "tol", "precision", "chain_impl"))
+def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
+                           spec_arr: jax.Array, maxiter: int = 4000,
+                           tol: float = 1e-12,
+                           precision: SolverPrecision = F64,
+                           chain_impl: str = "lax"
+                           ) -> BatchedSolveResult:
+    """Solve a (T, J, K) batch of tiles in one fused PCG loop.
+
+    ``active``: (T, J, K) activity masks; ``v_in``: (J,) shared or
+    (T, J) per-tile drive voltages; ``spec_arr`` = [r, r_on, r_off].
+    Tiles that converge early are frozen (zero step) while the shared
+    loop finishes the rest; the loop exits when every tile's relative
+    residual is <= ``tol`` or at ``maxiter``.  ``precision`` selects
+    the all-f64 path or the f32-CG + f64-polish mixed path;
+    ``chain_impl`` the preconditioner kernel (see
+    :func:`_line_preconditioner`).
+    """
+    return _solve_core(active, v_in, spec_arr, maxiter, tol, precision,
+                       chain_impl)
 
 
 def measured_nf_batched(active: jax.Array, spec: CrossbarSpec,
                         v_in: jax.Array | None = None,
-                        maxiter: int = 4000) -> BatchedSolveResult:
+                        maxiter: int = 4000,
+                        precision: SolverPrecision | str | None = None,
+                        chain_impl: str = "lax") -> BatchedSolveResult:
     """Circuit-measured NF of a batch of tiles in one jitted solve.
 
     ``active``: (..., J, K) with arbitrary leading batch dims (a single
     (J, K) tile becomes a batch of one); the result carries the same
     leading dims.  The f64 requirement is met with the config-scoped
     x64 flag at trace time (``jax.enable_x64`` no longer exists).
+    ``precision`` (policy, name, or None=f64) picks the arithmetic —
+    see :class:`SolverPrecision`.
     """
+    precision = resolve_precision(precision)
     with enable_x64():
         spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
         if v_in is None:
@@ -198,7 +417,9 @@ def measured_nf_batched(active: jax.Array, spec: CrossbarSpec,
         batch_shape = active.shape[:-2]
         flat = active.reshape((-1,) + active.shape[-2:])
         flat_v = v_in.reshape((-1, v_in.shape[-1])) if v_in.ndim > 1 else v_in
-        res = solve_crossbar_batched(flat, flat_v, spec_arr, maxiter)
+        res = solve_crossbar_batched(flat, flat_v, spec_arr, maxiter,
+                                     precision=precision,
+                                     chain_impl=chain_impl)
         if batch_shape != flat.shape[:1]:
             res = BatchedSolveResult(
                 *(f.reshape(batch_shape + f.shape[1:])

@@ -18,10 +18,13 @@ runs in float64 (the NF signal is ~1e-3 relative).
 This module is the *single-tile oracle path*.  Batches of tiles are
 solved by :mod:`repro.crossbar.batched`, which runs one fused PCG loop
 over the whole tile stack with per-tile convergence tracking —
-``measured_nf`` transparently routes batched inputs there.  The
+``measured_nf`` transparently routes batched inputs there (and accepts
+a :class:`~repro.crossbar.batched.SolverPrecision` policy for the
+mixed f32-CG/f64-polish path).  Layer-scale tile populations shard
+across local devices via :mod:`repro.distributed.solver_shard`.  The
 sequential ``lax.map`` walk is kept as ``measured_nf_sequential`` so the
 throughput benchmark (``benchmarks/solver_throughput.py``) and the
-equivalence tests can compare the two.
+equivalence tests can compare the paths.
 
 JAX-version pitfall: float64 is enabled with the config-scoped
 ``jax.experimental.enable_x64()`` (via :func:`repro.compat.enable_x64`)
@@ -127,7 +130,8 @@ def solve_crossbar(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
 
 
 def measured_nf(active: jax.Array, spec: CrossbarSpec,
-                v_in: jax.Array | None = None, maxiter: int = 4000):
+                v_in: jax.Array | None = None, maxiter: int = 4000,
+                precision=None):
     """Circuit-measured NF of one tile (or a batch over leading dims).
 
     This is the quantity the paper probes in SPICE; comparing it against
@@ -135,10 +139,22 @@ def measured_nf(active: jax.Array, spec: CrossbarSpec,
     Batched inputs are dispatched to the fused engine in
     :mod:`repro.crossbar.batched` (one jitted PCG over all tiles);
     single tiles take the oracle path below.
+
+    ``precision`` (a :class:`repro.crossbar.batched.SolverPrecision`,
+    a policy name, or None = all-f64) selects the engine arithmetic; a
+    single tile under a non-default policy is routed through the batched
+    engine as a batch of one and unwrapped back to a ``SolveResult``.
     """
     if active.ndim > 2:
         from repro.crossbar.batched import measured_nf_batched
-        return measured_nf_batched(active, spec, v_in, maxiter)
+        return measured_nf_batched(active, spec, v_in, maxiter, precision)
+    if precision is not None:
+        from repro.crossbar.batched import F64, measured_nf_batched, \
+            resolve_precision
+        if resolve_precision(precision) != F64:
+            res = measured_nf_batched(active[None], spec, v_in, maxiter,
+                                      precision)
+            return SolveResult(*(f[0] for f in res[:5]))
     with enable_x64():
         spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
         if v_in is None:

@@ -4,3 +4,10 @@ from repro.distributed.sharding import (  # noqa: F401
     logical_spec,
     shard,
 )
+from repro.distributed.solver_shard import (  # noqa: F401
+    ShardedSolveResult,
+    measured_nf_sharded,
+    solve_crossbar_sharded,
+    tile_mesh,
+    tile_sharding_ctx,
+)

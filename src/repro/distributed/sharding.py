@@ -24,6 +24,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Rules = dict[str, list[tuple[str, ...]]]
 
 _DEFAULT: Rules = {
+    # crossbar solver: the embarrassingly-parallel tile batch axis
+    # (repro.distributed.solver_shard); a dedicated "tiles" mesh wins,
+    # else the data-parallel axes of a training mesh.
+    "tiles":     [("tiles",), ("pod", "data"), ("data",)],
     # activations
     "batch":     [("pod", "data"), ("data",)],
     "seq":       [],                      # replicated (no sequence parallel)

@@ -61,6 +61,33 @@ def test_perm_is_permutation():
     assert sorted(perm.tolist()) == list(range(16))
 
 
+def test_row_order_secondary_key_survives_wide_tiles():
+    """Regression (ISSUE 2): the seed's packed float key
+    ``n * (J*16) + s/(s.max()+1)`` loses the sub-1 score term to f32
+    rounding once ``n * (J*16)`` is large (wide tiles, K/16 >= J), so
+    equal-count rows fell back to index order.  The lexsort key must
+    keep ordering equal-count rows by descending Manhattan score."""
+    J, K = 4, 4096
+    m = np.zeros((J, K), np.float32)
+    m[0, :4000] = 1          # n=4000, lower score (low-order columns)
+    m[1, 10:4010] = 1        # n=4000, higher score
+    m[2, :] = 1              # n=4096: densest, must come first
+    perm = np.asarray(manhattan.optimal_row_order(jnp.asarray(m)))
+    # densest row first; among the equal-count pair the higher-score row
+    # wins; the empty row goes last.
+    assert perm.tolist() == [2, 1, 0, 3]
+
+
+def test_row_order_ties_break_by_index():
+    """Rows identical in count AND score keep original order (lexsort
+    stability), so plans stay deterministic."""
+    m = np.zeros((4, 8), np.float32)
+    m[1, 2] = 1
+    m[3, 2] = 1              # same count, same score as row 1
+    perm = np.asarray(manhattan.optimal_row_order(jnp.asarray(m)))
+    assert perm.tolist() == [1, 3, 0, 2]
+
+
 def test_mdm_reduces_nf_bell_shaped():
     """Full MDM (reverse + sort) reduces aggregate NF on gaussian weights,
     and each ablation is internally consistent."""

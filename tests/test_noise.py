@@ -83,3 +83,15 @@ def test_calibrate_eta_against_circuit():
     first_order = 2.5 / 300e3
     assert eta > first_order            # interactions amplify
     assert eta < 2e-2                   # and stay physical
+
+
+def test_calibrate_eta_precision_policy_agrees():
+    """The mixed f32/f64 engine policy calibrates the same eta as the
+    all-f64 oracle far below the least-squares fit noise, so sweeps can
+    use it safely (the policy is threaded via repro.crossbar.batched)."""
+    from repro.core.noise import calibrate_eta
+
+    spec = CrossbarSpec(rows=32, cols=32, n_bits=8)
+    eta64 = calibrate_eta(spec, n_tiles=6)
+    etamx = calibrate_eta(spec, n_tiles=6, precision="mixed")
+    assert abs(etamx - eta64) / eta64 < 1e-8

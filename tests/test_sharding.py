@@ -46,3 +46,13 @@ def test_fsdp_pods_ruleset():
 
 def test_no_mesh_is_noop():
     assert logical_spec((4, 4), ("embed", "mlp"), None, RULES) == P()
+
+
+def test_tiles_rule_prefers_dedicated_mesh_axis():
+    # repro.distributed.solver_shard's tile batches: a dedicated "tiles"
+    # mesh wins outright ...
+    tiles = make_abstract_mesh((8,), ("tiles",))
+    assert logical_spec((512,), ("tiles",), tiles, RULES) == P("tiles")
+    # ... and on a training mesh the batch falls to the data axes.
+    assert logical_spec((512,), ("tiles",), MESH, RULES) == P("data")
+    assert logical_spec((512,), ("tiles",), POD, RULES) == P(("pod", "data"))
