@@ -16,10 +16,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitslice import bitslice, codes_to_bits, quantize_magnitude
+from repro.core.bitslice import bitslice
 from repro.core.mdm import plan_from_bits
 from repro.core.noise import noisy_magnitude
 from repro.core.tiling import CrossbarSpec
+from repro.kernels.cim_mvm.ops import cim_mvm, deploy
 from repro.launch import hlo_cost
 
 
@@ -31,7 +32,8 @@ def run(I: int = 2048, N: int = 2048, M: int = 256,
     w = jax.random.normal(key, (I, N)) * 0.02
     sliced = bitslice(w, spec.n_bits)
     plan = plan_from_bits(sliced.bits, sliced.scale, spec, "mdm")
-    codes, sign, scale = quantize_magnitude(w, spec.n_bits)
+    sign = sliced.sign
+    dep, _ = deploy(w, spec, "mdm", eta=eta, plan=plan)
     x = jax.ShapeDtypeStruct((M, I), jnp.float32)
 
     def paper_path(x, bits, sign, scale):
@@ -39,14 +41,10 @@ def run(I: int = 2048, N: int = 2048, M: int = 256,
         mag = noisy_magnitude(bits, scale, plan, spec, eta)
         return x @ (mag * sign.astype(jnp.float32))
 
-    def fused_path(x, codes_signed, scale):
-        """On-the-fly expansion from int16 codes (XLA-fused analogue of
-        the cim_mvm kernel; the kernel itself needs Mosaic/TPU)."""
-        mag_codes = jnp.abs(codes_signed.astype(jnp.int32)).astype(jnp.uint32)
-        sgn = jnp.where(codes_signed < 0, -1.0, 1.0)
-        bits = codes_to_bits(mag_codes, spec.n_bits)
-        magn = noisy_magnitude(bits, scale, plan, spec, eta)
-        return x @ (magn * sgn)
+    # The fused path IS the production XLA fallback of the cim_mvm op
+    # (repro.kernels.cim_mvm.xla): int16 codes expanded on the fly.
+    def fused_path(x, dep):
+        return cim_mvm(x, dep, impl="xla")
 
     t0 = time.perf_counter()
     a_bits = jax.ShapeDtypeStruct(sliced.bits.shape, jnp.uint8)
@@ -55,9 +53,8 @@ def run(I: int = 2048, N: int = 2048, M: int = 256,
     c_paper = hlo_cost.analyze(
         jax.jit(paper_path).lower(x, a_bits, a_sign, a_scale)
         .compile().as_text())
-    codes16 = jax.ShapeDtypeStruct((I, N), jnp.int16)
     c_fused = hlo_cost.analyze(
-        jax.jit(fused_path).lower(x, codes16, a_scale).compile().as_text())
+        jax.jit(fused_path).lower(x, dep).compile().as_text())
 
     # analytic kernel bound: weight-stream = 2 B/weight, x + y once
     kernel_bytes = 2 * I * N + 4 * M * I + 4 * M * N

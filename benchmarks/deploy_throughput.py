@@ -1,0 +1,225 @@
+"""Benchmark: whole-model CIM deployment engine (repro.deploy).
+
+Three measurements on a multi-layer model (>= 16 matrices, mixed
+shapes — the whole-network granularity remapping schemes are evaluated
+at):
+
+1. **Whole-model planning**: the per-layer ``plan_layer`` loop vs the
+   fused engine (``plan_matrices``).  Cold numbers are the deployment
+   scenario — a fresh engine process planning a new checkpoint, where
+   the per-layer loop pays one jit compile per distinct layer shape
+   while the fused engine compiles a single population planner.  Warm
+   (steady-state, jits cached) numbers are reported alongside.
+2. **Cache-hit redeploy**: replanning the same checkpoint through the
+   persistent ``PlanCache`` vs the cold plan.
+3. **CIM serving**: ``ServeEngine`` tokens/s on a small config with
+   ``cim.enabled`` (backend-dispatched ``cim_mvm``) vs the clean
+   engine.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mdm import plan_layer
+from repro.core.tiling import CrossbarSpec
+from repro.deploy import PlanCache, plan_matrices
+
+# A CNN/transformer-ish whole-model shape mix: many distinct layer
+# geometries (16 here), several layers per geometry.
+SHAPE_MIX = [
+    (256, 256), (256, 512), (512, 256), (384, 256),
+    (256, 384), (512, 512), (320, 256), (256, 320),
+    (448, 256), (256, 448), (512, 384), (384, 512),
+    (640, 256), (256, 640), (384, 384), (576, 256),
+]
+
+
+def _model_matrices(n_per_shape: int, key) -> dict[str, np.ndarray]:
+    """Host-resident weights, as a checkpoint being deployed would be."""
+    mats = {}
+    k = 0
+    for layer in range(n_per_shape):
+        for (i, n) in SHAPE_MIX:
+            k += 1
+            mats[f"L{layer}/{i}x{n}"] = np.asarray(
+                jax.random.normal(jax.random.fold_in(key, k), (i, n)) * 0.02)
+    return mats
+
+
+def _block_plans(plans) -> None:
+    jax.block_until_ready([p.row_perm for p in plans.values()
+                           if isinstance(p.row_perm, jax.Array)])
+
+
+def _time_per_layer(mats, spec) -> float:
+    t0 = time.perf_counter()
+    plans = {n: plan_layer(w, spec, "mdm") for n, w in mats.items()}
+    _block_plans(plans)
+    return time.perf_counter() - t0
+
+
+def _time_fused(mats, spec, cache=None) -> float:
+    t0 = time.perf_counter()
+    plans, _ = plan_matrices(mats, spec, "mdm", cache=cache)
+    _block_plans(plans)
+    return time.perf_counter() - t0
+
+
+def _xla_vs_interpret(verbose: bool) -> dict:
+    """The dispatch criterion at a 2048x2048 layer: the fused XLA
+    fallback must match the interpret kernel numerically and beat it by
+    a wide margin — interpret mode walks the grid block-by-block in
+    Python and must never land on a serving path."""
+    from repro.kernels.cim_mvm.ops import cim_mvm, deploy
+
+    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    w = jax.random.normal(jax.random.PRNGKey(7), (2048, 2048)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(8), (64, 2048))
+    dep, _ = deploy(w, spec, "mdm")
+
+    y = cim_mvm(x, dep, impl="xla")
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(cim_mvm(x, dep, impl="xla"))
+    t_xla = (time.perf_counter() - t0) / 3
+
+    yi = cim_mvm(x, dep, impl="interpret")   # compile/trace
+    jax.block_until_ready(yi)
+    t0 = time.perf_counter()
+    jax.block_until_ready(cim_mvm(x, dep, impl="interpret"))
+    t_int = time.perf_counter() - t0
+
+    ya, yb = np.asarray(y), np.asarray(yi)
+    rel = np.abs(ya - yb).max() / np.abs(yb).max()
+    out = {"xla_s": t_xla, "interpret_s": t_int,
+           "speedup": t_int / t_xla, "max_rel_err": float(rel)}
+    if verbose:
+        print(f"  cim_mvm 2048x2048: xla {t_xla*1e3:.1f} ms vs interpret "
+              f"{t_int*1e3:.0f} ms -> x{out['speedup']:.1f} "
+              f"(rel err {rel:.1e})")
+    return out
+
+
+def _serving_tokens_per_s(verbose: bool) -> dict:
+    from repro.configs.base import CimConfig, ModelConfig
+    from repro.serve import ServeEngine
+
+    cfg = ModelConfig(name="deploy-bench", n_layers=4, d_model=128,
+                      n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=512,
+                      block_pattern=("attn",), remat="none",
+                      dtype="float32", attn_chunk=64)
+    from repro.models.model import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                 cfg.vocab_size)
+    out = {}
+    for label, ccfg in [
+        ("clean", cfg),
+        ("cim_mdm", cfg.replace(cim=CimConfig(enabled=True, mode="mdm"))),
+    ]:
+        cache_dir = tempfile.mkdtemp(prefix="mdm_bench_cache_")
+        try:
+            t0 = time.perf_counter()
+            eng = ServeEngine(ccfg, params, max_seq=128,
+                              plan_cache=PlanCache(cache_dir))
+            t_init = time.perf_counter() - t0
+            n_tok = 32
+            eng.generate(prompts, 2)        # compile prefill + decode
+            t0 = time.perf_counter()
+            toks = eng.generate(prompts, n_tok)
+            jax.block_until_ready(toks)
+            dt = time.perf_counter() - t0
+            tps = toks.shape[0] * n_tok / dt
+            out[label] = {"tokens_per_s": tps, "init_s": t_init}
+            if label != "clean" and eng.deploy_report:
+                out[label]["deploy_report"] = {
+                    k: eng.deploy_report[k]
+                    for k in ("n_matrices", "tiles_planned", "cache_hits",
+                              "cache_misses")}
+            if verbose:
+                print(f"  serve[{label}]: {tps:.0f} tok/s "
+                      f"(engine init {t_init:.2f}s)")
+        finally:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+    out["cim_slowdown"] = (out["clean"]["tokens_per_s"]
+                           / out["cim_mdm"]["tokens_per_s"])
+    return out
+
+
+def _planning_matrix(mats, spec: CrossbarSpec, verbose: bool) -> dict:
+    """Per-layer vs fused vs cache-hit timings at one crossbar geometry.
+
+    Order matters: the per-layer loop runs first so neither path
+    benefits from the other's compiles; "cold" therefore reflects a
+    fresh deployment process for both.
+    """
+    n_tiles = sum(int(np.prod(spec.grid(*w.shape)))
+                  for w in mats.values())
+    t_pl_cold = _time_per_layer(mats, spec)
+    cache_dir = tempfile.mkdtemp(prefix="mdm_bench_cache_")
+    try:
+        t_cold = _time_fused(mats, spec, cache=PlanCache(cache_dir))
+        # Best-of-5 (the repo's interleaved best-of timing convention):
+        # a full-model hit is ~tens of ms and visibly jittered by CI
+        # box load.
+        t_hit = min(_time_fused(mats, spec, cache=PlanCache(cache_dir))
+                    for _ in range(5))
+        t_pl_warm = _time_per_layer(mats, spec)
+        t_warm = _time_fused(mats, spec)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    out = {
+        "n_matrices": len(mats),
+        "n_shapes": len(SHAPE_MIX),
+        "n_tiles": n_tiles,
+        "per_layer_cold_s": t_pl_cold,
+        "fused_cold_s": t_cold,
+        "speedup_cold": t_pl_cold / t_cold,
+        "per_layer_warm_s": t_pl_warm,
+        "fused_warm_s": t_warm,
+        "speedup_warm": t_pl_warm / t_warm,
+        "cache_hit_s": t_hit,
+        "cache_hit_speedup_vs_cold": t_cold / t_hit,
+        "fused_us_per_tile_warm": t_warm / n_tiles * 1e6,
+    }
+    if verbose:
+        print(f"  whole-model planning @ {spec.rows}x{spec.cols} "
+              f"({len(mats)} matrices, {len(SHAPE_MIX)} shapes, "
+              f"{n_tiles} tiles):")
+        print(f"    cold: per-layer {t_pl_cold:.2f}s vs fused "
+              f"{t_cold:.2f}s -> x{out['speedup_cold']:.1f}")
+        print(f"    warm: per-layer {t_pl_warm:.2f}s vs fused "
+              f"{t_warm:.2f}s -> x{out['speedup_warm']:.1f}")
+        print(f"    cache-hit redeploy {t_hit*1e3:.0f} ms -> "
+              f"x{out['cache_hit_speedup_vs_cold']:.1f} vs cold plan")
+    return out
+
+
+def run(n_per_shape: int = 3, verbose: bool = True, serve: bool = True
+        ) -> dict:
+    mats = _model_matrices(n_per_shape, jax.random.PRNGKey(0))
+    # Both solver-benchmark geometries: 64x64 is the paper's tile size
+    # (planning is work-bound there on small hosts); 32x32 packs ~8x
+    # the tiles per weight byte, the regime where planning dominates
+    # the cache-lookup costs.
+    out: dict = {
+        "planning_64x64": _planning_matrix(
+            mats, CrossbarSpec(rows=64, cols=64, n_bits=8), verbose),
+        "planning_32x32": _planning_matrix(
+            mats, CrossbarSpec(rows=32, cols=32, n_bits=8), verbose),
+    }
+    out["cim_mvm_2048"] = _xla_vs_interpret(verbose)
+    if serve:
+        out["serving"] = _serving_tokens_per_s(verbose)
+    return out
+
+
+if __name__ == "__main__":
+    run()

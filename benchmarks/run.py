@@ -26,6 +26,7 @@ if "xla_force_host_platform_device_count" not in _flags:
 from benchmarks import (  # noqa: E402
     accuracy_noise,
     cim_traffic,
+    deploy_throughput,
     hypothesis_fit,
     nf_reduction,
     planning_cost,
@@ -68,6 +69,10 @@ def main() -> None:
             seq_tiles=32 if q else 64),
         # §Perf: fused CIM path vs materialised bit-planes
         "cim_traffic": lambda: cim_traffic.run(),
+        # §Perf: whole-model deployment engine — fused vs per-layer
+        # planning, cache-hit redeploy, CIM serving tokens/s
+        "deploy_throughput": lambda: deploy_throughput.run(
+            n_per_shape=1 if q else 3),
         # §Dry-run / §Roofline summary
         "roofline_table": lambda: roofline_table.run(),
     }
@@ -93,8 +98,20 @@ def main() -> None:
     print("\n".join(csv_lines))
     out = os.path.join(os.path.dirname(__file__), "..", "results")
     os.makedirs(out, exist_ok=True)
-    with open(os.path.join(out, "benchmarks.json"), "w") as f:
-        json.dump(results, f, indent=1, default=str)
+    path = os.path.join(out, "benchmarks.json")
+    # Merge into the existing record so `--only NAME` refreshes one
+    # entry instead of clobbering the rest of the matrix.
+    merged = {}
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (FileNotFoundError, ValueError):
+        pass
+    if not isinstance(merged, dict):
+        merged = {}
+    merged.update(results)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=str)
 
 
 def _derive(name: str, res: dict) -> str:
@@ -132,6 +149,12 @@ def _derive(name: str, res: dict) -> str:
         if name == "cim_traffic":
             return (f"kernel_traffic_reduction=x{res['kernel_ratio']:.1f};"
                     f"xla=x{res['xla_ratio']:.2f}")
+        if name == "deploy_throughput":
+            p = res["planning_64x64"]
+            return (f"fused_cold=x{p['speedup_cold']:.1f};"
+                    f"cache_hit=x{p['cache_hit_speedup_vs_cold']:.1f};"
+                    f"serve_cim="
+                    f"{res['serving']['cim_mdm']['tokens_per_s']:.0f}tok/s")
     except Exception as e:
         return f"derive_error:{e!r}"
     return "ok"

@@ -22,6 +22,11 @@ Backend capability probes also live here:
   leading batch dimensions on the active backend.  The batched crossbar
   engine's line preconditioner depends on it; backends without the
   batched lowering fall back to the Jacobi diagonal.
+* :func:`has_pallas_lowering` — whether ``pallas_call`` compiles and
+  runs natively (non-interpret) on the active backend.  The CIM matmul
+  dispatch (``repro.kernels.cim_mvm.ops.cim_mvm``) uses it to pick the
+  Pallas kernel where it lowers and the fused XLA fallback everywhere
+  else, so interpret mode never lands on a hot path.
 """
 from __future__ import annotations
 
@@ -114,6 +119,48 @@ def has_batched_tridiagonal_solve(platform: str | None = None) -> bool:
     t.start()
     t.join()
     return bool(out and out[0])
+
+
+@lru_cache(maxsize=None)
+def has_pallas_lowering(platform: str | None = None) -> bool:
+    """Probe: does ``pallas_call`` lower natively on this backend?
+
+    Executes a trivial Pallas kernel with ``interpret=False`` on
+    ``platform`` (default: the active backend) and reports whether it
+    compiles and returns the right answer.  TPU (Mosaic) passes; CPU/GPU
+    builds without a Triton/Mosaic-GPU lowering raise at compile time
+    and report False, routing callers to their fused XLA fallbacks.
+    Runs in a worker thread for the same trace-escape reason as
+    :func:`has_batched_tridiagonal_solve`; cached per platform.
+    """
+    import threading
+
+    out: list[bool] = []
+    t = threading.Thread(target=lambda: out.append(_probe_pallas(platform)),
+                         daemon=True)
+    t.start()
+    t.join()
+    return bool(out and out[0])
+
+
+def _probe_pallas(platform: str | None) -> bool:
+    try:
+        import numpy as np
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1.0
+
+        x = np.zeros((8, 128), np.float32)
+        if platform:
+            x = jax.device_put(x, jax.devices(platform)[0])
+        out = np.asarray(pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((8, 128), np.float32),
+            interpret=False)(x))
+        return bool(np.all(out == 1.0))
+    except Exception:  # no native lowering -> XLA fallback
+        return False
 
 
 def _probe_tridiagonal(platform: str | None) -> bool:

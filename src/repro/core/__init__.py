@@ -9,6 +9,13 @@ from repro.core.manhattan import (  # noqa: F401
     row_counts,
     row_scores,
 )
-from repro.core.mdm import MODES, MdmPlan, plan_from_bits, plan_layer  # noqa: F401
+from repro.core.mdm import (  # noqa: F401
+    MODES,
+    MdmPlan,
+    plan_from_bits,
+    plan_from_masks,
+    plan_layer,
+    plan_tile_population,
+)
 from repro.core.noise import PAPER_ETA, noisy_weights, tree_noisy_weights  # noqa: F401
 from repro.core.tiling import CrossbarSpec, tile_masks  # noqa: F401

@@ -37,6 +37,38 @@ class SlicedWeights(NamedTuple):
         return self.bits.shape[-1]
 
 
+def magnitude_scale(w: jax.Array, n_bits: int) -> jax.Array:
+    """Default quantisation scale so |w|/scale lands in [0, 1).
+
+    The headroom factor 2^K/(2^K - 1) makes the max magnitude land exactly
+    on the all-ones code, keeping round-off within 1/2 LSB everywhere.
+    Factored out so deployment planners can precompute the scale with the
+    exact op sequence this module uses (a re-derived max can differ by an
+    ulp under a different reduction fusion, shifting rounding boundaries).
+    """
+    levels = (1 << n_bits) - 1
+    return (jnp.max(jnp.abs(w)) * ((1 << n_bits) / levels)
+            * (1.0 + 1e-6) + 1e-30)
+
+
+def magnitude_scale_host(w, n_bits: int):
+    """Host (numpy) mirror of :func:`magnitude_scale`, bit-identical.
+
+    Each step reproduces the jnp chain above under f32 weak-scalar
+    promotion (max is rounding-free, the scalar constants are rounded
+    to f32 before each op, exactly as XLA does) — keep the two in
+    lockstep if the formula ever changes.  Lets deployment planners
+    bit-slice whole models on the host with zero device dispatches.
+    """
+    import numpy as np
+
+    levels = (1 << n_bits) - 1
+    s = np.float32(np.max(np.abs(np.asarray(w, np.float32))))
+    s = np.float32(s * np.float32((1 << n_bits) / levels))
+    s = np.float32(s * np.float32(1.0 + 1e-6))
+    return np.float32(s + np.float32(1e-30))
+
+
 def quantize_magnitude(w: jax.Array, n_bits: int, scale: jax.Array | None = None):
     """Normalise |w| by ``scale`` and quantise to ``n_bits`` fractional bits.
 
@@ -45,10 +77,7 @@ def quantize_magnitude(w: jax.Array, n_bits: int, scale: jax.Array | None = None
     """
     mag = jnp.abs(w)
     if scale is None:
-        # Headroom factor 2^K/(2^K - 1) makes the max magnitude land exactly
-        # on the all-ones code, keeping round-off within 1/2 LSB everywhere.
-        levels = (1 << n_bits) - 1
-        scale = jnp.max(mag) * ((1 << n_bits) / levels) * (1.0 + 1e-6) + 1e-30
+        scale = magnitude_scale(w, n_bits)
     levels = (1 << n_bits) - 1
     codes = jnp.clip(jnp.round(mag / scale * (1 << n_bits)), 0, levels)
     codes = codes.astype(jnp.uint32)

@@ -56,33 +56,68 @@ class MdmPlan(NamedTuple):
         return (b - a) / jnp.maximum(b, 1e-30)
 
 
-def _identity_perms(ti: int, tn: int, rows: int) -> jax.Array:
-    return jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32), (ti, tn, rows))
-
-
 @partial(jax.jit, static_argnames=("spec", "mode"))
-def plan_from_bits(bits: jax.Array, scale: jax.Array, spec: CrossbarSpec,
-                   mode: str = "mdm") -> MdmPlan:
-    """Build an MDM plan from bit-sliced weights (I, N, K)."""
+def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
+                         mode: str = "mdm") -> tuple[jax.Array, jax.Array,
+                                                     jax.Array, jax.Array]:
+    """Fused planning core over a flat tile population (T, rows, cols).
+
+    Scoring, lexsort and NF bookkeeping are vmapped over the whole
+    population in one jit — the tiles may come from one layer's grid or
+    from every layer of a model at once (``repro.deploy.planner``
+    amortises planning this way, the same trick the batched circuit
+    solver uses for its tile populations).
+
+    Returns (row_perm, row_position, nf_before, nf_after), each with a
+    leading T dim.
+    """
     if mode not in MODES:
         raise ValueError(f"mode={mode!r} not in {MODES}")
-    masks = tile_masks(bits, spec)                       # (Ti, Tn, R, C)
-    ti, tn, rows, _ = masks.shape
+    T, rows = masks.shape[0], masks.shape[1]
     nf_before = manhattan.nonideality_factor(masks, spec.r, spec.r_on)
 
     rev = mode in ("reverse", "mdm")
     placed = reverse_dataflow(masks) if rev else masks
 
     if mode in ("sort", "mdm"):
-        perm = jax.vmap(jax.vmap(manhattan.optimal_row_order))(placed)
+        perm = jax.vmap(manhattan.optimal_row_order)(placed)
         perm = perm.astype(jnp.int32)
         placed = jnp.take_along_axis(placed, perm[..., None], axis=-2)
     else:
-        perm = _identity_perms(ti, tn, rows)
+        perm = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32), (T, rows))
 
     position = jnp.argsort(perm, axis=-1).astype(jnp.int32)
     nf_after = manhattan.nonideality_factor(placed, spec.r, spec.r_on)
-    return MdmPlan(perm, position, jnp.asarray(rev), nf_before, nf_after, scale)
+    return perm, position, nf_before, nf_after
+
+
+def plan_from_masks(masks: jax.Array, scale: jax.Array, spec: CrossbarSpec,
+                    mode: str = "mdm") -> MdmPlan:
+    """Build an MDM plan from tile activity masks (Ti, Tn, rows, cols).
+
+    The front door for callers that already hold the physical tile
+    layout (``deploy()`` computes it once and shares it with
+    ``placed_masks``, instead of re-deriving the bit planes twice).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode={mode!r} not in {MODES}")
+    ti, tn, rows, cols = masks.shape
+    flat = masks.reshape(ti * tn, rows, cols)
+    perm, position, nf_before, nf_after = plan_tile_population(
+        flat, spec, mode)
+    rev = mode in ("reverse", "mdm")
+    return MdmPlan(perm.reshape(ti, tn, rows),
+                   position.reshape(ti, tn, rows),
+                   jnp.asarray(rev),
+                   nf_before.reshape(ti, tn),
+                   nf_after.reshape(ti, tn), scale)
+
+
+@partial(jax.jit, static_argnames=("spec", "mode"))
+def plan_from_bits(bits: jax.Array, scale: jax.Array, spec: CrossbarSpec,
+                   mode: str = "mdm") -> MdmPlan:
+    """Build an MDM plan from bit-sliced weights (I, N, K)."""
+    return plan_from_masks(tile_masks(bits, spec), scale, spec, mode)
 
 
 def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm") -> MdmPlan:
@@ -93,9 +128,15 @@ def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm") -> MdmPlan:
     return plan_from_bits(sliced.bits, sliced.scale, spec, mode)
 
 
-def placed_masks(bits: jax.Array, plan: MdmPlan, spec: CrossbarSpec) -> jax.Array:
-    """Physical tile activity masks under a plan (for solver validation)."""
-    masks = tile_masks(bits, spec)
+def placed_masks(bits: jax.Array, plan: MdmPlan, spec: CrossbarSpec,
+                 masks: jax.Array | None = None) -> jax.Array:
+    """Physical tile activity masks under a plan (for solver validation).
+
+    Pass ``masks`` to reuse an already-derived ``tile_masks(bits, spec)``
+    layout instead of recomputing the bit-plane arrangement.
+    """
+    if masks is None:
+        masks = tile_masks(bits, spec)
     masks = jnp.where(jnp.asarray(plan.reversed_dataflow),
                       reverse_dataflow(masks), masks)
     return jnp.take_along_axis(masks, plan.row_perm[..., None], axis=-2)

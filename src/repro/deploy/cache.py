@@ -1,0 +1,175 @@
+"""Persistent, content-addressed MDM plan cache.
+
+Planning a whole checkpoint is a one-off deployment cost, but it is paid
+again on every engine restart unless the plans persist.  Each layer's
+plan is content-addressed by (weight bytes, crossbar spec, mode, format
+version): redeploying an unchanged checkpoint is a pure cache read
+(~free), while any change to the weights, the device spec or the
+deployment mode changes the key and forces a replan — there is no
+staleness to manage.
+
+Plans are stored one file per key under a two-level fan-out directory
+in a fixed binary layout (17-byte header: flags, version, padding,
+ti/tn/rows as u32-LE; then row_perm+row_position in the smallest uint
+dtype that holds ``rows``, the two NF grids as f32, and the f32 scale).
+A hit is one ``read()`` plus ``np.frombuffer`` views — zip-based
+``.npz`` costs ~10ms of zipfile bookkeeping per entry and even raw
+``.npy`` records pay a Python header parse each, which together
+dominate a whole-model cache hit.  Loaded plans keep numpy leaves —
+consumers touch them through jnp ops, which transfer on first use — so
+a full-model cache hit does no device work at all.  The
+default root sits next to the persistent JAX compilation cache when one
+is configured (``.jax_cache/`` -> ``.mdm_plan_cache/``), mirroring how
+compile artefacts already persist across runs; otherwise it falls back
+to ``~/.cache/repro/mdm_plans``.  Writes are atomic (tmp +
+``os.replace``), so a crash mid-write never corrupts an entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+
+import jax
+import numpy as np
+
+from repro.core.mdm import MdmPlan
+from repro.core.tiling import CrossbarSpec
+
+# Bump when the MdmPlan layout or planning semantics change: old
+# entries become unreachable (different keys) instead of wrongly hit.
+PLAN_CACHE_VERSION = 1
+
+
+def default_cache_dir() -> str:
+    """Plan-cache root: next to the JAX compilation cache if configured."""
+    jax_dir = jax.config.jax_compilation_cache_dir
+    if jax_dir:
+        parent = os.path.dirname(os.path.abspath(jax_dir))
+        return os.path.join(parent, ".mdm_plan_cache")
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "mdm_plans")
+
+
+def weight_fingerprint(w) -> str:
+    """blake2b over the raw weight bytes + shape + dtype.
+
+    blake2b digests ~2x faster than sha256 on large buffers, the array
+    buffer is hashed zero-copy, and hashing releases the GIL — the
+    fingerprint pass is most of a whole-model cache hit's cost, and the
+    fused planner runs it from a thread pool.
+    """
+    arr = np.asarray(w)
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    h = hashlib.blake2b(digest_size=32)
+    h.update(repr((arr.shape, str(arr.dtype))).encode())
+    h.update(arr.data)
+    return h.hexdigest()
+
+
+def plan_key(w_fingerprint: str, spec: CrossbarSpec, mode: str) -> str:
+    """Content address of one layer's plan."""
+    payload = json.dumps({
+        "version": PLAN_CACHE_VERSION,
+        "weights": w_fingerprint,
+        "spec": list(spec),
+        "mode": mode,
+    }, sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+
+class PlanCache:
+    """Filesystem-backed MdmPlan store keyed by :func:`plan_key`.
+
+    ``get``/``put`` are thread-safe (the fused planner probes entries
+    from a thread pool); only the stats counters need the lock — file
+    writes are already atomic via tmp + rename.
+    """
+
+    def __init__(self, root: str | None = None):
+        self.root = root or default_cache_dir()
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".mdmplan")
+
+    @staticmethod
+    def _perm_dtype(rows: int):
+        # Permutation entries are < rows: the compact dtype cuts the
+        # bytes a whole-model cache hit reads by up to 4x.
+        return (np.uint8 if rows <= 256 else
+                np.uint16 if rows <= 65536 else np.uint32)
+
+    def get(self, key: str) -> MdmPlan | None:
+        try:
+            with open(self._path(key), "rb") as f:
+                buf = f.read()
+            if len(buf) < 17 or buf[1] != PLAN_CACHE_VERSION:
+                raise ValueError("bad plan entry header")
+            ti, tn, rows = np.frombuffer(buf, "<u4", 3, offset=5)
+            ti, tn, rows = int(ti), int(tn), int(rows)
+            perm_dt = self._perm_dtype(rows)
+            n_perm = 2 * ti * tn * rows
+            off = 17
+            perms = np.frombuffer(buf, perm_dt, n_perm, offset=off)
+            off += n_perm * perms.itemsize
+            nfs = np.frombuffer(buf, "<f4", 2 * ti * tn + 1, offset=off)
+            perms = perms.astype(np.int32).reshape(2, ti, tn, rows)
+            plan = MdmPlan(
+                row_perm=perms[0], row_position=perms[1],
+                reversed_dataflow=np.bool_(buf[0] & 1),
+                nf_before=nfs[:ti * tn].reshape(ti, tn),
+                nf_after=nfs[ti * tn:2 * ti * tn].reshape(ti, tn),
+                scale=np.float32(nfs[-1]))
+        except (FileNotFoundError, ValueError, OSError):
+            with self._lock:
+                self.stats.misses += 1
+            return None
+        with self._lock:
+            self.stats.hits += 1
+        return plan
+
+    def put(self, key: str, plan: MdmPlan) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            perm = np.asarray(plan.row_perm)
+            ti, tn, rows = perm.shape
+            perm_dt = self._perm_dtype(rows)
+            with os.fdopen(fd, "wb") as f:
+                f.write(bytes([int(bool(plan.reversed_dataflow)),
+                               PLAN_CACHE_VERSION, 0, 0, 0]))
+                f.write(np.asarray([ti, tn, rows], "<u4").tobytes())
+                f.write(np.stack([
+                    perm, np.asarray(plan.row_position)]).astype(
+                        perm_dt).tobytes())
+                f.write(np.concatenate([
+                    np.asarray(plan.nf_before, np.float32).ravel(),
+                    np.asarray(plan.nf_after, np.float32).ravel(),
+                    np.asarray(plan.scale, np.float32).reshape(1),
+                ]).astype("<f4").tobytes())
+            os.replace(tmp, path)
+        except OSError:
+            # Cache is best-effort: a full/read-only disk must not fail
+            # the deployment itself.
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return
+        with self._lock:
+            self.stats.puts += 1

@@ -1,0 +1,171 @@
+"""Whole-model CIM deployment: model params -> routed CimDeployments.
+
+Walks a model's parameter pytree, extracts every deployable projection
+matrix (attention q/k/v/o and dense-MLP up/gate/down — the matmuls the
+model zoo routes through ``cim_mvm`` when ``cfg.cim.enabled`` is set),
+plans all of them in one fused pass (:mod:`repro.deploy.planner`,
+through the persistent :class:`repro.deploy.cache.PlanCache`), and
+packages per-slot stacks of :class:`CimDeployment` shaped for the
+model's ``lax.scan`` over pattern repeats.
+
+Embeddings, the LM head, norms/biases and recurrent/SSM state weights
+stay digital (standard CIM practice: crossbars host the dense
+projection GEMMs); MoE expert banks are skipped for now — their (E, I,
+N) layout wants expert-axis-aware tiling, tracked in ROADMAP.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bitslice import magnitude_scale_host
+from repro.core.mdm import MdmPlan
+from repro.core.tiling import CrossbarSpec
+from repro.deploy.cache import PlanCache
+from repro.deploy.planner import plan_matrices, quantize_codes_host
+from repro.distributed.sharding import ShardingCtx
+from repro.kernels.cim_mvm.ops import CimDeployment
+
+# Projection parameters the serving path routes through cim_mvm, with
+# the reshape that turns each per-layer tensor into a 2-D matmul weight.
+_QKV_NAMES = ("wq", "wk", "wv", "attn_wq", "attn_wk", "attn_wv")
+_OUT_NAMES = ("wo", "attn_wo")
+_MLP_NAMES = ("ffn_w_gate", "ffn_w_up", "ffn_w_down")
+DEPLOYABLE = _QKV_NAMES + _OUT_NAMES + _MLP_NAMES
+
+
+def _as_matrix(name: str, w) -> np.ndarray:
+    """Per-layer projection tensor -> its (in_dim, out_dim) matmul view."""
+    if name in _QKV_NAMES:        # (D, H, Dh) -> (D, H*Dh)
+        return w.reshape(w.shape[0], -1)
+    if name in _OUT_NAMES:        # (H, Dh, D) -> (H*Dh, D)
+        return w.reshape(-1, w.shape[-1])
+    return w                      # MLP projections are already 2-D
+
+
+def spec_from_config(cfg: ModelConfig) -> CrossbarSpec:
+    c = cfg.cim
+    return CrossbarSpec(rows=c.rows, cols=c.cols, n_bits=c.n_bits,
+                        r=c.r, r_on=c.r_on, r_off=c.r_off)
+
+
+def collect_projection_matrices(params: dict, cfg: ModelConfig
+                                ) -> dict[str, np.ndarray]:
+    """name "slot/param/repeat" -> 2-D f32 host matrix for every
+    deployable projection in the model, in deterministic traversal
+    order.
+
+    Matrices land on the host (one device->host pull per stacked
+    parameter): fingerprinting and the fused planner's bit-slicing are
+    host-side anyway, so keeping a device-resident f32 copy would only
+    add an upload plus two full download sweeps per deployment.
+    bf16 -> f32 widening is exact, so the cast matches the device cast.
+    """
+    mats: dict[str, np.ndarray] = {}
+    for i, bt in enumerate(cfg.block_pattern):
+        slot = f"slot{i}_{bt}"
+        slot_params = params.get(slot, {})
+        for pname in DEPLOYABLE:
+            if pname not in slot_params:
+                continue
+            stacked = np.asarray(slot_params[pname])  # (R, ...) layers
+            for r in range(stacked.shape[0]):
+                mats[f"{slot}/{pname}/{r}"] = np.asarray(
+                    _as_matrix(pname, stacked[r]), np.float32)
+    return mats
+
+
+def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
+                            eta: float, plan: MdmPlan) -> CimDeployment:
+    """Host mirror of ``repro.kernels.cim_mvm.ops.deploy`` packaging.
+
+    Quantises and lays out one planned matrix entirely in numpy —
+    bit-identical to the device path (pinned in tests/test_deploy.py)
+    but free of the ~10 eager device dispatches per matrix that a
+    whole-checkpoint packaging loop would otherwise pay (the planner
+    already amortised planning; packaging must not reintroduce the
+    per-matrix cost structure).  The array leaves stay on host; the
+    per-slot ``jnp.stack`` in :func:`deploy_model_params` uploads each
+    stacked field once.
+    """
+    I, N = w.shape
+    scale = magnitude_scale_host(w, spec.n_bits)
+    codes = quantize_codes_host(w, scale, spec.n_bits)
+    sign = np.where(np.asarray(w, np.float32) < 0, -1, 1).astype(np.int32)
+
+    ti, tn = spec.grid(I, N)
+    rows, wpt = spec.rows, spec.weights_per_tile
+    i_pad, n_pad = ti * rows, tn * wpt
+    signed = (codes.astype(np.int32) * sign).astype(np.int16)
+    signed = np.pad(signed, ((0, i_pad - I), (0, n_pad - N)))
+
+    qi = np.arange(i_pad) % rows
+    tii = np.arange(i_pad) // rows
+    pos = np.asarray(plan.row_position)[tii, :, qi].astype(np.int32)
+
+    return CimDeployment(
+        codes=signed, pos=pos, scale=np.float32(scale),
+        n_bits=spec.n_bits, wpt=wpt, cols=spec.cols, eta=float(eta),
+        reversed_df=mode in ("reverse", "mdm"), in_dim=I, out_dim=N)
+
+
+def deploy_model_params(params: dict, cfg: ModelConfig,
+                        cache: PlanCache | None = None,
+                        ctx: ShardingCtx | None = None
+                        ) -> tuple[dict, dict]:
+    """Deploy every projection matrix of a model onto crossbars.
+
+    Returns (cim_tree, report): ``cim_tree[slot][param]`` is one
+    :class:`CimDeployment` whose array leaves are stacked over the
+    slot's pattern repeats — exactly the xs layout ``apply_model``'s
+    layer scan consumes.  The report carries the fused-planning stats
+    plus packaging wall-clock.
+    """
+    t0 = time.perf_counter()
+    spec = spec_from_config(cfg)
+    mode, eta = cfg.cim.mode, cfg.cim.eta
+
+    mats = collect_projection_matrices(params, cfg)
+    plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx)
+
+    cim_tree: dict = {}
+    for i, bt in enumerate(cfg.block_pattern):
+        slot = f"slot{i}_{bt}"
+        slot_deps: dict = {}
+        for pname in DEPLOYABLE:
+            if pname not in params.get(slot, {}):
+                continue
+            reps = params[slot][pname].shape[0]
+            deps = [package_deployment_host(
+                mats[f"{slot}/{pname}/{r}"], spec, mode, eta,
+                plans[f"{slot}/{pname}/{r}"]) for r in range(reps)]
+            # One upload per stacked field (codes/pos/scale), not per
+            # matrix: the stack is the device hand-off point.
+            slot_deps[pname] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *deps)
+        cim_tree[slot] = slot_deps
+
+    report = dict(report)
+    report["deploy_seconds"] = time.perf_counter() - t0
+    report["n_slots"] = len(cim_tree)
+    return cim_tree, report
+
+
+def deploy_matrices(mats: dict[str, jax.Array], spec: CrossbarSpec,
+                    mode: str = "mdm", eta: float | None = None,
+                    cache: PlanCache | None = None,
+                    ctx: ShardingCtx | None = None
+                    ) -> tuple[dict[str, CimDeployment], dict]:
+    """Fused deployment of a plain named-matrix set (benchmarks/tools)."""
+    from repro.core.noise import PAPER_ETA
+
+    eta = PAPER_ETA if eta is None else eta
+    plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx)
+    deps = {name: package_deployment_host(
+        np.asarray(w, np.float32), spec, mode, eta, plans[name])
+        for name, w in mats.items()}
+    return deps, report

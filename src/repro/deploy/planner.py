@@ -1,0 +1,229 @@
+"""Fused whole-model MDM planning.
+
+The per-layer entry point (``repro.core.mdm.plan_layer``) pays one jit
+dispatch — and, for every distinct layer shape, one compile — per
+matrix.  Real networks deploy hundreds of matrices spanning tens of
+thousands of tiles, so this module amortises the whole model into a
+constant number of device programs (the same trick the batched circuit
+solver uses for its tile populations):
+
+1. matrices are bit-sliced/tiled on the **host** (numpy) — with the
+   scale fixed, quantisation and the tile reshuffle are pure
+   elementwise/layout ops, bit-identical between numpy and XLA, so the
+   whole extraction costs zero compiles and zero device dispatches (a
+   vmapped jit here would pay one compile per distinct layer shape —
+   exactly the per-layer path's cost structure — and even eager jnp
+   ops pay per-shape mini-compiles);
+2. every layer's tiles are flattened into a single (T, rows, cols)
+   population and planned in **one** fused jit
+   (:func:`repro.core.mdm.plan_tile_population`: score + lexsort + NF
+   bookkeeping vmapped over all tiles of all layers at once),
+   optionally sharded over the logical ``"tiles"`` mesh dim
+   (``repro.distributed``);
+3. per-matrix :class:`MdmPlan`\\ s are sliced back out of the
+   population.
+
+Because the fused path runs the identical per-tile computation as the
+per-layer path (both call ``plan_tile_population``), the plans are
+bit-identical — ``tests/test_deploy.py`` pins this.  A
+:class:`repro.deploy.cache.PlanCache` short-circuits matrices whose
+(weights, spec, mode) key was planned before.
+"""
+from __future__ import annotations
+
+import time
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.bitslice import magnitude_scale_host
+from repro.core.mdm import MdmPlan, plan_tile_population
+from repro.core.tiling import CrossbarSpec
+from repro.deploy.cache import PlanCache, plan_key, weight_fingerprint
+from repro.distributed.sharding import ShardingCtx, logical_spec
+
+
+def quantize_codes_host(w: np.ndarray, scale: np.float32,
+                        n_bits: int) -> np.ndarray:
+    """Host mirror of ``quantize_magnitude``'s code rounding (uint32).
+
+    ``scale`` must come from
+    :func:`repro.core.bitslice.magnitude_scale_host` (bit-identical to
+    the eager-jnp chain); with it fixed, the rounding below is pure
+    elementwise IEEE arithmetic on which numpy and XLA agree
+    bit-for-bit.
+    """
+    levels = (1 << n_bits) - 1
+    mag = np.abs(np.asarray(w, np.float32))
+    return np.clip(np.round(mag / scale * np.float32(1 << n_bits)),
+                   np.float32(0), np.float32(levels)).astype(np.uint32)
+
+
+def _matrix_tile_masks_host(w: np.ndarray, scale: np.float32,
+                            spec: CrossbarSpec) -> np.ndarray:
+    """Host bit-slice + tile of one matrix -> flat masks (Ti*Tn, R, C).
+
+    Elementwise/layout mirror of ``quantize_magnitude`` ->
+    ``codes_to_bits`` -> ``tile_masks``: the resulting plans are
+    bit-identical to ``plan_layer``'s while costing zero compiles and
+    zero device dispatches.
+    """
+    K = spec.n_bits
+    codes = quantize_codes_host(w, scale, K)
+    shifts = np.arange(K - 1, -1, -1, dtype=np.uint32)
+    bits = ((codes[..., None] >> shifts) & np.uint32(1)).astype(np.uint8)
+
+    I, N = w.shape
+    ti, tn = spec.grid(I, N)
+    rows, wpt = spec.rows, spec.weights_per_tile
+    pad_i, pad_n = ti * rows - I, tn * wpt - N
+    if pad_i or pad_n:
+        bits = np.pad(bits, ((0, pad_i), (0, pad_n), (0, 0)))
+    m = bits.reshape(ti, rows, tn, wpt, K).transpose(0, 2, 1, 3, 4)
+    return m.reshape(ti * tn, rows, spec.cols)
+
+
+def _population_sharding(ctx: ShardingCtx | None, n_tiles: int):
+    """(NamedSharding, shard_count) for the tile population, or (None, 1).
+
+    Resolves the logical ``"tiles"`` dim through the ctx's rules — the
+    same resolution the sharded circuit solver uses — so the population
+    lands on a dedicated tile mesh or the data axis of a training mesh.
+    """
+    if ctx is None or ctx.mesh is None:
+        return None, 1
+    axis_sizes = dict(ctx.mesh.shape)
+    total = 1
+    for s in axis_sizes.values():
+        total *= s
+    spec = logical_spec((total,), ("tiles",), ctx.mesh, ctx.rules)
+    if not spec:
+        return None, 1
+    axes = spec[0]
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in axes:
+        n_shards *= axis_sizes[a]
+    sharding = NamedSharding(
+        ctx.mesh, P(axes[0] if len(axes) == 1 else axes, None, None))
+    return sharding, n_shards
+
+
+def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
+                  mode: str = "mdm", cache: PlanCache | None = None,
+                  ctx: ShardingCtx | None = None
+                  ) -> tuple[dict[str, MdmPlan], dict]:
+    """Plan every matrix of a model in one fused pass.
+
+    mats: name -> (I, N) weight matrix (shapes may differ per matrix).
+    Returns ({name: MdmPlan}, report); the report records tile counts,
+    cache hit/miss split and wall-clock of the fused planning pass.
+    """
+    t0 = time.perf_counter()
+    plans: dict[str, MdmPlan] = {}
+    keys: dict[str, str] = {}
+    misses: list[str] = []
+    for name, w in mats.items():
+        if w.ndim != 2:
+            raise ValueError(f"{name}: expected 2-D matrix, got {w.shape}")
+    if cache is None:
+        misses = list(mats)
+    else:
+        # Fingerprint + probe in a thread pool: blake2b and file reads
+        # release the GIL, and the lookup pass is the whole cost of a
+        # full cache hit.
+        import os
+        from concurrent.futures import ThreadPoolExecutor
+
+        def probe(name):
+            key = plan_key(weight_fingerprint(mats[name]), spec, mode)
+            return name, key, cache.get(key)
+
+        workers = max(1, min(os.cpu_count() or 1, len(mats)))
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            for name, key, hit in ex.map(probe, mats):
+                keys[name] = key
+                if hit is not None:
+                    plans[name] = hit
+                else:
+                    misses.append(name)
+    t_lookup = time.perf_counter() - t0
+
+    total_tiles = 0
+    if misses:
+        # Host per-matrix bit-slice/tile (compile- and dispatch-free)...
+        grids: dict[str, tuple[int, int]] = {}
+        scales: dict[str, np.ndarray] = {}
+        flat_chunks = []
+        for name in misses:
+            w = np.asarray(mats[name], np.float32)
+            ti, tn = spec.grid(*w.shape)
+            scale = magnitude_scale_host(w, spec.n_bits)
+            flat_chunks.append(_matrix_tile_masks_host(w, scale, spec))
+            grids[name] = (ti, tn)
+            scales[name] = np.asarray(scale)
+        order = misses
+
+        # ...then one fused planning jit over the whole population.
+        flat = np.concatenate(flat_chunks, axis=0)
+        total_tiles = flat.shape[0]
+        sharding, n_shards = _population_sharding(ctx, total_tiles)
+        pad = (-total_tiles) % n_shards
+        if pad:  # zero-drive tiles plan to identity perms; dropped below
+            flat = np.concatenate(
+                [flat, np.zeros((pad,) + flat.shape[1:], flat.dtype)])
+        flat = (jnp.asarray(flat) if sharding is None
+                else jax.device_put(flat, sharding))
+        pop = plan_tile_population(flat, spec, mode)
+        # One transfer per field; slicing back per matrix is then pure
+        # host views (an on-device slice would cost one dispatch per
+        # matrix per field — most of the warm fused wall-clock).
+        perm, position, nf_before, nf_after = (np.asarray(a) for a in pop)
+
+        rev = np.bool_(mode in ("reverse", "mdm"))
+        off = 0
+        for name in order:
+            ti, tn = grids[name]
+            nt = ti * tn
+            sl = slice(off, off + nt)
+            plan = MdmPlan(
+                row_perm=perm[sl].reshape(ti, tn, spec.rows),
+                row_position=position[sl].reshape(ti, tn, spec.rows),
+                reversed_dataflow=rev,
+                nf_before=nf_before[sl].reshape(ti, tn),
+                nf_after=nf_after[sl].reshape(ti, tn),
+                scale=scales[name])
+            off += nt
+            plans[name] = plan
+            if cache is not None:
+                cache.put(keys[name], plan)
+
+    report = {
+        "n_matrices": len(mats),
+        "cache_hits": len(mats) - len(misses),
+        "cache_misses": len(misses),
+        "tiles_planned": int(total_tiles),
+        "lookup_seconds": t_lookup,
+        "total_seconds": time.perf_counter() - t0,
+    }
+    return plans, report
+
+
+def plan_model_tiles(mats: Mapping[str, jax.Array],
+                     spec: CrossbarSpec) -> int:
+    """Total crossbar tile count of a matrix set (planning workload size)."""
+    total = 0
+    for w in mats.values():
+        ti, tn = spec.grid(*w.shape)
+        total += ti * tn
+    return total
+
+
+def fingerprint_matrices(mats: Mapping[str, jax.Array],
+                         spec: CrossbarSpec, mode: str) -> dict[str, str]:
+    """Content-address every matrix (exposed for cache tooling/tests)."""
+    return {name: plan_key(weight_fingerprint(w), spec, mode)
+            for name, w in mats.items()}

@@ -1,1 +1,6 @@
-from repro.kernels.cim_mvm.ops import cim_mvm  # noqa: F401
+from repro.kernels.cim_mvm.ops import (  # noqa: F401
+    CimDeployment,
+    cim_mvm,
+    deploy,
+    resolve_impl,
+)

@@ -1,10 +1,25 @@
-"""Public jit'd wrapper for the fused CIM matmul kernel.
+"""Public jit'd wrapper for the fused CIM matmul, with backend dispatch.
 
 ``deploy()`` turns a dense weight matrix into a :class:`CimDeployment`
 (signed quantisation codes + MDM physical-position table) once, at
 deployment time; ``cim_mvm()`` then computes the PR-distorted matmul for
-any activation batch.  This is the layer the model zoo's ``cim.enabled``
-mode routes matmuls through.
+any activation batch.  When ``cfg.cim.enabled`` is set, the model zoo
+(``repro.models.model``) routes attention/MLP projection matmuls through
+``cim_mvm`` using deployments built by ``repro.deploy`` at engine init.
+
+Dispatch (``impl``):
+
+* ``"auto"`` (default) — the Pallas kernel on TPU where ``pallas_call``
+  lowers natively (``repro.compat.has_pallas_lowering``; the kernel's
+  grid-accumulation pattern assumes TPU's sequential grid, see
+  :func:`resolve_impl`), the fused XLA fallback
+  (:mod:`repro.kernels.cim_mvm.xla`) everywhere else.  Interpret mode
+  is **never** selected automatically: it executes the kernel body
+  block-by-block in Python and is orders of magnitude too slow for
+  serving.
+* ``"pallas"`` / ``"xla"`` — force one production path.
+* ``"interpret"`` — the Pallas kernel under ``pallas_call(interpret=
+  True)``; test/validation only (bit-faithful BlockSpec checking).
 """
 from __future__ import annotations
 
@@ -15,13 +30,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitslice import quantize_magnitude
+from repro.compat import has_pallas_lowering
+from repro.core.bitslice import codes_to_bits, quantize_magnitude
 from repro.core.mdm import MdmPlan, plan_from_bits
-from repro.core.bitslice import codes_to_bits
 from repro.core.noise import PAPER_ETA
 from repro.core.tiling import CrossbarSpec
 from repro.kernels.cim_mvm.kernel import cim_mvm_pallas
-from repro.kernels.runtime import INTERPRET, round_up
+from repro.kernels.cim_mvm.xla import cim_mvm_xla
+from repro.kernels.runtime import round_up
+
+IMPLS = ("auto", "pallas", "xla", "interpret")
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -35,6 +53,10 @@ class CimDeployment:
     codes: (I_tiles*rows, N_tiles*wpt) int16 signed codes (sign*magnitude).
     pos:   (I_tiles*rows, N_tiles)     int32 physical row positions.
     scale: ()                          f32 quantisation scale.
+
+    Registered as a pytree with the array fields as data, so stacked
+    deployments (one per scanned model layer) thread through ``lax.scan``
+    and ``jax.jit`` like any other parameter.
     """
 
     codes: jax.Array
@@ -50,14 +72,22 @@ class CimDeployment:
 
 
 def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
-           eta: float = PAPER_ETA) -> tuple[CimDeployment, MdmPlan]:
-    """Quantise, plan (MDM or ablation) and package a weight matrix."""
+           eta: float = PAPER_ETA,
+           plan: MdmPlan | None = None) -> tuple[CimDeployment, MdmPlan]:
+    """Quantise, plan (MDM or ablation) and package a weight matrix.
+
+    Pass ``plan`` (e.g. a cache hit or a slice of a fused whole-model
+    plan from ``repro.deploy``) to skip the planning pass entirely; the
+    bit planes are then never materialised — packaging needs only the
+    int16 codes and the plan's position table.
+    """
     if w.ndim != 2:
         raise ValueError("deploy expects (in_dim, out_dim)")
     I, N = w.shape
     codes, sign, scale = quantize_magnitude(w, spec.n_bits)
-    bits = codes_to_bits(codes, spec.n_bits)
-    plan = plan_from_bits(bits, scale, spec, mode)
+    if plan is None:
+        plan = plan_from_bits(codes_to_bits(codes, spec.n_bits), scale,
+                              spec, mode)
 
     ti, tn = spec.grid(I, N)
     rows, wpt = spec.rows, spec.weights_per_tile
@@ -84,14 +114,40 @@ def _block_sizes(M: int, I: int, N: int, wpt: int) -> tuple[int, int, int]:
     return bm, bi, bn
 
 
-@partial(jax.jit, static_argnames=("interpret", "blocks"))
-def cim_mvm(x: jax.Array, dep: CimDeployment,
-            interpret: bool = INTERPRET,
+def resolve_impl(impl: str = "auto") -> str:
+    """Resolve ``"auto"`` to the production path for the active backend.
+
+    Never returns ``"interpret"`` — interpret mode must be requested
+    explicitly (tests/validation only).  The Pallas path is gated on
+    the TPU backend *and* the lowering probe: the kernel accumulates
+    its output block across sequential grid steps (`out_ref[...] +=`
+    with init at ki == 0), which is TPU grid semantics — on a GPU
+    build where pallas_call happens to lower, parallel grid cells
+    would race on that accumulator, so GPU stays on the fused XLA
+    fallback until a revisiting-safe variant exists.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl={impl!r} not in {IMPLS}")
+    if impl == "auto":
+        if jax.default_backend() == "tpu" and has_pallas_lowering():
+            return "pallas"
+        return "xla"
+    return impl
+
+
+@partial(jax.jit, static_argnames=("impl", "blocks"))
+def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
             blocks: tuple[int, int, int] | None = None) -> jax.Array:
     """y = x @ W_effective for a CIM-deployed weight matrix.
 
-    x: (..., in_dim); returns (..., out_dim) f32.
+    x: (..., in_dim); returns (..., out_dim) f32.  ``impl`` picks the
+    execution path (see module docstring); the default dispatches to the
+    Pallas kernel or the fused XLA fallback, never to interpret mode.
+    ``blocks`` tunes the Pallas/interpret grid only — the XLA fallback
+    is a single fused program with no block structure to tune, so the
+    argument has no effect there.
     """
+    impl = resolve_impl(impl)
     batch_shape = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     M, I = x2.shape
@@ -99,8 +155,15 @@ def cim_mvm(x: jax.Array, dep: CimDeployment,
         raise ValueError(f"x feature dim {I} != deployed in_dim {dep.in_dim}")
 
     i_pad, n_pad = dep.codes.shape
-    bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)
 
+    if impl == "xla":
+        x2 = jnp.pad(x2, ((0, 0), (0, i_pad - I)))
+        y = cim_mvm_xla(x2, dep.codes, dep.pos, dep.scale,
+                        n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols,
+                        eta=dep.eta, reversed_df=dep.reversed_df)
+        return y[:, :dep.out_dim].reshape(*batch_shape, dep.out_dim)
+
+    bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)
     mp, ip, np_ = round_up(M, bm), round_up(i_pad, bi), round_up(n_pad, bn)
     x2 = jnp.pad(x2, ((0, mp - M), (0, ip - I)))
     codes = jnp.pad(dep.codes, ((0, ip - i_pad), (0, np_ - n_pad)))
@@ -110,5 +173,5 @@ def cim_mvm(x: jax.Array, dep: CimDeployment,
         x2, codes, pos, dep.scale.reshape(1, 1),
         n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols, eta=dep.eta,
         reversed_df=dep.reversed_df, block_m=bm, block_n=bn, block_i=bi,
-        interpret=interpret)
+        interpret=impl == "interpret")
     return y[:M, :dep.out_dim].reshape(*batch_shape, dep.out_dim)

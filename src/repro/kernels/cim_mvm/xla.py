@@ -1,0 +1,68 @@
+"""Fused XLA fallback for the CIM matmul (production non-TPU path).
+
+Computes the same PR-distorted matmul as the Pallas kernel
+(:mod:`repro.kernels.cim_mvm.kernel`) as a single fusible XLA graph:
+the int16 signed codes are expanded to the effective weight matrix on
+the fly — the K-step bit loop runs unrolled over (I, N) planes, so no
+(I, N, K) bit tensor is ever materialised, mirroring the register-level
+unroll of the kernel.  XLA fuses the expansion into one elementwise
+pipeline feeding the matmul, keeping weight traffic at 2 B/weight
+(measured against the paper's materialised-bit-plane flow in
+``benchmarks/cim_traffic.py``).
+
+This is the hot path on every backend where ``pallas_call`` has no
+native lowering (``repro.compat.has_pallas_lowering``); interpret mode
+is strictly a test/validation vehicle and is never dispatched from
+serving code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_effective_weights(codes: jax.Array, pos: jax.Array,
+                          scale: jax.Array, *, n_bits: int, wpt: int,
+                          cols: int, eta: float,
+                          reversed_df: bool) -> jax.Array:
+    """Effective PR-distorted weight matrix from signed codes.
+
+    codes: (I, N) int16 signed quantisation codes (sign * magnitude).
+    pos:   (I, N // wpt) int32 physical row positions per column-tile.
+    scale: () f32 quantisation scale.
+    Returns (I, N) f32 — Eq 17's W' with the same row/column split as
+    the Pallas kernel:  W' = sign * scale * [(1 + eta*p) * M0 + eta*M1].
+    """
+    c = codes.astype(jnp.int32)
+    mag = jnp.abs(c).astype(jnp.uint32)
+    sign = jnp.where(c < 0, -1.0, 1.0)
+
+    # Clean magnitude: code * 2^-K == sum_k b_k 2^-(k+1), exactly.
+    m0 = mag.astype(jnp.float32) * (2.0 ** -n_bits)
+
+    # Column-distance moment, unrolled over the K bit planes.
+    N = codes.shape[1]
+    slot = jnp.arange(N, dtype=jnp.int32) % wpt
+    m1 = jnp.zeros_like(m0)
+    for k in range(n_bits):
+        bit = ((mag >> (n_bits - 1 - k)) & 1).astype(jnp.float32)
+        col = slot * n_bits + k
+        if reversed_df:
+            col = (cols - 1) - col
+        m1 = m1 + bit * (2.0 ** -(k + 1)) * col.astype(jnp.float32)
+
+    # Physical row position p[i, n] = pos[i, n // wpt].
+    p = jnp.repeat(pos.astype(jnp.float32), wpt, axis=1)
+    return sign * scale * ((1.0 + eta * p) * m0 + eta * m1)
+
+
+def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
+                scale: jax.Array, *, n_bits: int, wpt: int, cols: int,
+                eta: float, reversed_df: bool) -> jax.Array:
+    """y = x @ W' with on-the-fly code expansion; x: (M, I) f32."""
+    w_eff = cim_effective_weights(codes, pos, scale, n_bits=n_bits,
+                                  wpt=wpt, cols=cols, eta=eta,
+                                  reversed_df=reversed_df)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), w_eff, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)

@@ -8,6 +8,14 @@ HLO stays O(1) in depth (essential for the 80-layer dry-runs).  The same
 positions) and decode (state threaded, one position): attention caches
 are ring buffers keyed by absolute positions, recurrent blocks carry
 O(1) states.
+
+When a ``cim`` deployment tree is threaded in (``cfg.cim.enabled``
+serving — built by ``repro.deploy.deploy_model_params`` at engine
+init), the attention q/k/v/o and dense-MLP projection matmuls route
+through the backend-dispatched ``cim_mvm`` op instead of plain
+einsum/matmul, evaluating the model under the deployed crossbars'
+parasitic-resistance distortion.  The deployments ride the layer scan
+as stacked pytrees, exactly like the parameters they shadow.
 """
 from __future__ import annotations
 
@@ -43,27 +51,45 @@ def _silu(x):
     return x * jax.nn.sigmoid(x)
 
 
+def _cim_matmul(x: jax.Array, w: jax.Array, dep) -> jax.Array:
+    """x @ w, through the deployed crossbars when a CimDeployment exists."""
+    if dep is None:
+        return x @ w
+    from repro.kernels.cim_mvm.ops import cim_mvm
+    return cim_mvm(x, dep).astype(x.dtype)
+
+
 def dense_mlp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
-              prefix: str = "ffn_") -> jax.Array:
+              prefix: str = "ffn_", cim: dict | None = None) -> jax.Array:
     g = lambda n: p[prefix + n]
+    c = lambda n: None if cim is None else cim.get(prefix + n)
     if cfg.mlp_type == "swiglu":
-        h = _silu(x @ g("w_gate")) * (x @ g("w_up"))
+        h = (_silu(_cim_matmul(x, g("w_gate"), c("w_gate")))
+             * _cim_matmul(x, g("w_up"), c("w_up")))
     else:
-        h = jax.nn.gelu(x @ g("w_up"))
+        h = jax.nn.gelu(_cim_matmul(x, g("w_up"), c("w_up")))
     h = shard(h, ctx, "batch", "seq", "act_mlp")
-    return h @ g("w_down")
+    return _cim_matmul(h, g("w_down"), c("w_down"))
 
 
 # ----------------------------- attention ---------------------------------
 
 def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
                positions: jax.Array, cache: dict | None,
-               prefix: str = ""):
+               prefix: str = "", cim: dict | None = None):
     g = lambda n: p[prefix + n]
+    c = lambda n: None if cim is None else cim.get(prefix + n)
     B, S, D = x.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, g("wq"))
-    k = jnp.einsum("bsd,dhk->bshk", x, g("wk"))
-    v = jnp.einsum("bsd,dhk->bshk", x, g("wv"))
+
+    def qkv_proj(name):
+        w, dep = g(name), c(name)
+        if dep is None:
+            return jnp.einsum("bsd,dhk->bshk", x, w)
+        return _cim_matmul(x, w, dep).reshape(B, S, *w.shape[-2:])
+
+    q = qkv_proj("wq")
+    k = qkv_proj("wk")
+    v = qkv_proj("wv")
     if cfg.qkv_bias:
         q, k, v = q + g("bq"), k + g("bk"), v + g("bv")
     q = rope(q, positions, cfg.rope_theta)
@@ -118,7 +144,10 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
                               chunk=cfg.attn_chunk,
                               gqa_broadcast=cfg.gqa_broadcast,
                               remat_chunk=cfg.attn_remat_chunk)
-    y = jnp.einsum("bshk,hkd->bsd", out, g("wo"))
+    if c("wo") is None:
+        y = jnp.einsum("bshk,hkd->bsd", out, g("wo"))
+    else:
+        y = _cim_matmul(out.reshape(B, S, -1), g("wo"), c("wo"))
     return y, new_cache
 
 
@@ -126,7 +155,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 
 def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
                 ctx: ShardingCtx, positions: jax.Array,
-                state: dict | None, decode: bool):
+                state: dict | None, decode: bool,
+                cim: dict | None = None):
     """Apply one block. Returns (x, new_state_slice, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_state: dict = {}
@@ -134,14 +164,14 @@ def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
 
     if bt == "attn":
         y, cache = attn_apply(p, h, cfg, ctx, positions,
-                              None if state is None else state)
+                              None if state is None else state, cim=cim)
         if cache is not None:
             new_state = cache
     elif bt == "hybrid":
         cache_in = None if state is None else \
             {k: state[k] for k in ("k", "v", "kpos")}
         y_attn, cache = attn_apply(p, h, cfg, ctx, positions, cache_in,
-                                   prefix="attn_")
+                                   prefix="attn_", cim=cim)
         ssm_in = None if state is None else (state["conv"], state["ssm"])
         if decode:
             y_ssm, (cs, hs) = mamba_decode(p, h, ssm_in, prefix="ssm_")
@@ -183,7 +213,7 @@ def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
         if cfg.n_experts:
             yf, aux = moe_ffn(p, hf, cfg, ctx)
         else:
-            yf = dense_mlp(p, hf, cfg, ctx)
+            yf = dense_mlp(p, hf, cfg, ctx, cim=cim)
         x = x + yf
         x = shard(x, ctx, "batch", "seq", "act_embed")
     return x, new_state, aux
@@ -205,8 +235,13 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
                 embeds: jax.Array | None = None,
                 state: ModelState | None = None,
                 decode: bool = False,
-                return_hidden: bool = False):
-    """Returns (logits_or_hidden, new_state, aux_loss)."""
+                return_hidden: bool = False,
+                cim: dict | None = None):
+    """Returns (logits_or_hidden, new_state, aux_loss).
+
+    ``cim``: optional per-slot CimDeployment tree (stacked over pattern
+    repeats) routing projection matmuls through the crossbar path.
+    """
     if embeds is None:
         x = jnp.take(params["embed"], tokens, axis=0)
     else:
@@ -222,6 +257,8 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
     xs: dict = {"params": {n: params[n] for n in slot_names}}
     if state is not None:
         xs["state"] = {n: state[n] for n in slot_names}
+    if cim is not None:
+        xs["cim"] = {n: cim.get(n, {}) for n in slot_names}
 
     train = state is None
 
@@ -231,8 +268,9 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
         for i, bt in enumerate(pattern):
             n = slot_names[i]
             st = xs_t["state"][n] if state is not None else None
+            ci = xs_t["cim"][n] if cim is not None else None
             x, ns, a = block_apply(bt, xs_t["params"][n], x, cfg, ctx,
-                                   positions, st, decode)
+                                   positions, st, decode, cim=ci)
             new_states[n] = ns
             aux = aux + a
         return (x, aux), new_states

@@ -4,10 +4,18 @@ caches, with greedy/temperature sampling.
 ``make_prefill`` / ``make_decode_step`` are the two lowerables the
 inference dry-run cells compile (prefill_32k lowers prefill; decode_32k
 and long_500k lower one decode step against a seq_len-deep cache).
+
+With ``cfg.cim.enabled`` the engine deploys every projection matrix
+onto crossbars at init (``repro.deploy.deploy_model_params``, through
+the persistent plan cache, so redeploying an unchanged checkpoint is
+~free) and both lowerables route those matmuls through the
+backend-dispatched ``cim_mvm`` — the model serves under the paper's
+parasitic-resistance distortion for any ``cfg.cim.mode`` ablation.
+Both prefill and decode donate the decode state: prefill consumes the
+freshly initialised cache and decode consumes its predecessor's, so
+there is no full cache copy at the prefill->decode handoff.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +35,12 @@ def sample_tokens(logits: jax.Array, key: jax.Array,
 
 
 def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
-    """(params, state, tokens|embeds, key) -> (first_token, state)."""
+    """(params, state, tokens|embeds, key[, cim]) -> (first_token, state)."""
 
-    def prefill(params, state, inputs, key):
+    def prefill(params, state, inputs, key, cim=None):
         kw = {"embeds": inputs} if cfg.frontend else {"tokens": inputs}
         logits, state, _ = apply_model(params, cfg, ctx, state=state,
-                                       decode=False, **kw)
+                                       decode=False, cim=cim, **kw)
         tok = sample_tokens(logits[:, -1], key, temperature)
         return tok, state
 
@@ -41,12 +49,12 @@ def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
 
 def make_decode_step(cfg: ModelConfig, ctx: ShardingCtx,
                      temperature: float = 0.0):
-    """(params, state, token (B,), key) -> (next_token, state)."""
+    """(params, state, token (B,), key[, cim]) -> (next_token, state)."""
 
-    def decode_step(params, state, token, key):
+    def decode_step(params, state, token, key, cim=None):
         logits, state, _ = apply_model(params, cfg, ctx,
                                        tokens=token[:, None], state=state,
-                                       decode=True)
+                                       decode=True, cim=cim)
         tok = sample_tokens(logits[:, 0], key, temperature)
         return tok, state
 
@@ -57,12 +65,24 @@ class ServeEngine:
     """Minimal batched engine: prefill a batch of prompts, decode N steps."""
 
     def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx | None = None,
-                 max_seq: int = 2048, temperature: float = 0.0):
+                 max_seq: int = 2048, temperature: float = 0.0,
+                 plan_cache=None):
         self.cfg = cfg
         self.ctx = ctx or ShardingCtx()
         self.params = params
         self.max_seq = max_seq
-        self._prefill = jax.jit(make_prefill(cfg, self.ctx, temperature))
+        self.cim = None
+        self.deploy_report = None
+        if cfg.cim.enabled:
+            from repro.deploy import PlanCache, deploy_model_params
+            cache = plan_cache if plan_cache is not None else PlanCache()
+            self.cim, self.deploy_report = deploy_model_params(
+                params, cfg, cache=cache, ctx=self.ctx)
+        # Donate the state on both lowerables: prefill writes the whole
+        # cache anyway, so aliasing the fresh buffers avoids one full
+        # cache copy at the prefill->decode handoff.
+        self._prefill = jax.jit(make_prefill(cfg, self.ctx, temperature),
+                                donate_argnums=(1,))
         self._decode = jax.jit(
             make_decode_step(cfg, self.ctx, temperature),
             donate_argnums=(1,))
@@ -75,10 +95,10 @@ class ServeEngine:
         state = init_decode_state(self.cfg, B, self.max_seq)
         key = jax.random.PRNGKey(seed)
         key, k0 = jax.random.split(key)
-        tok, state = self._prefill(self.params, state, prompts, k0)
+        tok, state = self._prefill(self.params, state, prompts, k0, self.cim)
         out = [tok]
         for _ in range(n_tokens - 1):
             key, k = jax.random.split(key)
-            tok, state = self._decode(self.params, state, tok, k)
+            tok, state = self._decode(self.params, state, tok, k, self.cim)
             out.append(tok)
         return jnp.stack(out, axis=1)

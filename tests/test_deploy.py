@@ -1,0 +1,243 @@
+"""Whole-model deployment engine: fused-planner parity, plan cache,
+model-param deployment and CIM serving end-to-end.
+
+The engine's contract is *bit-identity*: the fused whole-model planner
+(one jit over all layers' tiles, host-side bit-slicing) must produce
+exactly the plans the per-layer ``plan_layer`` path produces, and a
+cache hit must reproduce exactly what was stored.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CimConfig, ModelConfig
+from repro.core.bitslice import magnitude_scale, magnitude_scale_host
+from repro.core.mdm import MODES, plan_layer
+from repro.core.tiling import CrossbarSpec
+from repro.deploy import (
+    PlanCache,
+    collect_projection_matrices,
+    deploy_model_params,
+    fingerprint_matrices,
+    plan_matrices,
+)
+
+SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
+
+# Mixed shapes, several of which don't divide the tile grid.
+SHAPES = [(48, 6), (70, 13), (33, 7), (64, 12), (16, 2)]
+
+
+def _mats(seed=0, scale=0.2):
+    key = jax.random.PRNGKey(seed)
+    return {f"m{j}_{i}x{n}": jax.random.normal(
+        jax.random.fold_in(key, j), (i, n)) * scale
+        for j, (i, n) in enumerate(SHAPES)}
+
+
+def assert_plans_identical(a, b):
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_fused_plans_bit_identical_to_per_layer(mode):
+    mats = _mats()
+    plans, report = plan_matrices(mats, SPEC, mode)
+    assert report["cache_misses"] == len(mats)
+    for name, w in mats.items():
+        assert_plans_identical(plans[name], plan_layer(w, SPEC, mode))
+
+
+def test_fused_planner_sharded_over_tiles_mesh():
+    """Sharding the tile population over the logical "tiles" mesh must
+    not change a single bit of any plan."""
+    from repro.distributed.solver_shard import tile_sharding_ctx
+
+    mats = _mats(seed=3)
+    base, _ = plan_matrices(mats, SPEC, "mdm")
+    sharded, _ = plan_matrices(mats, SPEC, "mdm", ctx=tile_sharding_ctx())
+    for name in mats:
+        assert_plans_identical(base[name], sharded[name])
+
+
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_host_scale_mirror_bit_identical(n_bits):
+    """magnitude_scale_host must track the eager-jnp chain bit-for-bit
+    (it anchors the whole host bit-slicing parity argument)."""
+    rng = np.random.default_rng(n_bits)
+    for t in range(50):
+        shape = (int(rng.integers(1, 200)), int(rng.integers(1, 200)))
+        w = (rng.standard_normal(shape)
+             * 10.0 ** rng.uniform(-6, 6)).astype(np.float32)
+        a = np.float32(np.asarray(magnitude_scale(jnp.asarray(w), n_bits)))
+        b = magnitude_scale_host(w, n_bits)
+        assert a.tobytes() == b.tobytes(), (t, shape)
+
+
+# ------------------------------- cache -----------------------------------
+
+def test_plan_cache_hit_is_bit_identical(tmp_path):
+    mats = _mats(seed=1)
+    cache = PlanCache(str(tmp_path))
+    for mode in ("baseline", "mdm"):
+        cold, r1 = plan_matrices(mats, SPEC, mode, cache=cache)
+        assert r1["cache_misses"] == len(mats)
+        hit, r2 = plan_matrices(mats, SPEC, mode, cache=cache)
+        assert r2["cache_hits"] == len(mats) and r2["cache_misses"] == 0
+        for name in mats:
+            assert_plans_identical(cold[name], hit[name])
+            # ...and the cached plan still matches the per-layer oracle.
+            assert_plans_identical(hit[name],
+                                   plan_layer(mats[name], SPEC, mode))
+
+
+def test_plan_cache_invalidation(tmp_path):
+    mats = _mats(seed=2)
+    cache = PlanCache(str(tmp_path))
+    plan_matrices(mats, SPEC, "mdm", cache=cache)
+
+    # Weight change -> replan (only the changed matrix misses).
+    changed = dict(mats)
+    name0 = next(iter(changed))
+    changed[name0] = changed[name0] + 0.01
+    _, r = plan_matrices(changed, SPEC, "mdm", cache=cache)
+    assert r["cache_misses"] == 1 and r["cache_hits"] == len(mats) - 1
+
+    # Mode change -> different keys -> full replan.
+    _, r = plan_matrices(mats, SPEC, "sort", cache=cache)
+    assert r["cache_misses"] == len(mats)
+
+    # Spec change (device geometry) -> full replan.
+    _, r = plan_matrices(mats, CrossbarSpec(rows=32, cols=32, n_bits=8),
+                         "mdm", cache=cache)
+    assert r["cache_misses"] == len(mats)
+
+    # Keys are distinct across (weights, spec, mode).
+    k1 = fingerprint_matrices(mats, SPEC, "mdm")
+    k2 = fingerprint_matrices(mats, SPEC, "sort")
+    k3 = fingerprint_matrices(changed, SPEC, "mdm")
+    assert set(k1.values()).isdisjoint(k2.values())
+    assert k1[name0] != k3[name0]
+
+
+def test_plan_cache_corrupt_entry_is_a_miss(tmp_path):
+    mats = {"m": jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2}
+    cache = PlanCache(str(tmp_path))
+    plans, _ = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    keys = fingerprint_matrices(mats, SPEC, "mdm")
+    path = cache._path(keys["m"])
+    with open(path, "wb") as f:
+        f.write(b"\x00garbage")
+    _, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r["cache_misses"] == 1
+    # The replan repaired the entry.
+    fixed, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r["cache_hits"] == 1
+    assert_plans_identical(fixed["m"], plans["m"])
+
+
+# --------------------------- model deployment ----------------------------
+
+SERVE_CFG = ModelConfig(
+    name="cim-serve-test", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab_size=128, block_pattern=("attn",),
+    remat="none", dtype="float32", attn_chunk=32,
+    cim=CimConfig(enabled=True, mode="mdm", rows=16, cols=16, n_bits=4))
+
+
+def test_deploy_model_params_structure(tmp_path):
+    from repro.models.model import init_params
+
+    params = init_params(SERVE_CFG, jax.random.PRNGKey(0))
+    cache = PlanCache(str(tmp_path))
+    cim, report = deploy_model_params(params, SERVE_CFG, cache=cache)
+    slot = cim["slot0_attn"]
+    # All seven projections deployed, stacked over the 2 pattern repeats.
+    assert set(slot) == {"wq", "wk", "wv", "wo",
+                         "ffn_w_gate", "ffn_w_up", "ffn_w_down"}
+    reps = SERVE_CFG.pattern_repeats
+    for dep in slot.values():
+        assert dep.codes.shape[0] == reps
+        assert dep.pos.shape[0] == reps
+        assert dep.scale.shape == (reps,)
+    assert report["n_matrices"] == 7 * reps
+    # Redeploy of the unchanged params is a pure cache hit.
+    _, report2 = deploy_model_params(params, SERVE_CFG, cache=cache)
+    assert report2["cache_hits"] == report["n_matrices"]
+    assert report2["cache_misses"] == 0
+
+
+@pytest.mark.parametrize("mode", ["baseline", "mdm"])
+def test_host_packaging_matches_device_deploy(mode):
+    """package_deployment_host must reproduce ops.deploy bit-for-bit
+    (codes, positions, scale) — it replaces the per-matrix device
+    packaging loop at whole-model deployment time."""
+    from repro.deploy import package_deployment_host
+    from repro.kernels.cim_mvm.ops import deploy
+
+    for shape in [(48, 6), (70, 13)]:
+        w = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 0.2
+        dep_dev, plan = deploy(w, SPEC, mode, eta=2e-3)
+        dep_host = package_deployment_host(
+            np.asarray(w, np.float32), SPEC, mode, 2e-3, plan)
+        np.testing.assert_array_equal(np.asarray(dep_dev.codes),
+                                      dep_host.codes)
+        np.testing.assert_array_equal(np.asarray(dep_dev.pos),
+                                      dep_host.pos)
+        np.testing.assert_array_equal(np.asarray(dep_dev.scale),
+                                      dep_host.scale)
+        for f in ("n_bits", "wpt", "cols", "eta", "reversed_df",
+                  "in_dim", "out_dim"):
+            assert getattr(dep_dev, f) == getattr(dep_host, f)
+
+
+def test_collect_projection_matrices_shapes():
+    from repro.models.model import init_params
+
+    params = init_params(SERVE_CFG, jax.random.PRNGKey(0))
+    mats = collect_projection_matrices(params, SERVE_CFG)
+    D = SERVE_CFG.d_model
+    HDh = SERVE_CFG.n_heads * SERVE_CFG.resolved_head_dim
+    assert mats["slot0_attn/wq/0"].shape == (D, HDh)
+    assert mats["slot0_attn/wo/1"].shape == (HDh, D)
+    assert mats["slot0_attn/ffn_w_up/0"].shape == (D, SERVE_CFG.d_ff)
+
+
+# ------------------------------ serving ----------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_serve_engine_generates_under_cim(mode, tmp_path):
+    """ServeEngine with cim.enabled serves tokens under every MDM
+    ablation mode, through the backend-dispatched cim_mvm (never
+    interpret — the generation would not finish otherwise)."""
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = SERVE_CFG.replace(cim=CimConfig(
+        enabled=True, mode=mode, rows=16, cols=16, n_bits=4))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64,
+                      plan_cache=PlanCache(str(tmp_path)))
+    assert eng.cim is not None and eng.deploy_report["n_matrices"] == 14
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 3))
+    assert out.shape == (2, 3)
+    assert out.dtype == np.int32
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_serve_engine_clean_path_unchanged():
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = SERVE_CFG.replace(cim=CimConfig(enabled=False))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64)
+    assert eng.cim is None
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 3))
+    assert out.shape == (2, 3)

@@ -1,5 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret
-mode on CPU — the kernel body executes block-by-block faithfully).
+mode on CPU — the kernel body executes block-by-block faithfully; the
+cim_mvm calls pin ``impl="interpret"`` because its production default
+now dispatches to the fused XLA fallback off-TPU, covered by
+tests/test_cim_dispatch.py).
 
 Sweeps are deterministic seeded parametrize grids (the ``hypothesis``
 package is not installable in the offline CI image); the cases keep the
@@ -34,7 +37,7 @@ def test_cim_mvm_matches_ref(mode, shape):
     x = jax.random.normal(k2, (M, I))
     spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
     dep, plan = deploy(w, spec, mode, eta=2e-3)
-    y = cim_mvm(x, dep)
+    y = cim_mvm(x, dep, impl="interpret")
     x_pad = jnp.pad(x, ((0, 0), (0, dep.codes.shape[0] - I)))
     y_ref = cim_mvm_ref(x_pad, dep.codes.astype(jnp.int32), plan, spec,
                         2e-3)[:, :N]
@@ -59,7 +62,7 @@ def test_cim_mvm_property_sweep(i, n, m, n_bits, seed):
     x = jax.random.normal(k2, (m, i))
     spec = CrossbarSpec(rows=32, cols=32, n_bits=n_bits)
     dep, plan = deploy(w, spec, "mdm", eta=1e-3)
-    y = cim_mvm(x, dep)
+    y = cim_mvm(x, dep, impl="interpret")
     x_pad = jnp.pad(x, ((0, 0), (0, dep.codes.shape[0] - i)))
     y_ref = cim_mvm_ref(x_pad, dep.codes.astype(jnp.int32), plan, spec,
                         1e-3)[:, :n]
@@ -78,7 +81,7 @@ def test_cim_mvm_eta0_equals_quantized_matmul():
     wq = unbitslice(bitslice(w, 8))
     for mode in ("baseline", "mdm"):
         dep, _ = deploy(w, spec, mode, eta=0.0)
-        y = cim_mvm(x, dep)
+        y = cim_mvm(x, dep, impl="interpret")
         np.testing.assert_allclose(np.asarray(y), np.asarray(x @ wq),
                                    rtol=1e-5, atol=1e-5)
 
@@ -88,7 +91,7 @@ def test_cim_mvm_batched_input():
     x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 64))
     spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
     dep, _ = deploy(w, spec)
-    y = cim_mvm(x, dep)
+    y = cim_mvm(x, dep, impl="interpret")
     assert y.shape == (2, 3, 16)
 
 
