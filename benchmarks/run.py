@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     accuracy_noise,
     cim_traffic,
     deploy_throughput,
+    fault_tolerance,
     hypothesis_fit,
     nf_reduction,
     planning_cost,
@@ -73,6 +74,12 @@ def main() -> None:
         # planning, cache-hit redeploy, CIM serving tokens/s
         "deploy_throughput": lambda: deploy_throughput.run(
             n_per_shape=1 if q else 3),
+        # §Nonideal: stuck-fault x variation Monte-Carlo distributions,
+        # baseline vs MDM vs fault-aware MDM
+        "fault_tolerance": lambda: fault_tolerance.run(
+            n_rows=128 if q else 256, n_samples=3 if q else 6,
+            rates=(0.01, 0.05) if q else (0.002, 0.01, 0.05),
+            sigmas=(0.0,) if q else (0.0, 0.1)),
         # §Dry-run / §Roofline summary
         "roofline_table": lambda: roofline_table.run(),
     }
@@ -155,6 +162,10 @@ def _derive(name: str, res: dict) -> str:
                     f"cache_hit=x{p['cache_hit_speedup_vs_cold']:.1f};"
                     f"serve_cim="
                     f"{res['serving']['cim_mdm']['tokens_per_s']:.0f}tok/s")
+        if name == "fault_tolerance":
+            wins = res["fault_aware_beats_mdm"]
+            return ("fault_aware_beats_mdm="
+                    + ",".join(f"{k}:{v}" for k, v in wins.items()))
     except Exception as e:
         return f"derive_error:{e!r}"
     return "ok"

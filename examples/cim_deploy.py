@@ -21,25 +21,30 @@ from repro.kernels.bitslice_pack import bitslice_pack
 from repro.models.model import init_params
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
     ap.add_argument("--mode", default="mdm")
-    args = ap.parse_args()
+    ap.add_argument("--min-size", type=int, default=1024,
+                    help="skip weight leaves smaller than this")
+    ap.add_argument("--rows", type=int, default=64)
+    ap.add_argument("--cols", type=int, default=64)
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    spec = CrossbarSpec(rows=args.rows, cols=args.cols, n_bits=8)
 
     print(f"deploying {args.arch} (reduced config) with mode={args.mode}")
     total_tiles, nf_b, nf_a = 0, 0.0, 0.0
+    min_size = args.min_size
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
         reps = 1
-        if leaf.ndim == 3 and leaf.shape[1] * leaf.shape[2] >= 1024:
+        if leaf.ndim == 3 and leaf.shape[1] * leaf.shape[2] >= min_size:
             reps, leaf = leaf.shape[0], leaf[0]   # scanned layer stack
-        elif leaf.ndim == 4 and leaf.shape[-1] * leaf.shape[-2] >= 1024:
+        elif leaf.ndim == 4 and leaf.shape[-1] * leaf.shape[-2] >= min_size:
             reps, leaf = leaf.shape[0] * leaf.shape[1], leaf[0, 0]
-        if leaf.ndim != 2 or leaf.size < 1024:
+        if leaf.ndim != 2 or leaf.size < min_size:
             continue
         name = jax.tree_util.keystr(path) + (f" x{reps}" if reps > 1 else "")
         w = leaf.astype(jnp.float32)

@@ -23,11 +23,15 @@ from repro.crossbar.solver import measured_nf
 from repro.kernels.cim_mvm.ops import cim_mvm, deploy
 
 
-def main():
+def main(in_dim: int = 256, out_dim: int = 64, batch: int = 8,
+         spec: CrossbarSpec | None = None):
+    """Run the walkthrough; shapes are overridable so the tier-1 smoke
+    test (tests/test_examples.py) can drive it in-process at tiny
+    scale."""
     key = jax.random.PRNGKey(0)
-    w = jax.random.normal(key, (256, 64)) * 0.02       # a small layer
-    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
-    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    w = jax.random.normal(key, (in_dim, out_dim)) * 0.02  # a small layer
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
+    spec = spec or CrossbarSpec(rows=64, cols=64, n_bits=8)
 
     # 1. MDM plan: dataflow reversal + Manhattan row sort
     for mode in ("baseline", "reverse", "sort", "mdm"):

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Full (nightly) test profile: includes the @slow solver-oracle shapes
-# and full-batch equivalence sweeps that the tier-1 default
-# (`pytest.ini` addopts = -m "not slow") skips, plus the whole-model
-# deployment benchmark (fused planning / plan-cache / CIM serving
-# numbers recorded into results/benchmarks.json).
+# Full (nightly) test profile: includes the @slow solver-oracle shapes,
+# full-batch equivalence sweeps and the heavy Monte-Carlo nonideality
+# shapes that the tier-1 default (`pytest.ini` addopts = -m "not slow")
+# skips, plus the whole-model deployment and fault-tolerance benchmarks
+# (fused planning / plan-cache / CIM serving / fault+variation
+# distribution numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -m "slow or not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only deploy_throughput
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only fault_tolerance

@@ -85,14 +85,70 @@ def optimal_row_order(active: jax.Array) -> jax.Array:
     Returns ``perm`` such that ``active[perm]`` is the remapped tile.
     Works on a single tile (J, K) only; vmap for batches.
     """
+    K = active.shape[-1]
+    # Packed single-key sort: both keys are integers on a binary mask
+    # (count n <= K, score s <= K(K+1)/2), so ``n * (s_max+1) + s`` is a
+    # collision-free int32 composite whenever it fits — one stable
+    # argsort instead of lexsort's two.  (A packed *float* key cannot
+    # work for wide tiles: once ``n * C`` outgrows the f32 mantissa the
+    # score term is rounded away entirely — see the wide-tile regression
+    # in tests/test_manhattan.py, which exercises the fallback.)
+    s_max = K * (K + 1) // 2
+    if (K + 1) * (s_max + 1) - 1 < 2 ** 31:
+        a = (active > 0).astype(jnp.int32)
+        n = jnp.sum(a, axis=-1)
+        s = jnp.sum(a * (1 + jnp.arange(K, dtype=jnp.int32)), axis=-1)
+        return jnp.argsort(-(n * (s_max + 1) + s), stable=True)
     n = row_counts(active)
     s = row_scores(active)
-    # Collision-free composite sort: lexsort's last key is primary, and
-    # stability supplies the index tiebreak.  (A packed float key
-    # ``n * C + s / (s.max() + 1)`` cannot work for wide tiles: once
-    # ``n * C`` outgrows the f32 mantissa the sub-1 score term is
-    # rounded away entirely and ties fall back to index order.)
+    # Wide-tile fallback: lexsort's last key is primary, and stability
+    # supplies the index tiebreak.
     return jnp.lexsort((-s, -n))
+
+
+def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
+                          nf_unit: float | jax.Array) -> jax.Array:
+    """Row permutation minimising Manhattan NF *plus* expected fault loss.
+
+    ``active`` is the tile's (J, K) logical row masks in physical column
+    layout (i.e. after any dataflow reversal); ``stuck`` is the tile's
+    (J, K) *physical* cell-state map (``repro.nonideal.models``: 0 =
+    healthy, 1 = stuck-OFF, 2 = stuck-ON) — a property of the hardware,
+    fixed in physical coordinates while the mapping chooses which
+    logical row lands on which physical row.
+
+    Model: hosting a row with ``n_j`` active cells at physical position
+    ``p`` costs an expected per-tile current deficit of
+
+        n_j * [ nf_unit * p  +  (|S_p| - |O_p|) / K ]   (+ row/pos consts)
+
+    where ``|S_p|``/``|O_p|`` count the stuck-OFF/ON cells of physical
+    row ``p``: a stuck-OFF cell kills a whole active-cell current (one
+    deficit unit, vs ``nf_unit * d`` per parasitic unit) with overlap
+    probability ``n_j / K``, while a stuck-ON cell adds spurious current
+    only under the row's *inactive* cells, so dense rows neutralise it.
+    Both factor as ``n_j * phi_p``, so the rearrangement inequality
+    applies to the combined objective exactly as in
+    :func:`optimal_row_order`: assign rows by descending density to
+    positions by ascending penalty ``phi_p``.  (The expected-overlap
+    approximation is what keeps the assignment a product form — exact
+    per-row/per-position overlap costs would need a Hungarian solve.)
+
+    With no stuck cells ``phi_p`` is strictly increasing in ``p`` and
+    the result equals :func:`optimal_row_order` exactly.  Single tile
+    only; vmap for batches (``repro.core.mdm.plan_tile_population``).
+    """
+    J, K = active.shape[-2], active.shape[-1]
+    row_rank = optimal_row_order(active)
+    n_off = jnp.sum((stuck == 1).astype(jnp.float32), axis=-1)
+    n_on = jnp.sum((stuck == 2).astype(jnp.float32), axis=-1)
+    phi = (jnp.asarray(nf_unit, jnp.float32)
+           * jnp.arange(J, dtype=jnp.float32) + (n_off - n_on) / K)
+    pos_rank = jnp.argsort(phi, stable=True)
+    # perm[p] = logical row hosted at physical position p: the r-th
+    # densest row goes to the r-th cheapest position.
+    return (jnp.zeros((J,), jnp.int32)
+            .at[pos_rank].set(row_rank.astype(jnp.int32)))
 
 
 def antidiagonal_mirror(active: jax.Array) -> jax.Array:

@@ -58,8 +58,10 @@ class MdmPlan(NamedTuple):
 
 @partial(jax.jit, static_argnames=("spec", "mode"))
 def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
-                         mode: str = "mdm") -> tuple[jax.Array, jax.Array,
-                                                     jax.Array, jax.Array]:
+                         mode: str = "mdm",
+                         fault_maps: jax.Array | None = None
+                         ) -> tuple[jax.Array, jax.Array,
+                                    jax.Array, jax.Array]:
     """Fused planning core over a flat tile population (T, rows, cols).
 
     Scoring, lexsort and NF bookkeeping are vmapped over the whole
@@ -67,6 +69,13 @@ def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
     from every layer of a model at once (``repro.deploy.planner``
     amortises planning this way, the same trick the batched circuit
     solver uses for its tile populations).
+
+    ``fault_maps`` (optional, (T, rows, cols) int8 physical cell states
+    — see ``repro.nonideal.models``) switches the sorting modes to
+    fault-aware placement (:func:`repro.core.manhattan
+    .fault_aware_row_order`): known stuck cells steer dense rows away
+    from fault-heavy physical rows.  The maps live in *physical* tile
+    coordinates and are never dataflow-reversed.
 
     Returns (row_perm, row_position, nf_before, nf_after), each with a
     leading T dim.
@@ -80,7 +89,12 @@ def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
     placed = reverse_dataflow(masks) if rev else masks
 
     if mode in ("sort", "mdm"):
-        perm = jax.vmap(manhattan.optimal_row_order)(placed)
+        if fault_maps is None:
+            perm = jax.vmap(manhattan.optimal_row_order)(placed)
+        else:
+            perm = jax.vmap(manhattan.fault_aware_row_order,
+                            in_axes=(0, 0, None))(placed, fault_maps,
+                                                  spec.nf_unit)
         perm = perm.astype(jnp.int32)
         placed = jnp.take_along_axis(placed, perm[..., None], axis=-2)
     else:
@@ -92,19 +106,24 @@ def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
 
 
 def plan_from_masks(masks: jax.Array, scale: jax.Array, spec: CrossbarSpec,
-                    mode: str = "mdm") -> MdmPlan:
+                    mode: str = "mdm",
+                    fault_maps: jax.Array | None = None) -> MdmPlan:
     """Build an MDM plan from tile activity masks (Ti, Tn, rows, cols).
 
     The front door for callers that already hold the physical tile
     layout (``deploy()`` computes it once and shares it with
     ``placed_masks``, instead of re-deriving the bit planes twice).
+    ``fault_maps`` ((Ti, Tn, rows, cols) int8 physical cell states)
+    makes the sorting modes fault-aware.
     """
     if mode not in MODES:
         raise ValueError(f"mode={mode!r} not in {MODES}")
     ti, tn, rows, cols = masks.shape
     flat = masks.reshape(ti * tn, rows, cols)
+    if fault_maps is not None:
+        fault_maps = fault_maps.reshape(ti * tn, rows, cols)
     perm, position, nf_before, nf_after = plan_tile_population(
-        flat, spec, mode)
+        flat, spec, mode, fault_maps)
     rev = mode in ("reverse", "mdm")
     return MdmPlan(perm.reshape(ti, tn, rows),
                    position.reshape(ti, tn, rows),
@@ -115,17 +134,24 @@ def plan_from_masks(masks: jax.Array, scale: jax.Array, spec: CrossbarSpec,
 
 @partial(jax.jit, static_argnames=("spec", "mode"))
 def plan_from_bits(bits: jax.Array, scale: jax.Array, spec: CrossbarSpec,
-                   mode: str = "mdm") -> MdmPlan:
+                   mode: str = "mdm",
+                   fault_maps: jax.Array | None = None) -> MdmPlan:
     """Build an MDM plan from bit-sliced weights (I, N, K)."""
-    return plan_from_masks(tile_masks(bits, spec), scale, spec, mode)
+    return plan_from_masks(tile_masks(bits, spec), scale, spec, mode,
+                           fault_maps)
 
 
-def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm") -> MdmPlan:
-    """Bit-slice a weight matrix and build its MDM deployment plan."""
+def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+               fault_maps: jax.Array | None = None) -> MdmPlan:
+    """Bit-slice a weight matrix and build its MDM deployment plan.
+
+    ``fault_maps`` ((Ti, Tn, rows, cols) int8 physical cell states)
+    folds known stuck cells into the row sort (fault-aware MDM).
+    """
     if w.ndim != 2:
         raise ValueError("plan_layer expects a 2-D (in_dim, out_dim) matrix")
     sliced = bitslice(w, spec.n_bits)
-    return plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+    return plan_from_bits(sliced.bits, sliced.scale, spec, mode, fault_maps)
 
 
 def placed_masks(bits: jax.Array, plan: MdmPlan, spec: CrossbarSpec,

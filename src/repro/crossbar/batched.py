@@ -328,10 +328,32 @@ def _solve_core(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
     ``chain_impl`` selects the preconditioner kernel per call)."""
     dtype = spec_arr.dtype
     active = active.astype(dtype)
-    v_in = jnp.broadcast_to(v_in.astype(dtype),
-                            active.shape[:1] + v_in.shape[-1:])
-    r, r_on, r_off = spec_arr[0], spec_arr[1], spec_arr[2]
+    r_on, r_off = spec_arr[1], spec_arr[2]
     g = jnp.where(active > 0, 1.0 / r_on, 1.0 / r_off)
+    return _solve_core_g(g, g, v_in, spec_arr, maxiter, tol, precision,
+                         chain_impl)
+
+
+def _solve_core_g(g: jax.Array, g_ref: jax.Array, v_in: jax.Array,
+                  spec_arr: jax.Array, maxiter: int, tol,
+                  precision: SolverPrecision,
+                  chain_impl: str = "lax") -> BatchedSolveResult:
+    """Batched solve over explicit per-cell conductances (T, J, K).
+
+    The generalisation the device-nonideality subsystem
+    (:mod:`repro.nonideal`) drives: faulted / variation-perturbed cells
+    are no longer binary on/off, so the tile state is a real-valued
+    conductance field ``g``.  ``g_ref`` holds the *intended* (clean)
+    conductances: ideal currents — and hence NF — are measured against
+    the programmer's intent, so the reported deficit includes both the
+    parasitic-resistance error and the fault/variation error.  With
+    ``g_ref is g`` this is exactly the classic mask solve."""
+    dtype = spec_arr.dtype
+    g = g.astype(dtype)
+    g_ref = g_ref.astype(dtype)
+    v_in = jnp.broadcast_to(v_in.astype(dtype),
+                            g.shape[:1] + v_in.shape[-1:])
+    r = spec_arr[0]
     cw = 1.0 / r
     T, J, K = g.shape
 
@@ -363,7 +385,7 @@ def _solve_core(active: jax.Array, v_in: jax.Array, spec_arr: jax.Array,
     b_norm2 = jnp.maximum(_dot(b, b), jnp.finfo(dtype).tiny)
     resid = jnp.sqrt(_dot(res, res) / b_norm2)
     currents = cw * x[:, 1, 0, :]               # (B[0,k] - 0) / r
-    ideal = jnp.einsum("tjk,tj->tk", g, v_in)
+    ideal = jnp.einsum("tjk,tj->tk", g_ref, v_in)
     di = currents - ideal
     nf_cols = jnp.abs(di) / jnp.maximum(ideal, 1e-30)
     nf_total = jnp.abs(jnp.sum(di, axis=-1)) / jnp.maximum(
@@ -393,6 +415,68 @@ def solve_crossbar_batched(active: jax.Array, v_in: jax.Array,
     """
     return _solve_core(active, v_in, spec_arr, maxiter, tol, precision,
                        chain_impl)
+
+
+@partial(jax.jit,
+         static_argnames=("maxiter", "tol", "precision", "chain_impl"))
+def solve_conductances_batched(g: jax.Array, g_ref: jax.Array,
+                               v_in: jax.Array, spec_arr: jax.Array,
+                               maxiter: int = 4000, tol: float = 1e-12,
+                               precision: SolverPrecision = F64,
+                               chain_impl: str = "lax"
+                               ) -> BatchedSolveResult:
+    """Solve a (..., J, K) batch of *conductance fields* in one fused PCG.
+
+    The nonideality entry point: ``g`` carries the perturbed per-cell
+    conductances (stuck faults, programming variation, read noise —
+    :mod:`repro.nonideal.models`), ``g_ref`` the intended clean ones
+    that define the ideal currents the NF is measured against.
+    ``g_ref`` may have fewer leading dims than ``g`` (e.g. one (T, J, K)
+    reference under an (S, T, J, K) Monte-Carlo ensemble): it is
+    broadcast *inside* the jit, where XLA fuses it into the
+    ideal-currents einsum instead of materialising S duplicate copies.
+    Leading dims are flattened into the solver's tile axis; results come
+    back flat (the front door below restores them).
+    """
+    J, K = g.shape[-2], g.shape[-1]
+    g_ref = jnp.broadcast_to(g_ref, g.shape).reshape(-1, J, K)
+    return _solve_core_g(g.reshape(-1, J, K), g_ref, v_in, spec_arr,
+                         maxiter, tol, precision, chain_impl)
+
+
+def measured_nf_conductances(g: jax.Array, spec: CrossbarSpec,
+                             g_ref: jax.Array | None = None,
+                             v_in: jax.Array | None = None,
+                             maxiter: int = 4000,
+                             precision: SolverPrecision | str | None = None,
+                             chain_impl: str = "lax"
+                             ) -> BatchedSolveResult:
+    """Circuit-measured NF of perturbed conductance fields, one solve.
+
+    ``g``: (..., J, K) per-cell conductances [S] with arbitrary leading
+    batch dims (the Monte-Carlo engine folds its sample axis in here —
+    the solver *is* the vmap); ``g_ref`` the matching clean conductances
+    (default: ``g`` itself; may carry fewer leading dims — it broadcasts
+    against ``g`` inside the jitted solve, so one (T, J, K) reference
+    serves a whole (S, T, J, K) ensemble without duplication).  The
+    result carries ``g``'s leading dims.
+    """
+    precision = resolve_precision(precision)
+    with enable_x64():
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((g.shape[-2],), spec.v_read, jnp.float64)
+        batch_shape = g.shape[:-2]
+        flat_v = v_in.reshape((-1, v_in.shape[-1])) if v_in.ndim > 1 else v_in
+        res = solve_conductances_batched(g, g if g_ref is None else g_ref,
+                                         flat_v, spec_arr,
+                                         maxiter, precision=precision,
+                                         chain_impl=chain_impl)
+        if len(batch_shape) != 1:
+            res = BatchedSolveResult(
+                *(f.reshape(batch_shape + f.shape[1:])
+                  for f in res[:-1]), res.iterations)
+        return res
 
 
 def measured_nf_batched(active: jax.Array, spec: CrossbarSpec,

@@ -13,6 +13,7 @@ from repro.deploy.cache import (  # noqa: F401
     CacheStats,
     PlanCache,
     default_cache_dir,
+    manifest_key,
     plan_key,
     weight_fingerprint,
 )

@@ -23,6 +23,13 @@ is configured (``.jax_cache/`` -> ``.mdm_plan_cache/``), mirroring how
 compile artefacts already persist across runs; otherwise it falls back
 to ``~/.cache/repro/mdm_plans``.  Writes are atomic (tmp +
 ``os.replace``), so a crash mid-write never corrupts an entry.
+
+On top of the per-entry store, a **per-checkpoint manifest** packs a
+whole model's plan set into one file keyed by the full ``{name: key}``
+mapping (:func:`manifest_key`): an unchanged-checkpoint redeploy then
+resolves every plan with a single read instead of one open per matrix.
+Manifests are a read-path accelerator only — entries remain the source
+of truth and any manifest mismatch falls back to per-entry probes.
 """
 from __future__ import annotations
 
@@ -71,14 +78,37 @@ def weight_fingerprint(w) -> str:
     return h.hexdigest()
 
 
-def plan_key(w_fingerprint: str, spec: CrossbarSpec, mode: str) -> str:
-    """Content address of one layer's plan."""
-    payload = json.dumps({
+def plan_key(w_fingerprint: str, spec: CrossbarSpec, mode: str,
+             fault_fingerprint: str | None = None) -> str:
+    """Content address of one layer's plan.
+
+    ``fault_fingerprint`` (a :func:`weight_fingerprint` of the physical
+    fault map) enters the key when fault-aware planning is requested —
+    a changed fault map must invalidate the plan exactly like changed
+    weights do.
+    """
+    payload = {
         "version": PLAN_CACHE_VERSION,
         "weights": w_fingerprint,
         "spec": list(spec),
         "mode": mode,
-    }, sort_keys=True)
+    }
+    if fault_fingerprint is not None:
+        payload["faults"] = fault_fingerprint
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+def manifest_key(keys) -> str:
+    """Content address of a whole checkpoint's plan set.
+
+    Derived from the full ``{name: plan_key}`` mapping, so any change to
+    any matrix's weights / spec / mode / fault map — or to the set of
+    matrix names — changes the manifest key and the stale manifest
+    simply becomes unreachable (same no-staleness property as the
+    per-entry keys).
+    """
+    payload = json.dumps(sorted(dict(keys).items()))
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
@@ -87,6 +117,8 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     puts: int = 0
+    manifest_hits: int = 0
+    manifest_misses: int = 0
 
 
 class PlanCache:
@@ -105,6 +137,10 @@ class PlanCache:
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], key + ".mdmplan")
 
+    def _manifest_path(self, mkey: str) -> str:
+        return os.path.join(self.root, "manifest", mkey[:2],
+                            mkey + ".mdmmanifest")
+
     @staticmethod
     def _perm_dtype(rows: int):
         # Permutation entries are < rows: the compact dtype cuts the
@@ -112,27 +148,49 @@ class PlanCache:
         return (np.uint8 if rows <= 256 else
                 np.uint16 if rows <= 65536 else np.uint32)
 
+    @classmethod
+    def _encode_plan(cls, plan: MdmPlan) -> bytes:
+        perm = np.asarray(plan.row_perm)
+        ti, tn, rows = perm.shape
+        perm_dt = cls._perm_dtype(rows)
+        return b"".join([
+            bytes([int(bool(plan.reversed_dataflow)),
+                   PLAN_CACHE_VERSION, 0, 0, 0]),
+            np.asarray([ti, tn, rows], "<u4").tobytes(),
+            np.stack([perm, np.asarray(plan.row_position)]
+                     ).astype(perm_dt).tobytes(),
+            np.concatenate([
+                np.asarray(plan.nf_before, np.float32).ravel(),
+                np.asarray(plan.nf_after, np.float32).ravel(),
+                np.asarray(plan.scale, np.float32).reshape(1),
+            ]).astype("<f4").tobytes(),
+        ])
+
+    @classmethod
+    def _decode_plan(cls, buf: bytes) -> MdmPlan:
+        if len(buf) < 17 or buf[1] != PLAN_CACHE_VERSION:
+            raise ValueError("bad plan entry header")
+        ti, tn, rows = np.frombuffer(buf, "<u4", 3, offset=5)
+        ti, tn, rows = int(ti), int(tn), int(rows)
+        perm_dt = cls._perm_dtype(rows)
+        n_perm = 2 * ti * tn * rows
+        off = 17
+        perms = np.frombuffer(buf, perm_dt, n_perm, offset=off)
+        off += n_perm * perms.itemsize
+        nfs = np.frombuffer(buf, "<f4", 2 * ti * tn + 1, offset=off)
+        perms = perms.astype(np.int32).reshape(2, ti, tn, rows)
+        return MdmPlan(
+            row_perm=perms[0], row_position=perms[1],
+            reversed_dataflow=np.bool_(buf[0] & 1),
+            nf_before=nfs[:ti * tn].reshape(ti, tn),
+            nf_after=nfs[ti * tn:2 * ti * tn].reshape(ti, tn),
+            scale=np.float32(nfs[-1]))
+
     def get(self, key: str) -> MdmPlan | None:
         try:
             with open(self._path(key), "rb") as f:
                 buf = f.read()
-            if len(buf) < 17 or buf[1] != PLAN_CACHE_VERSION:
-                raise ValueError("bad plan entry header")
-            ti, tn, rows = np.frombuffer(buf, "<u4", 3, offset=5)
-            ti, tn, rows = int(ti), int(tn), int(rows)
-            perm_dt = self._perm_dtype(rows)
-            n_perm = 2 * ti * tn * rows
-            off = 17
-            perms = np.frombuffer(buf, perm_dt, n_perm, offset=off)
-            off += n_perm * perms.itemsize
-            nfs = np.frombuffer(buf, "<f4", 2 * ti * tn + 1, offset=off)
-            perms = perms.astype(np.int32).reshape(2, ti, tn, rows)
-            plan = MdmPlan(
-                row_perm=perms[0], row_position=perms[1],
-                reversed_dataflow=np.bool_(buf[0] & 1),
-                nf_before=nfs[:ti * tn].reshape(ti, tn),
-                nf_after=nfs[ti * tn:2 * ti * tn].reshape(ti, tn),
-                scale=np.float32(nfs[-1]))
+            plan = self._decode_plan(buf)
         except (FileNotFoundError, ValueError, OSError):
             with self._lock:
                 self.stats.misses += 1
@@ -142,26 +200,22 @@ class PlanCache:
         return plan
 
     def put(self, key: str, plan: MdmPlan) -> None:
-        path = self._path(key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
+        if not self._atomic_write(self._path(key),
+                                  self._encode_plan(plan)):
+            return
+        with self._lock:
+            self.stats.puts += 1
+
+    def _atomic_write(self, path: str, payload: bytes) -> bool:
         try:
-            perm = np.asarray(plan.row_perm)
-            ti, tn, rows = perm.shape
-            perm_dt = self._perm_dtype(rows)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
+        except OSError:
+            return False
+        try:
             with os.fdopen(fd, "wb") as f:
-                f.write(bytes([int(bool(plan.reversed_dataflow)),
-                               PLAN_CACHE_VERSION, 0, 0, 0]))
-                f.write(np.asarray([ti, tn, rows], "<u4").tobytes())
-                f.write(np.stack([
-                    perm, np.asarray(plan.row_position)]).astype(
-                        perm_dt).tobytes())
-                f.write(np.concatenate([
-                    np.asarray(plan.nf_before, np.float32).ravel(),
-                    np.asarray(plan.nf_after, np.float32).ravel(),
-                    np.asarray(plan.scale, np.float32).reshape(1),
-                ]).astype("<f4").tobytes())
+                f.write(payload)
             os.replace(tmp, path)
         except OSError:
             # Cache is best-effort: a full/read-only disk must not fail
@@ -170,6 +224,64 @@ class PlanCache:
                 os.unlink(tmp)
             except OSError:
                 pass
-            return
+            return False
+        return True
+
+    # ------------------------ checkpoint manifests ---------------------
+    #
+    # A whole checkpoint's plans in ONE file: header line of JSON
+    # entry descriptors (name, per-entry key, offset, length), then the
+    # concatenated per-entry binary blobs (the exact bytes the entry
+    # files hold).  A full-checkpoint cache hit becomes a single read()
+    # + frombuffer views instead of one file open per matrix — the
+    # entry-probe pass is the whole cost of a hit redeploy.  Per-entry
+    # files are still written (they are shared across checkpoints that
+    # have matrices in common); the manifest is a pure read-path
+    # accelerator, validated against the caller's expected keys and
+    # falling back to per-entry probes on any mismatch or corruption.
+
+    def get_manifest(self, keys) -> dict[str, MdmPlan] | None:
+        """Resolve a whole ``{name: key}`` plan set from one file read.
+
+        Returns the full ``{name: MdmPlan}`` mapping, or None if the
+        manifest is absent, corrupt, or does not cover exactly the
+        requested entries (the caller then falls back to per-entry
+        probes).
+        """
+        keys = dict(keys)
+        try:
+            with open(self._manifest_path(manifest_key(keys)),
+                      "rb") as f:
+                buf = f.read()
+            nl = buf.index(b"\n")
+            head = json.loads(buf[:nl])
+            if head.get("v") != PLAN_CACHE_VERSION:
+                raise ValueError("manifest version mismatch")
+            entries = head["entries"]
+            if {e[0]: e[1] for e in entries} != keys:
+                raise ValueError("manifest entry set mismatch")
+            base = nl + 1
+            plans = {name: self._decode_plan(buf[base + off:
+                                                base + off + length])
+                     for name, _, off, length in entries}
+        except (FileNotFoundError, ValueError, KeyError, OSError):
+            with self._lock:
+                self.stats.manifest_misses += 1
+            return None
         with self._lock:
-            self.stats.puts += 1
+            self.stats.manifest_hits += 1
+        return plans
+
+    def put_manifest(self, keys, plans) -> None:
+        """Write the one-read manifest for a ``{name: key}`` plan set."""
+        keys = dict(keys)
+        blobs, entries, off = [], [], 0
+        for name, key in keys.items():
+            blob = self._encode_plan(plans[name])
+            entries.append([name, key, off, len(blob)])
+            blobs.append(blob)
+            off += len(blob)
+        head = json.dumps({"v": PLAN_CACHE_VERSION,
+                           "entries": entries}).encode() + b"\n"
+        self._atomic_write(self._manifest_path(manifest_key(keys)),
+                           head + b"".join(blobs))

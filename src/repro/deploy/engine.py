@@ -80,7 +80,8 @@ def collect_projection_matrices(params: dict, cfg: ModelConfig
 
 
 def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
-                            eta: float, plan: MdmPlan) -> CimDeployment:
+                            eta: float, plan: MdmPlan,
+                            cells=None, nonideal=None) -> CimDeployment:
     """Host mirror of ``repro.kernels.cim_mvm.ops.deploy`` packaging.
 
     Quantises and lays out one planned matrix entirely in numpy —
@@ -91,8 +92,16 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     per-matrix cost structure).  The array leaves stay on host; the
     per-slot ``jnp.stack`` in :func:`deploy_model_params` uploads each
     stacked field once.
+
+    ``cells`` (a :class:`repro.nonideal.inject.HostCells` sample, plus
+    its :class:`repro.nonideal.models.NonidealModel` as ``nonideal``)
+    injects device nonidealities at packaging time: stuck-at faults are
+    folded bit-exactly into the int16 codes, programming variation /
+    drift into the per-weight ``gain`` field — generation then runs
+    under the injected faults through the unchanged ``cim_mvm``.
     """
     I, N = w.shape
+    rev = mode in ("reverse", "mdm")
     scale = magnitude_scale_host(w, spec.n_bits)
     codes = quantize_codes_host(w, scale, spec.n_bits)
     sign = np.where(np.asarray(w, np.float32) < 0, -1, 1).astype(np.int32)
@@ -100,8 +109,33 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     ti, tn = spec.grid(I, N)
     rows, wpt = spec.rows, spec.weights_per_tile
     i_pad, n_pad = ti * rows, tn * wpt
+    codes = np.pad(codes, ((0, i_pad - I), (0, n_pad - N)))
+    sign = np.pad(sign, ((0, i_pad - I), (0, n_pad - N)),
+                  constant_values=1)
+
+    gain = None
+    if cells is not None and (cells.stuck is not None
+                              or cells.gamma is not None):
+        from repro.nonideal.inject import (
+            gather_physical_host,
+            perturb_codes_host,
+            variation_gain_host,
+        )
+
+        row_position = np.asarray(plan.row_position)
+        stuck_log = None
+        if cells.stuck is not None:
+            stuck_log = gather_physical_host(cells.stuck, row_position,
+                                             rev, spec)
+            codes = perturb_codes_host(codes, stuck_log, spec.n_bits)
+        if cells.gamma is not None:
+            gamma_log = gather_physical_host(cells.gamma, row_position,
+                                             rev, spec)
+            drift = 1.0 if nonideal is None else nonideal.drift_factor
+            gain = variation_gain_host(codes, stuck_log, gamma_log,
+                                       spec.n_bits, drift)
+
     signed = (codes.astype(np.int32) * sign).astype(np.int16)
-    signed = np.pad(signed, ((0, i_pad - I), (0, n_pad - N)))
 
     qi = np.arange(i_pad) % rows
     tii = np.arange(i_pad) // rows
@@ -110,13 +144,14 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     return CimDeployment(
         codes=signed, pos=pos, scale=np.float32(scale),
         n_bits=spec.n_bits, wpt=wpt, cols=spec.cols, eta=float(eta),
-        reversed_df=mode in ("reverse", "mdm"), in_dim=I, out_dim=N)
+        reversed_df=rev, in_dim=I, out_dim=N, gain=gain)
 
 
 def deploy_model_params(params: dict, cfg: ModelConfig,
                         cache: PlanCache | None = None,
-                        ctx: ShardingCtx | None = None
-                        ) -> tuple[dict, dict]:
+                        ctx: ShardingCtx | None = None,
+                        nonideal=None, nonideal_key=None,
+                        fault_aware: bool = True) -> tuple[dict, dict]:
     """Deploy every projection matrix of a model onto crossbars.
 
     Returns (cim_tree, report): ``cim_tree[slot][param]`` is one
@@ -124,13 +159,39 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     slot's pattern repeats — exactly the xs layout ``apply_model``'s
     layer scan consumes.  The report carries the fused-planning stats
     plus packaging wall-clock.
+
+    ``nonideal`` (a :class:`repro.nonideal.models.NonidealModel`)
+    deploys onto *imperfect* devices: one fused PRNG draw samples the
+    physical cell state of the whole checkpoint (keyed by
+    ``nonideal_key``, default key 0), known stuck cells steer the row
+    sort when ``fault_aware`` is set (fault-aware MDM; the maps are
+    fingerprinted into the plan-cache keys), and packaging folds the
+    faults into the deployment codes / gain so generation runs under
+    them end-to-end.
     """
     t0 = time.perf_counter()
     spec = spec_from_config(cfg)
     mode, eta = cfg.cim.mode, cfg.cim.eta
 
     mats = collect_projection_matrices(params, cfg)
-    plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx)
+
+    cells = fault_maps = None
+    if nonideal is not None and not nonideal.is_ideal:
+        from repro.nonideal.inject import sample_deployment_cells
+
+        if nonideal_key is None:
+            nonideal_key = jax.random.PRNGKey(0)
+        elif isinstance(nonideal_key, int):
+            nonideal_key = jax.random.PRNGKey(nonideal_key)
+        grids = {name: spec.grid(*w.shape) for name, w in mats.items()}
+        cells = sample_deployment_cells(nonideal_key, grids, spec,
+                                        nonideal)
+        if fault_aware:
+            fault_maps = {name: c.stuck for name, c in cells.items()
+                          if c.stuck is not None} or None
+
+    plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx,
+                                  fault_maps=fault_maps)
 
     cim_tree: dict = {}
     for i, bt in enumerate(cfg.block_pattern):
@@ -142,7 +203,10 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
             reps = params[slot][pname].shape[0]
             deps = [package_deployment_host(
                 mats[f"{slot}/{pname}/{r}"], spec, mode, eta,
-                plans[f"{slot}/{pname}/{r}"]) for r in range(reps)]
+                plans[f"{slot}/{pname}/{r}"],
+                cells=None if cells is None
+                else cells[f"{slot}/{pname}/{r}"],
+                nonideal=nonideal) for r in range(reps)]
             # One upload per stacked field (codes/pos/scale), not per
             # matrix: the stack is the device hand-off point.
             slot_deps[pname] = jax.tree_util.tree_map(
@@ -152,6 +216,12 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     report = dict(report)
     report["deploy_seconds"] = time.perf_counter() - t0
     report["n_slots"] = len(cim_tree)
+    if cells is not None:
+        report["nonideal"] = True
+        report["fault_aware"] = bool(fault_maps)
+        report["stuck_cells"] = int(sum(
+            (c.stuck != 0).sum() for c in cells.values()
+            if c.stuck is not None))
     return cim_tree, report
 
 

@@ -32,6 +32,7 @@ bit-identical — ``tests/test_deploy.py`` pins this.  A
 from __future__ import annotations
 
 import time
+from functools import partial
 from typing import Mapping
 
 import jax
@@ -42,7 +43,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.bitslice import magnitude_scale_host
 from repro.core.mdm import MdmPlan, plan_tile_population
 from repro.core.tiling import CrossbarSpec
-from repro.deploy.cache import PlanCache, plan_key, weight_fingerprint
+from repro.deploy.cache import (
+    PlanCache,
+    manifest_key,
+    plan_key,
+    weight_fingerprint,
+)
 from repro.distributed.sharding import ShardingCtx, logical_spec
 
 
@@ -112,23 +118,51 @@ def _population_sharding(ctx: ShardingCtx | None, n_tiles: int):
     return sharding, n_shards
 
 
+def _flat_fault_map(name: str, fm, spec: CrossbarSpec,
+                    ti: int, tn: int) -> np.ndarray:
+    """Normalise one matrix's physical fault map to (Ti*Tn, R, C) int8."""
+    fm = np.asarray(fm, np.int8)
+    want = (ti * tn, spec.rows, spec.cols)
+    if fm.shape == (ti, tn, spec.rows, spec.cols):
+        fm = fm.reshape(want)
+    if fm.shape != want:
+        raise ValueError(
+            f"{name}: fault map shape {fm.shape} != tile grid "
+            f"{(ti, tn, spec.rows, spec.cols)}")
+    return fm
+
+
 def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
                   mode: str = "mdm", cache: PlanCache | None = None,
-                  ctx: ShardingCtx | None = None
+                  ctx: ShardingCtx | None = None,
+                  fault_maps: Mapping[str, np.ndarray] | None = None
                   ) -> tuple[dict[str, MdmPlan], dict]:
     """Plan every matrix of a model in one fused pass.
 
     mats: name -> (I, N) weight matrix (shapes may differ per matrix).
+    ``fault_maps`` (optional, name -> (Ti, Tn, rows, cols) int8 physical
+    cell states — :mod:`repro.nonideal.models`) makes the sorting modes
+    fault-aware; the maps are fingerprinted into the cache keys so a
+    changed fault map replans exactly like changed weights.
     Returns ({name: MdmPlan}, report); the report records tile counts,
-    cache hit/miss split and wall-clock of the fused planning pass.
+    cache hit/miss split (including whether the whole set resolved from
+    one manifest read) and wall-clock of the fused planning pass.
     """
     t0 = time.perf_counter()
     plans: dict[str, MdmPlan] = {}
     keys: dict[str, str] = {}
     misses: list[str] = []
+    manifest_hit = False
     for name, w in mats.items():
         if w.ndim != 2:
             raise ValueError(f"{name}: expected 2-D matrix, got {w.shape}")
+
+    def key_of(name):
+        ffp = (None if fault_maps is None or name not in fault_maps
+               else weight_fingerprint(np.asarray(fault_maps[name],
+                                                  np.int8)))
+        return plan_key(weight_fingerprint(mats[name]), spec, mode, ffp)
+
     if cache is None:
         misses = list(mats)
     else:
@@ -138,18 +172,23 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         import os
         from concurrent.futures import ThreadPoolExecutor
 
-        def probe(name):
-            key = plan_key(weight_fingerprint(mats[name]), spec, mode)
-            return name, key, cache.get(key)
-
         workers = max(1, min(os.cpu_count() or 1, len(mats)))
         with ThreadPoolExecutor(max_workers=workers) as ex:
-            for name, key, hit in ex.map(probe, mats):
-                keys[name] = key
-                if hit is not None:
-                    plans[name] = hit
-                else:
-                    misses.append(name)
+            keys = dict(zip(mats, ex.map(key_of, mats)))
+            # One manifest read resolves the whole checkpoint when it
+            # was deployed before; otherwise fall back to per-entry
+            # probes (covers partial hits after a few matrices changed).
+            hit_all = cache.get_manifest(keys)
+            if hit_all is not None:
+                plans = hit_all
+                manifest_hit = True
+            else:
+                for name, hit in zip(keys, ex.map(cache.get,
+                                                  keys.values())):
+                    if hit is not None:
+                        plans[name] = hit
+                    else:
+                        misses.append(name)
     t_lookup = time.perf_counter() - t0
 
     total_tiles = 0
@@ -158,26 +197,42 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         grids: dict[str, tuple[int, int]] = {}
         scales: dict[str, np.ndarray] = {}
         flat_chunks = []
+        fault_chunks = [] if fault_maps is not None else None
         for name in misses:
             w = np.asarray(mats[name], np.float32)
             ti, tn = spec.grid(*w.shape)
             scale = magnitude_scale_host(w, spec.n_bits)
             flat_chunks.append(_matrix_tile_masks_host(w, scale, spec))
+            if fault_chunks is not None:
+                fm = fault_maps.get(name)
+                fault_chunks.append(
+                    np.zeros((ti * tn, spec.rows, spec.cols), np.int8)
+                    if fm is None
+                    else _flat_fault_map(name, fm, spec, ti, tn))
             grids[name] = (ti, tn)
             scales[name] = np.asarray(scale)
         order = misses
 
         # ...then one fused planning jit over the whole population.
         flat = np.concatenate(flat_chunks, axis=0)
+        faults = (None if fault_chunks is None
+                  else np.concatenate(fault_chunks, axis=0))
         total_tiles = flat.shape[0]
         sharding, n_shards = _population_sharding(ctx, total_tiles)
         pad = (-total_tiles) % n_shards
         if pad:  # zero-drive tiles plan to identity perms; dropped below
             flat = np.concatenate(
                 [flat, np.zeros((pad,) + flat.shape[1:], flat.dtype)])
-        flat = (jnp.asarray(flat) if sharding is None
-                else jax.device_put(flat, sharding))
-        pop = plan_tile_population(flat, spec, mode)
+            if faults is not None:
+                faults = np.concatenate(
+                    [faults,
+                     np.zeros((pad,) + faults.shape[1:], faults.dtype)])
+        put = (jnp.asarray if sharding is None
+               else partial(jax.device_put, device=sharding))
+        flat = put(flat)
+        if faults is not None:
+            faults = put(faults)
+        pop = plan_tile_population(flat, spec, mode, faults)
         # One transfer per field; slicing back per matrix is then pure
         # host views (an on-device slice would cost one dispatch per
         # matrix per field — most of the warm fused wall-clock).
@@ -201,10 +256,16 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
             if cache is not None:
                 cache.put(keys[name], plan)
 
+    if cache is not None and not manifest_hit and plans:
+        # Record the one-read manifest for this checkpoint's plan set
+        # (also after partial hits: the set's manifest key is new).
+        cache.put_manifest(keys, plans)
+
     report = {
         "n_matrices": len(mats),
         "cache_hits": len(mats) - len(misses),
         "cache_misses": len(misses),
+        "manifest_hit": manifest_hit,
         "tiles_planned": int(total_tiles),
         "lookup_seconds": t_lookup,
         "total_seconds": time.perf_counter() - t0,

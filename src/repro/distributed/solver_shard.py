@@ -54,6 +54,7 @@ from repro.core.tiling import CrossbarSpec
 from repro.crossbar.batched import (
     SolverPrecision,
     _solve_core,
+    _solve_core_g,
     resolve_precision,
 )
 from repro.distributed.sharding import ShardingCtx, logical_spec
@@ -149,6 +150,37 @@ def _sharded_solver(mesh: Mesh, axes: tuple[str, ...], maxiter: int,
     return jax.jit(fn)
 
 
+@lru_cache(maxsize=None)
+def _sharded_solver_g(mesh: Mesh, axes: tuple[str, ...], maxiter: int,
+                      tol: float, precision: SolverPrecision,
+                      chain_impl: str):
+    """Conductance-field variant of :func:`_sharded_solver`.
+
+    Same shard layout and post-loop global check, but the per-shard body
+    is :func:`repro.crossbar.batched._solve_core_g` over perturbed /
+    reference conductance pairs — the scale-out tier of the Monte-Carlo
+    nonideality engine (:mod:`repro.nonideal.montecarlo`), whose sample
+    axis is folded into the sharded tile axis.
+    """
+
+    def local(g, g_ref, v_in, spec_arr):
+        res = _solve_core_g(g, g_ref, v_in, spec_arr, maxiter, tol,
+                            precision, chain_impl)
+        unconverged = jax.lax.psum(
+            jnp.sum((res.residual > tol).astype(jnp.int32)), axes)
+        iters = jax.lax.pmax(res.iterations, axes)
+        return ShardedSolveResult(res.currents, res.ideal, res.nf_cols,
+                                  res.nf_total, res.residual, iters,
+                                  unconverged)
+
+    tiled = P(axes)
+    out = ShardedSolveResult(tiled, tiled, tiled, tiled, tiled, P(), P())
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(tiled, tiled, tiled, P()), out_specs=out,
+                   check_vma=False)
+    return jax.jit(fn)
+
+
 def solve_crossbar_sharded(active: jax.Array, v_in: jax.Array,
                            spec_arr: jax.Array, mesh: Mesh,
                            axes: tuple[str, ...], maxiter: int = 4000,
@@ -228,6 +260,81 @@ def measured_nf_sharded(active: jax.Array, spec: CrossbarSpec,
 
         res = solve_crossbar_sharded(flat, v, spec_arr, mesh, axes,
                                      maxiter, tol, precision, chain_impl)
+        if pad:
+            res = ShardedSolveResult(
+                *(f[:T] for f in res[:5]), res.iterations, res.unconverged)
+        if batch_shape != (T,):
+            res = ShardedSolveResult(
+                *(f.reshape(batch_shape + f.shape[1:]) for f in res[:5]),
+                res.iterations, res.unconverged)
+        return res
+
+
+def measured_nf_conductances_sharded(
+        g: jax.Array, spec: CrossbarSpec,
+        g_ref: jax.Array | None = None,
+        v_in: jax.Array | None = None,
+        maxiter: int = 4000,
+        precision: SolverPrecision | str | None = None,
+        ctx: ShardingCtx | None = None,
+        tol: float = 1e-12,
+        chain_impl: str = "lax") -> ShardedSolveResult:
+    """Sharded circuit-measured NF of perturbed conductance fields.
+
+    Scale-out twin of :func:`repro.crossbar.batched
+    .measured_nf_conductances`: ``g`` is (..., J, K) per-cell
+    conductances with arbitrary leading batch dims (the Monte-Carlo
+    engine's ``(samples, tiles)`` axes land here flattened), ``g_ref``
+    the matching clean conductances the NF is measured against.
+    Non-divisible batches are padded with zero-drive tiles.
+    """
+    precision = resolve_precision(precision)
+    if ctx is None or ctx.mesh is None:
+        ctx = tile_sharding_ctx()
+    mesh = ctx.mesh
+    axes = _tile_axes(mesh, ctx.rules)
+    if not axes:
+        from repro.crossbar.batched import measured_nf_conductances
+        res = measured_nf_conductances(g, spec, g_ref, v_in, maxiter,
+                                       precision, chain_impl)
+        return ShardedSolveResult(
+            *res[:5], res.iterations,
+            jnp.sum((res.residual > tol).astype(jnp.int32)))
+    n_shards = 1
+    for a in axes:
+        n_shards *= dict(mesh.shape)[a]
+
+    with enable_x64():
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((g.shape[-2],), spec.v_read, jnp.float64)
+        batch_shape = g.shape[:-2]
+        flat = g.reshape((-1,) + g.shape[-2:]).astype(jnp.float64)
+        # The reference field is materialised at the full ensemble shape
+        # here (unlike the batched engine, which broadcasts inside its
+        # jit): the shard_map in_specs slice ref and g along the same
+        # flattened tile axis, and a per-shard (T, J, K) replica of an
+        # unexpanded reference would cost *more* memory than the
+        # ensemble slice whenever n_shards > n_samples.  Each device
+        # ends up holding only its 1/n_shards slice.
+        ref = flat if g_ref is None else jnp.broadcast_to(
+            g_ref, g.shape).reshape(flat.shape).astype(jnp.float64)
+        T, J = flat.shape[0], flat.shape[1]
+        v = jnp.broadcast_to(
+            v_in.astype(jnp.float64),
+            (T, J) if v_in.ndim == 1 else v_in.shape
+        ).reshape(T, J)
+
+        pad = (-T) % n_shards
+        if pad:
+            zt = jnp.zeros((pad,) + flat.shape[1:], flat.dtype)
+            flat = jnp.concatenate([flat, zt])
+            ref = jnp.concatenate([ref, zt])
+            v = jnp.concatenate([v, jnp.zeros((pad, J), v.dtype)])
+
+        res = _sharded_solver_g(mesh, tuple(axes), maxiter, float(tol),
+                                precision, chain_impl)(flat, ref, v,
+                                                       spec_arr)
         if pad:
             res = ShardedSolveResult(
                 *(f[:T] for f in res[:5]), res.iterations, res.unconverged)

@@ -43,7 +43,7 @@ IMPLS = ("auto", "pallas", "xla", "interpret")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("codes", "pos", "scale"),
+         data_fields=("codes", "pos", "scale", "gain"),
          meta_fields=("n_bits", "wpt", "cols", "eta", "reversed_df",
                       "in_dim", "out_dim"))
 @dataclasses.dataclass
@@ -53,10 +53,16 @@ class CimDeployment:
     codes: (I_tiles*rows, N_tiles*wpt) int16 signed codes (sign*magnitude).
     pos:   (I_tiles*rows, N_tiles)     int32 physical row positions.
     scale: ()                          f32 quantisation scale.
+    gain:  (I_tiles*rows, N_tiles*wpt) f32 per-weight conductance gain,
+           or None (the ideal-device default).  Produced by
+           ``repro.nonideal.inject`` to fold programming variation /
+           drift into the deployment (stuck-at faults fold into the
+           codes themselves); consumed by the fused XLA path only.
 
     Registered as a pytree with the array fields as data, so stacked
     deployments (one per scanned model layer) thread through ``lax.scan``
-    and ``jax.jit`` like any other parameter.
+    and ``jax.jit`` like any other parameter (a None gain is an empty
+    subtree and costs nothing).
     """
 
     codes: jax.Array
@@ -69,6 +75,7 @@ class CimDeployment:
     reversed_df: bool
     in_dim: int
     out_dim: int
+    gain: jax.Array | None = None
 
 
 def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
@@ -147,7 +154,21 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
     is a single fused program with no block structure to tune, so the
     argument has no effect there.
     """
+    requested = impl
     impl = resolve_impl(impl)
+    if dep.gain is not None and impl != "xla":
+        # Per-weight nonideality gain lives in the fused XLA expansion
+        # only; the Pallas kernel has no gain operand.  "auto" on TPU
+        # legitimately lands here — degrade to the XLA path rather than
+        # silently dropping the injected variation.  An *explicit*
+        # pallas/interpret request must not be silently rerouted (a TPU
+        # parity check would attribute XLA numbers to the kernel), so
+        # surface the conflict instead.
+        if requested != "auto":
+            raise ValueError(
+                f"impl={requested!r} cannot apply a deployment gain; "
+                "use impl='xla' (or 'auto') for nonideal deployments")
+        impl = "xla"
     batch_shape = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     M, I = x2.shape
@@ -160,7 +181,8 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
         x2 = jnp.pad(x2, ((0, 0), (0, i_pad - I)))
         y = cim_mvm_xla(x2, dep.codes, dep.pos, dep.scale,
                         n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols,
-                        eta=dep.eta, reversed_df=dep.reversed_df)
+                        eta=dep.eta, reversed_df=dep.reversed_df,
+                        gain=dep.gain)
         return y[:, :dep.out_dim].reshape(*batch_shape, dep.out_dim)
 
     bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)

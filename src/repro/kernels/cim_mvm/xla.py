@@ -58,11 +58,20 @@ def cim_effective_weights(codes: jax.Array, pos: jax.Array,
 
 def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
                 scale: jax.Array, *, n_bits: int, wpt: int, cols: int,
-                eta: float, reversed_df: bool) -> jax.Array:
-    """y = x @ W' with on-the-fly code expansion; x: (M, I) f32."""
+                eta: float, reversed_df: bool,
+                gain: jax.Array | None = None) -> jax.Array:
+    """y = x @ W' with on-the-fly code expansion; x: (M, I) f32.
+
+    ``gain`` (optional, (I, N) f32 from ``repro.nonideal.inject``)
+    multiplies the effective weights cell-wise — programming variation /
+    drift folded per weight; it fuses into the same elementwise pipeline
+    feeding the matmul, so the weight-traffic story is unchanged.
+    """
     w_eff = cim_effective_weights(codes, pos, scale, n_bits=n_bits,
                                   wpt=wpt, cols=cols, eta=eta,
                                   reversed_df=reversed_df)
+    if gain is not None:
+        w_eff = w_eff * gain
     return jax.lax.dot_general(
         x.astype(jnp.float32), w_eff, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

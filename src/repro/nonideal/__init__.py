@@ -1,0 +1,93 @@
+"""Device-nonideality subsystem: fault/variation models, Monte-Carlo
+NF engine, and deployment-level fault injection.
+
+The paper's pitch is parasitic-resistance resilience; real crossbars
+additionally suffer stuck-at faults, programming variation, read noise
+and conductance drift (Bhattacharjee et al.; PRUNIX).  This package
+makes those scenarios first-class across every layer of the simulator:
+
+==========================  ============================================
+layer                       entry points
+==========================  ============================================
+device models               :mod:`repro.nonideal.models` —
+                            :class:`NonidealModel`, PRNG-keyed
+                            :func:`sample_cell_state`, conductance /
+                            cell-value application
+Monte-Carlo engine          :mod:`repro.nonideal.montecarlo` —
+                            :func:`mc_nf` folds an ``(S, T)`` sample x
+                            tile ensemble into the batched/sharded PCG
+                            solver's tile axis (no Python loop over
+                            samples); :func:`mc_nf_oracle` is the
+                            per-sample parity reference
+effective-weight evaluator  :mod:`repro.nonideal.weights` — Eq 17
+                            generalised to analog cell values, gathered
+                            physical -> logical through the plan
+deployment injection        :mod:`repro.nonideal.inject` — stuck bits
+                            fold *exactly* into the int16 deployment
+                            codes, variation/drift into a per-weight
+                            gain, so ``cim_mvm`` serves under injected
+                            faults unchanged
+fault-aware planning        :func:`repro.core.manhattan
+                            .fault_aware_row_order` via the
+                            ``fault_maps`` argument of
+                            ``repro.core.mdm`` / ``repro.deploy``
+==========================  ============================================
+
+**Composition contract.**  A :class:`NonidealModel` is a frozen record
+of independent terms; every term defaults to "off" and any subset
+composes.  Application order is fixed by the physics and identical in
+all three consumers (conductances, cell values, deployment codes):
+drift scales the programmed ON-state, log-normal variation spreads it,
+stuck-at faults override everything (a pinned device never saw the
+programming pulse, so it carries no variation or drift), read noise
+perturbs the read-back value last.  Fault maps always live in
+**physical** tile coordinates ``(Ti, Tn, rows, cols)`` — defects belong
+to the hardware — and are mapped into logical weight-bit layout only
+through a deployment plan (row permutation + dataflow direction).
+
+**PRNG-key discipline.**  Every sampler takes an explicit key and
+derives one sub-key per term with fixed ``jax.random.fold_in`` tags
+(stuck = 0, programming = 1, read = 2).  Consequences callers may rely
+on: (a) enabling or disabling one term never reshuffles another term's
+draws under the same key; (b) the Monte-Carlo engine's per-sample keys
+are ``jax.random.split(key, n_samples)``, so sample ``s`` of a vmapped
+ensemble is bit-identical to a standalone call with ``keys[s]`` (this
+is what the oracle parity test pins); (c) whole-checkpoint deployment
+sampling draws one fused population keyed by a single model-level key —
+per-matrix maps are slices in traversal order, deterministic given
+(key, checkpoint structure, model).  Never reuse a key across terms or
+samples; derive, don't recycle.
+"""
+from repro.nonideal.models import (
+    HEALTHY,
+    STUCK_OFF,
+    STUCK_ON,
+    CellSample,
+    NonidealModel,
+    apply_to_conductances,
+    cell_values,
+    conductances_from_masks,
+    sample_cell_state,
+    sample_stuck,
+)
+from repro.nonideal.montecarlo import (
+    McNfResult,
+    mc_nf,
+    mc_nf_oracle,
+    mc_samples,
+    summarize,
+)
+from repro.nonideal.weights import (
+    gather_physical,
+    nonideal_magnitude,
+    nonideal_weights,
+)
+
+__all__ = [
+    "HEALTHY", "STUCK_OFF", "STUCK_ON",
+    "CellSample", "NonidealModel",
+    "apply_to_conductances", "cell_values", "conductances_from_masks",
+    "sample_cell_state", "sample_stuck",
+    "McNfResult", "mc_nf", "mc_nf_oracle", "mc_samples", "summarize",
+    "gather_physical", "nonideal_magnitude", "nonideal_weights",
+]

@@ -1,0 +1,144 @@
+"""Host-side fault/variation injection into CIM deployments.
+
+``repro.deploy`` packages whole checkpoints on the host (numpy) to keep
+deployment free of per-matrix device dispatches; this module injects
+device nonidealities at the same level so serving under faults costs
+nothing extra at generation time:
+
+* **stuck-at faults fold into the int16 codes exactly** — a stuck cell
+  pins one bit of one weight's magnitude, so ``(code | on) & ~off`` is
+  a bit-exact model and the perturbed deployment flows through the
+  *unchanged* backend-dispatched ``cim_mvm`` (Pallas / XLA /
+  interpret);
+* **programming variation / drift fold into a per-weight gain**:
+  ``gain = M0' / M0`` (the perturbed over clean magnitude moment) is
+  exact for the dominant clean-magnitude term of Eq 17 and carries an
+  O(eta * sigma) approximation on the parasitic column-moment term —
+  the :mod:`repro.nonideal.weights` evaluator is the exact reference.
+  The gain rides the deployment as an optional (I_pad, N_pad) field
+  consumed by the fused XLA kernel
+  (:mod:`repro.kernels.cim_mvm.xla`);
+* **read noise has no deployment-level analogue** (it is per-read) —
+  it is modelled by the Monte-Carlo engine only.
+
+All functions mirror :func:`repro.nonideal.weights.gather_physical` in
+numpy: nonideality fields live in physical tile coordinates and are
+pulled into logical weight-bit layout through the deployment plan.
+"""
+from __future__ import annotations
+
+from typing import Mapping, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.tiling import CrossbarSpec
+from repro.nonideal.models import (
+    HEALTHY,
+    STUCK_OFF,
+    STUCK_ON,
+    NonidealModel,
+    sample_cell_state,
+)
+
+
+class HostCells(NamedTuple):
+    """One matrix's sampled physical cell state, host-resident.
+
+    stuck: (Ti, Tn, rows, cols) int8 cell codes, or None (no faults).
+    gamma: (Ti, Tn, rows, cols) f32 programming gains, or None.
+    """
+
+    stuck: np.ndarray | None
+    gamma: np.ndarray | None
+
+
+def sample_deployment_cells(key: jax.Array,
+                            grids: Mapping[str, tuple[int, int]],
+                            spec: CrossbarSpec,
+                            model: NonidealModel
+                            ) -> dict[str, HostCells]:
+    """Sample the physical cell state of a whole checkpoint at once.
+
+    One fused draw over the concatenated ``(sum Ti*Tn, rows, cols)``
+    tile population (the deployment engine's amortisation pattern),
+    sliced back per matrix in ``grids``'s iteration order — so the
+    fault map of each matrix is a deterministic function of (key,
+    traversal order, model).
+    """
+    total = sum(ti * tn for ti, tn in grids.values())
+    sample = sample_cell_state(key, (total, spec.rows, spec.cols), model)
+    has_faults = model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0
+    has_gain = model.sigma_program > 0.0 or model.drift_factor != 1.0
+    stuck = np.asarray(sample.stuck) if has_faults else None
+    gamma = np.asarray(sample.gamma) if has_gain else None
+    out: dict[str, HostCells] = {}
+    off = 0
+    for name, (ti, tn) in grids.items():
+        nt = ti * tn
+        shape = (ti, tn, spec.rows, spec.cols)
+        out[name] = HostCells(
+            stuck[off:off + nt].reshape(shape) if has_faults else None,
+            gamma[off:off + nt].reshape(shape) if has_gain else None)
+        off += nt
+    return out
+
+
+def gather_physical_host(field: np.ndarray, row_position: np.ndarray,
+                         reversed_df: bool,
+                         spec: CrossbarSpec) -> np.ndarray:
+    """Numpy mirror of :func:`repro.nonideal.weights.gather_physical`
+    over the full padded (I_pad, N_pad, K) logical layout."""
+    ti_n, tn_n = field.shape[0], field.shape[1]
+    rows, wpt, K = spec.rows, spec.weights_per_tile, spec.n_bits
+    i_pad, n_pad = ti_n * rows, tn_n * wpt
+    ti = np.arange(i_pad) // rows
+    q = np.arange(i_pad) % rows
+    tn = np.arange(n_pad) // wpt
+    slot = np.arange(n_pad) % wpt
+    p = np.asarray(row_position)[ti, :, q][:, tn]             # (I, N)
+    col = slot[:, None] * K + np.arange(K)[None, :]           # (N, K)
+    if reversed_df:
+        col = (spec.cols - 1) - col
+    return field[ti[:, None, None], tn[None, :, None],
+                 p[:, :, None], col[None, :, :]]              # (I, N, K)
+
+
+def perturb_codes_host(codes: np.ndarray, stuck_log: np.ndarray,
+                       n_bits: int) -> np.ndarray:
+    """Apply stuck bits to (I_pad, N_pad) uint32 magnitude codes.
+
+    ``stuck_log``: (I_pad, N_pad, K) logical-layout cell codes.  Bit
+    plane k is code bit ``n_bits - 1 - k`` (high-order first) — exact:
+    a stuck-ON cell reads as a programmed 1, a stuck-OFF cell as a 0.
+    """
+    shifts = np.uint32(n_bits - 1) - np.arange(n_bits, dtype=np.uint32)
+    on = np.bitwise_or.reduce(
+        (stuck_log == STUCK_ON).astype(np.uint32) << shifts, axis=-1)
+    off = np.bitwise_or.reduce(
+        (stuck_log == STUCK_OFF).astype(np.uint32) << shifts, axis=-1)
+    return (codes | on) & ~off
+
+
+def variation_gain_host(codes: np.ndarray, stuck_log: np.ndarray | None,
+                        gamma_log: np.ndarray, n_bits: int,
+                        drift_factor: float = 1.0) -> np.ndarray:
+    """Per-weight gain folding programming variation + drift into W'.
+
+    ``gain = M0' / M0`` with ``M0' = sum_k gamma_eff_k b_k 2^-(k+1)``
+    over the (already stuck-perturbed) bits; stuck cells carry gain 1 —
+    a pinned device never saw the programming pulse.  Exact for the
+    clean-magnitude term of Eq 17; the O(eta) column-moment term reuses
+    the same gain (documented approximation, reference evaluator in
+    :mod:`repro.nonideal.weights`).
+    """
+    shifts = np.uint32(n_bits - 1) - np.arange(n_bits, dtype=np.uint32)
+    bits = ((codes[..., None] >> shifts) & 1).astype(np.float32)
+    bw = (2.0 ** -(1.0 + np.arange(n_bits))).astype(np.float32)
+    g_eff = np.asarray(gamma_log, np.float32) * np.float32(drift_factor)
+    if stuck_log is not None:
+        g_eff = np.where(stuck_log != HEALTHY, np.float32(1.0), g_eff)
+    m0 = (bits * bw).sum(-1)
+    m0p = (bits * g_eff * bw).sum(-1)
+    return np.where(m0 > 0, m0p / np.maximum(m0, 1e-30),
+                    np.float32(1.0)).astype(np.float32)

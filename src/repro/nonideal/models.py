@@ -1,0 +1,180 @@
+"""Composable device-nonideality models for memristive bit cells.
+
+Every nonideality the subsystem knows about is a *perturbation of the
+per-cell conductance field* of a deployed tile population — the
+representation shared by the circuit solver (conductances in Siemens),
+the Eq-17 effective-weight evaluator (normalised cell values) and the
+deployment code injector:
+
+* **stuck-at faults** — a cell is pinned to the ON (LRS) or OFF (HRS)
+  conductance regardless of the programmed bit (Bhattacharjee et al.:
+  the dominant accuracy killer for sparse mappings);
+* **programming variation** — log-normal multiplicative spread of the
+  programmed conductance, ``g -> g * exp(sigma_program * N(0, 1))``;
+* **read noise** — zero-mean additive conductance noise per read,
+  ``g -> g + sigma_read * g_on * N(0, 1)``;
+* **conductance drift** — deterministic power-law decay of the ON-state
+  conductance, ``g_on -> g_on * drift_time ** -drift_nu``.
+
+All samplers are PRNG-keyed and fully vectorised over arbitrary leading
+batch dims; the key/composition contract is documented in
+:mod:`repro.nonideal` (the package docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import CrossbarSpec
+
+# Cell-state codes of a fault map (int8).  Fault maps live in *physical*
+# tile coordinates (ti, tn, row, col) — a property of the hardware,
+# independent of which logical weight the mapping lands on a cell.
+HEALTHY, STUCK_OFF, STUCK_ON = 0, 1, 2
+
+# Fixed fold_in tags deriving the per-term sub-keys (see package
+# docstring: enabling one term must never reshuffle another's draws).
+_TAG_STUCK, _TAG_PROGRAM, _TAG_READ = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class NonidealModel:
+    """One composable device-nonideality scenario (hashable/jit-static).
+
+    Every field defaults to "off", so ``NonidealModel()`` is the ideal
+    device and any subset of terms composes by construction.
+    """
+
+    p_stuck_off: float = 0.0    # stuck-at-OFF (HRS) cell rate
+    p_stuck_on: float = 0.0     # stuck-at-ON (LRS) cell rate
+    sigma_program: float = 0.0  # log-normal programming spread (of ln g)
+    sigma_read: float = 0.0     # additive read noise, in units of g_on
+    drift_nu: float = 0.0       # power-law ON-conductance drift exponent
+    drift_time: float = 1.0     # read time / programming time t0
+
+    def __post_init__(self):
+        if self.p_stuck_off + self.p_stuck_on > 1.0:
+            raise ValueError("p_stuck_off + p_stuck_on > 1")
+
+    @property
+    def drift_factor(self) -> float:
+        """Multiplier on the ON-state conductance at ``drift_time``."""
+        if self.drift_nu == 0.0:
+            return 1.0
+        return float(self.drift_time ** -self.drift_nu)
+
+    @property
+    def is_ideal(self) -> bool:
+        return (self.p_stuck_off == 0.0 and self.p_stuck_on == 0.0
+                and self.sigma_program == 0.0 and self.sigma_read == 0.0
+                and self.drift_nu == 0.0)
+
+
+class CellSample(NamedTuple):
+    """One drawn realisation of the per-cell device state.
+
+    stuck: int8 cell-state codes (HEALTHY / STUCK_OFF / STUCK_ON).
+    gamma: f32 multiplicative programming gain (1 where sigma = 0).
+    read:  f32 standard-normal read-noise draw (0 where sigma = 0;
+           scaled by ``sigma_read * g_on`` at application time).
+    """
+
+    stuck: jax.Array
+    gamma: jax.Array
+    read: jax.Array
+
+
+def sample_stuck(key: jax.Array, shape: tuple[int, ...],
+                 p_stuck_off: float, p_stuck_on: float) -> jax.Array:
+    """Mutually exclusive stuck-at fault codes from one uniform draw."""
+    u = jax.random.uniform(key, shape)
+    return jnp.where(
+        u < p_stuck_off, STUCK_OFF,
+        jnp.where(u < p_stuck_off + p_stuck_on, STUCK_ON,
+                  HEALTHY)).astype(jnp.int8)
+
+
+def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
+                      model: NonidealModel,
+                      stuck: jax.Array | None = None) -> CellSample:
+    """Draw one :class:`CellSample` for a cell population of ``shape``.
+
+    Sub-keys are derived with fixed ``fold_in`` tags per term, so the
+    draws of one term are invariant to every other term's rate (the
+    composition contract).  Terms with zero rate/spread skip their draw
+    and return the identity field.  Pass ``stuck`` to pin a *known*
+    fault map (the fault-aware-planning scenario) while variation and
+    read noise remain sampled.
+    """
+    if stuck is None:
+        if model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0:
+            stuck = sample_stuck(jax.random.fold_in(key, _TAG_STUCK),
+                                 shape, model.p_stuck_off,
+                                 model.p_stuck_on)
+        else:
+            stuck = jnp.zeros(shape, jnp.int8)
+    else:
+        stuck = jnp.broadcast_to(jnp.asarray(stuck, jnp.int8), shape)
+    if model.sigma_program > 0.0:
+        gamma = jnp.exp(model.sigma_program * jax.random.normal(
+            jax.random.fold_in(key, _TAG_PROGRAM), shape))
+    else:
+        gamma = jnp.ones(shape, jnp.float32)
+    if model.sigma_read > 0.0:
+        read = jax.random.normal(jax.random.fold_in(key, _TAG_READ),
+                                 shape)
+    else:
+        read = jnp.zeros(shape, jnp.float32)
+    return CellSample(stuck, gamma, read)
+
+
+def conductances_from_masks(active: jax.Array,
+                            spec: CrossbarSpec) -> jax.Array:
+    """Clean (intended) conductance field of activity masks, f32 [S]."""
+    return jnp.where(active > 0, jnp.float32(1.0 / spec.r_on),
+                     jnp.float32(1.0 / spec.r_off))
+
+
+def apply_to_conductances(active: jax.Array, sample: CellSample,
+                          spec: CrossbarSpec,
+                          model: NonidealModel) -> jax.Array:
+    """Perturbed conductance field of a tile population.
+
+    ``active`` (..., J, K) holds the clean activity masks; the sample's
+    fields broadcast against it (the Monte-Carlo engine passes
+    (S, T, J, K) samples against (T, J, K) masks).  Composition order
+    mirrors the physics: drift scales what was programmed, variation
+    spreads it, stuck cells override everything (the device never left
+    its pinned state, so it carries no programming terms), read noise
+    perturbs whatever is read back.  Conductances are clipped at 0 to
+    keep the solver's operator positive semi-definite.
+    """
+    g_on = jnp.float32(1.0 / spec.r_on)
+    g_off = jnp.float32(1.0 / spec.r_off)
+    g = jnp.where(active > 0, g_on * jnp.float32(model.drift_factor),
+                  g_off)
+    g = g * sample.gamma
+    g = jnp.where(sample.stuck == STUCK_ON, g_on, g)
+    g = jnp.where(sample.stuck == STUCK_OFF, g_off, g)
+    if model.sigma_read > 0.0:
+        g = g + jnp.float32(model.sigma_read) * g_on * sample.read
+    return jnp.maximum(g, 0.0)
+
+
+def cell_values(bits: jax.Array, stuck: jax.Array, gamma: jax.Array,
+                model: NonidealModel | None = None) -> jax.Array:
+    """Analog cell values for the Eq-17 effective-weight evaluator.
+
+    Maps programmed bits b in {0, 1} to the normalised conductance-level
+    cell value the shift-add arithmetic sees: stuck-ON -> 1, stuck-OFF
+    -> 0, healthy -> ``drift * gamma * b``.  (Read noise has no
+    weight-level analogue — it is a per-read term, modelled only by the
+    circuit-level Monte-Carlo engine.)  All arguments broadcast.
+    """
+    drift = 1.0 if model is None else model.drift_factor
+    c = bits.astype(jnp.float32) * gamma * jnp.float32(drift)
+    c = jnp.where(stuck == STUCK_ON, 1.0, c)
+    return jnp.where(stuck == STUCK_OFF, 0.0, c)

@@ -1,0 +1,190 @@
+"""Monte-Carlo NF / degradation engine over fault+variation ensembles.
+
+The circuit-calibrated point estimates of :mod:`repro.crossbar` answer
+"what does *this* crossbar do"; under stochastic device nonidealities
+the quantity of interest is a **distribution** over fault/variation
+realisations.  This engine produces it without ever looping over
+samples in Python:
+
+1. ``n_samples`` :class:`repro.nonideal.models.CellSample` draws are
+   taken by ``jax.vmap`` over split PRNG keys — one fused sampling
+   program for the whole ``(S, T, rows, cols)`` ensemble;
+2. the perturbed conductance fields are folded into the solver's tile
+   axis (``(S, T) -> S*T``): the batched/sharded PCG engine is already
+   embarrassingly parallel over tiles, so the sample axis rides the
+   same fused loop (``repro.crossbar.batched
+   .measured_nf_conductances``) or the same device mesh
+   (``repro.distributed.solver_shard
+   .measured_nf_conductances_sharded``) — the solver *is* the vmap;
+3. per-sample NF and significance-weighted degradation come back with
+   the ``(S, ...)`` axes restored; :func:`summarize` reduces them to
+   mean/std/p95.
+
+:func:`mc_nf_oracle` is the small-case parity reference: the identical
+per-sample computation as an explicit Python loop over single-sample
+solves (pinned in ``tests/test_nonideal.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import CrossbarSpec
+from repro.crossbar.batched import measured_nf_conductances
+from repro.nonideal.models import (
+    NonidealModel,
+    apply_to_conductances,
+    conductances_from_masks,
+    sample_cell_state,
+)
+
+
+class McNfResult(NamedTuple):
+    """Per-sample, per-tile Monte-Carlo solve results.
+
+    nf_total:     (S, ...) aggregate |sum di| / sum i0 per tile.
+    weighted_err: (S, ...) column-weighted relative error
+                  ``sum_c w_c |di_c| / sum_c w_c i0_c`` — with uniform
+                  weights a cancellation-free NF, with bit-significance
+                  weights the accuracy-degradation proxy (what the
+                  digital shift-add actually accumulates).
+    residual:     (S, ...) final relative CG residual per tile.
+    iterations:   () shared iteration count of the fused loop.
+    unconverged:  () tiles that missed tol (0 for the batched engine
+                  unless maxiter was hit).
+    """
+
+    nf_total: jax.Array
+    weighted_err: jax.Array
+    residual: jax.Array
+    iterations: jax.Array
+    unconverged: jax.Array
+
+
+def summarize(x) -> dict:
+    """Distribution summary the benchmarks record: mean / std / p95
+    over the whole (samples x tiles) ensemble."""
+    x = np.asarray(x, np.float64)
+    return {
+        "mean": float(np.mean(x)),
+        "std": float(np.std(x)),
+        "p95": float(np.percentile(x, 95.0)),
+    }
+
+
+def _weighted_err(currents, ideal, col_weights):
+    di = jnp.abs(currents - ideal)
+    if col_weights is not None:
+        w = jnp.asarray(col_weights, di.dtype)
+        di = di * w
+        ideal = ideal * w
+    return jnp.sum(di, axis=-1) / jnp.maximum(
+        jnp.sum(ideal, axis=-1), 1e-30)
+
+
+def mc_samples(key: jax.Array, masks: jax.Array, spec: CrossbarSpec,
+               model: NonidealModel, n_samples: int,
+               stuck: jax.Array | None = None):
+    """(perturbed g (S, ..., J, K), clean g (..., J, K)) for ``masks``.
+
+    One vmapped sampling program over the split per-sample keys — the
+    per-sample draws are bit-identical to calling
+    :func:`repro.nonideal.models.sample_cell_state` with each key in a
+    loop (the oracle does exactly that).  ``stuck`` pins a known
+    physical fault map shared by every sample (the fault-aware-mapping
+    scenario); variation and read noise stay per-sample.
+    """
+    keys = jax.random.split(key, n_samples)
+    g_clean = conductances_from_masks(masks, spec)
+    samples = jax.vmap(
+        lambda k: sample_cell_state(k, masks.shape, model, stuck))(keys)
+    return apply_to_conductances(masks, samples, spec, model), g_clean
+
+
+def mc_nf(masks: jax.Array, spec: CrossbarSpec, model: NonidealModel,
+          n_samples: int, key: jax.Array, *,
+          stuck: jax.Array | None = None,
+          precision="mixed",
+          ctx=None,
+          col_weights: jax.Array | None = None,
+          maxiter: int = 4000,
+          chain_impl: str = "lax") -> McNfResult:
+    """NF / degradation distribution of a tile population under ``model``.
+
+    ``masks``: (..., J, K) clean activity masks with arbitrary leading
+    tile dims.  Fully vectorised: sampling is one vmap, and the
+    ``(n_samples, T)`` ensemble is folded into the solver's tile axis —
+    one fused PCG call on a single device, or one sharded call over the
+    logical "tiles" mesh when ``ctx`` is given (each device then solves
+    its slice of the sample x tile ensemble).  Returns per-sample
+    per-tile distributions; reduce with :func:`summarize`.
+    """
+    batch_shape = masks.shape[:-2]
+    flat = masks.reshape((-1,) + masks.shape[-2:])
+    if stuck is not None:
+        stuck = jnp.asarray(stuck, jnp.int8).reshape(flat.shape)
+    g, g_ref = mc_samples(key, flat, spec, model, n_samples, stuck)
+
+    if ctx is not None:
+        from repro.distributed.solver_shard import (
+            measured_nf_conductances_sharded,
+        )
+        res = measured_nf_conductances_sharded(
+            g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
+            ctx=ctx, chain_impl=chain_impl)
+        unconverged = res.unconverged
+    else:
+        res = measured_nf_conductances(
+            g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
+            chain_impl=chain_impl)
+        unconverged = jnp.sum((res.residual > 1e-12).astype(jnp.int32))
+
+    werr = _weighted_err(res.currents, res.ideal, col_weights)
+    shape = (n_samples,) + batch_shape
+    return McNfResult(res.nf_total.reshape(shape), werr.reshape(shape),
+                      res.residual.reshape(shape), res.iterations,
+                      unconverged)
+
+
+def mc_nf_oracle(masks: jax.Array, spec: CrossbarSpec,
+                 model: NonidealModel, n_samples: int, key: jax.Array, *,
+                 stuck: jax.Array | None = None,
+                 precision="mixed",
+                 col_weights: jax.Array | None = None,
+                 maxiter: int = 4000) -> McNfResult:
+    """Per-sample reference: identical math as an explicit Python loop.
+
+    Small cases only — this pays one solver dispatch per sample, which
+    is exactly the cost structure :func:`mc_nf` exists to remove.  The
+    engine must match it bit-for-bit on the sampled conductances and to
+    solver tolerance on the currents (``tests/test_nonideal.py``).
+    """
+    batch_shape = masks.shape[:-2]
+    flat = masks.reshape((-1,) + masks.shape[-2:])
+    if stuck is not None:
+        stuck = jnp.asarray(stuck, jnp.int8).reshape(flat.shape)
+    keys = jax.random.split(key, n_samples)
+    g_clean = conductances_from_masks(flat, spec)
+    nf, werr, resid = [], [], []
+    iters = 0
+    for s in range(n_samples):
+        sample = sample_cell_state(keys[s], flat.shape, model, stuck)
+        g = apply_to_conductances(flat, sample, spec, model)
+        res = measured_nf_conductances(g, spec, g_ref=g_clean,
+                                       maxiter=maxiter,
+                                       precision=precision)
+        nf.append(np.asarray(res.nf_total))
+        werr.append(np.asarray(
+            _weighted_err(res.currents, res.ideal, col_weights)))
+        resid.append(np.asarray(res.residual))
+        iters = max(iters, int(res.iterations))
+    # Host-side stacking: jnp.stack would canonicalise the f64 solver
+    # outputs back to f32 outside the enable_x64 scope.
+    shape = (n_samples,) + batch_shape
+    resid = np.stack(resid).reshape(shape)
+    return McNfResult(np.stack(nf).reshape(shape),
+                      np.stack(werr).reshape(shape), resid,
+                      np.int64(iters), int((resid > 1e-12).sum()))

@@ -1,0 +1,117 @@
+"""Eq-17 effective weights under device nonidealities.
+
+Generalises :func:`repro.core.noise.noisy_magnitude` from binary bits to
+*analog cell values* (:func:`repro.nonideal.models.cell_values`): a
+stuck or variation-afflicted cell contributes ``c_k`` instead of
+``b_k`` to the shift-add,
+
+    |w'| = scale * sum_k c_k 2^{-(k+1)} [1 + eta * (p + col_k)]
+         = scale * [(1 + eta p) M0' + eta M1'],
+
+so any model can be evaluated "as if" it ran on a faulty,
+variation-spread crossbar by swapping W -> nonideal_weights(...).
+
+Coordinate contract: the nonideality fields (``stuck``, ``gamma``) live
+in **physical** tile coordinates ``(Ti, Tn, rows, cols)`` — defects are
+a property of the hardware — and are gathered into logical weight-bit
+layout *through the deployment plan* (row permutation + dataflow
+direction).  This is what makes the evaluator sensitive to the mapping:
+fault-aware MDM steers dense rows away from stuck-OFF-heavy physical
+rows, and the same fault field then intersects fewer programmed bits.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitslice import bitslice
+from repro.core.mdm import MdmPlan, plan_from_bits
+from repro.core.noise import PAPER_ETA, _bit_weights
+from repro.core.tiling import CrossbarSpec
+from repro.nonideal.models import NonidealModel, cell_values
+
+
+def gather_physical(field: jax.Array, plan: MdmPlan,
+                    spec: CrossbarSpec, I: int, N: int) -> jax.Array:
+    """Gather a physical (Ti, Tn, rows, cols) cell field into logical
+    (I, N, K) weight-bit layout under ``plan``.
+
+    Logical bit (i, n, k) sits at physical row
+    ``plan.row_position[i // rows, n // wpt, i % rows]`` and physical
+    column ``slot * K + k`` (mirrored when the dataflow is reversed).
+    """
+    rows, wpt, K = spec.rows, spec.weights_per_tile, spec.n_bits
+    ti = jnp.arange(I) // rows
+    q = jnp.arange(I) % rows
+    tn = jnp.arange(N) // wpt
+    slot = jnp.arange(N) % wpt
+    p = plan.row_position[ti, :, q][:, tn]                    # (I, N)
+    col = slot[:, None] * K + jnp.arange(K)[None, :]          # (N, K)
+    col = jnp.where(jnp.asarray(plan.reversed_dataflow),
+                    (spec.cols - 1) - col, col)
+    return field[ti[:, None, None], tn[None, :, None],
+                 p[:, :, None], col[None, :, :]]              # (I, N, K)
+
+
+@partial(jax.jit, static_argnames=("spec", "model"))
+def nonideal_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
+                       spec: CrossbarSpec, eta: float | jax.Array,
+                       stuck: jax.Array | None = None,
+                       gamma: jax.Array | None = None,
+                       model: NonidealModel | None = None) -> jax.Array:
+    """Effective |W'| (I, N) under PR distortion *and* cell nonidealities.
+
+    ``stuck`` / ``gamma`` are physical (Ti, Tn, rows, cols) fields (or
+    None for the ideal term); with both None this reduces exactly to
+    :func:`repro.core.noise.noisy_magnitude`.
+    """
+    I, N, K = bits.shape
+    rows, wpt = spec.rows, spec.weights_per_tile
+
+    stuck_log = (jnp.zeros((1, 1, 1), jnp.int8) if stuck is None
+                 else gather_physical(stuck, plan, spec, I, N))
+    gamma_log = (jnp.ones((1, 1, 1), jnp.float32) if gamma is None
+                 else gather_physical(gamma, plan, spec, I, N))
+    c = cell_values(bits, stuck_log, gamma_log, model)        # (I, N, K)
+
+    bw = _bit_weights(K)
+    slot = jnp.arange(N) % wpt
+    col = slot[:, None] * K + jnp.arange(K)[None, :]
+    col = jnp.where(jnp.asarray(plan.reversed_dataflow),
+                    (spec.cols - 1) - col, col).astype(jnp.float32)
+
+    ti = jnp.arange(I) // rows
+    q = jnp.arange(I) % rows
+    tn = jnp.arange(N) // wpt
+    p = plan.row_position[ti, :, q][:, tn].astype(jnp.float32)
+
+    m0 = jnp.einsum("ink,k->in", c, bw)
+    m1 = jnp.einsum("ink,nk->in", c, bw * col)
+    return scale * ((1.0 + eta * p) * m0 + eta * m1)
+
+
+def nonideal_weights(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+                     eta: float | jax.Array = PAPER_ETA,
+                     stuck: jax.Array | None = None,
+                     gamma: jax.Array | None = None,
+                     model: NonidealModel | None = None,
+                     plan: MdmPlan | None = None,
+                     fault_aware: bool = False
+                     ) -> tuple[jax.Array, MdmPlan]:
+    """End-to-end: bit-slice, plan, distort under faults + variation.
+
+    Returns (W', plan).  ``fault_aware=True`` folds the known ``stuck``
+    map into the planning itself (:func:`repro.core.manhattan
+    .fault_aware_row_order`); otherwise the plan ignores it and only the
+    evaluation sees the faults — the {MDM, fault-aware MDM} comparison
+    of ``benchmarks/fault_tolerance.py``.
+    """
+    sliced = bitslice(w, spec.n_bits)
+    if plan is None:
+        plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode,
+                              stuck if fault_aware else None)
+    mag = nonideal_magnitude(sliced.bits, sliced.scale, plan, spec, eta,
+                             stuck, gamma, model)
+    return mag * sliced.sign.astype(jnp.float32), plan

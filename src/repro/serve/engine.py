@@ -7,10 +7,15 @@ and long_500k lower one decode step against a seq_len-deep cache).
 
 With ``cfg.cim.enabled`` the engine deploys every projection matrix
 onto crossbars at init (``repro.deploy.deploy_model_params``, through
-the persistent plan cache, so redeploying an unchanged checkpoint is
-~free) and both lowerables route those matmuls through the
-backend-dispatched ``cim_mvm`` — the model serves under the paper's
-parasitic-resistance distortion for any ``cfg.cim.mode`` ablation.
+the persistent plan cache + per-checkpoint manifest, so redeploying an
+unchanged checkpoint is ~free) and both lowerables route those matmuls
+through the backend-dispatched ``cim_mvm`` — the model serves under the
+paper's parasitic-resistance distortion for any ``cfg.cim.mode``
+ablation.  Passing ``nonideal`` (a :class:`repro.nonideal.models
+.NonidealModel`) additionally serves on *imperfect devices*: stuck-at
+faults and programming variation are sampled once per ``nonideal_seed``
+at deployment, folded into the deployment codes / per-weight gain, and
+(with ``fault_aware``) steered around by the MDM row sort.
 Both prefill and decode donate the decode state: prefill consumes the
 freshly initialised cache and decode consumes its predecessor's, so
 there is no full cache copy at the prefill->decode handoff.
@@ -66,7 +71,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx | None = None,
                  max_seq: int = 2048, temperature: float = 0.0,
-                 plan_cache=None):
+                 plan_cache=None, nonideal=None, nonideal_seed: int = 0,
+                 fault_aware: bool = True):
         self.cfg = cfg
         self.ctx = ctx or ShardingCtx()
         self.params = params
@@ -76,8 +82,15 @@ class ServeEngine:
         if cfg.cim.enabled:
             from repro.deploy import PlanCache, deploy_model_params
             cache = plan_cache if plan_cache is not None else PlanCache()
+            # ``nonideal`` (repro.nonideal.models.NonidealModel) serves
+            # the model on imperfect devices: stuck faults / variation
+            # are sampled once at deployment (keyed by nonideal_seed),
+            # folded into the deployment codes/gain, and — with
+            # fault_aware — steered around by the MDM row sort.
             self.cim, self.deploy_report = deploy_model_params(
-                params, cfg, cache=cache, ctx=self.ctx)
+                params, cfg, cache=cache, ctx=self.ctx,
+                nonideal=nonideal, nonideal_key=nonideal_seed,
+                fault_aware=fault_aware)
         # Donate the state on both lowerables: prefill writes the whole
         # cache anyway, so aliasing the fresh buffers avoids one full
         # cache copy at the prefill->decode handoff.

@@ -123,6 +123,8 @@ def test_plan_cache_invalidation(tmp_path):
 
 
 def test_plan_cache_corrupt_entry_is_a_miss(tmp_path):
+    import shutil
+
     mats = {"m": jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2}
     cache = PlanCache(str(tmp_path))
     plans, _ = plan_matrices(mats, SPEC, "mdm", cache=cache)
@@ -130,12 +132,78 @@ def test_plan_cache_corrupt_entry_is_a_miss(tmp_path):
     path = cache._path(keys["m"])
     with open(path, "wb") as f:
         f.write(b"\x00garbage")
+    # Remove the manifest too: it holds its own copy of the entry bytes
+    # and would otherwise (correctly) mask the corrupted entry file.
+    shutil.rmtree(tmp_path / "manifest")
     _, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
     assert r["cache_misses"] == 1
     # The replan repaired the entry.
     fixed, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
     assert r["cache_hits"] == 1
     assert_plans_identical(fixed["m"], plans["m"])
+
+
+# ----------------------- per-checkpoint manifests -------------------------
+
+def test_manifest_full_hit_one_read(tmp_path):
+    """An unchanged checkpoint resolves every plan from ONE manifest
+    read — no per-entry file opens — and bit-identically."""
+    mats = _mats(seed=4)
+    cache = PlanCache(str(tmp_path))
+    cold, r1 = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert not r1["manifest_hit"]
+    hit, r2 = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r2["manifest_hit"]
+    assert r2["cache_hits"] == len(mats) and r2["cache_misses"] == 0
+    assert cache.stats.manifest_hits == 1
+    # The per-entry store was never probed on the manifest hit.
+    assert cache.stats.hits == 0
+    for name in mats:
+        assert_plans_identical(cold[name], hit[name])
+
+
+def test_manifest_invalidation_on_weight_change(tmp_path):
+    """Any changed matrix changes the manifest key: the stale manifest
+    is unreachable, unchanged matrices still hit per-entry, and the new
+    checkpoint gets its own manifest."""
+    mats = _mats(seed=5)
+    cache = PlanCache(str(tmp_path))
+    plan_matrices(mats, SPEC, "mdm", cache=cache)
+
+    changed = dict(mats)
+    name0 = next(iter(changed))
+    changed[name0] = changed[name0] + 0.01
+    _, r = plan_matrices(changed, SPEC, "mdm", cache=cache)
+    assert not r["manifest_hit"]
+    assert r["cache_misses"] == 1 and r["cache_hits"] == len(mats) - 1
+    # ...and the changed checkpoint now manifests too.
+    _, r = plan_matrices(changed, SPEC, "mdm", cache=cache)
+    assert r["manifest_hit"]
+    # The original checkpoint's manifest still stands.
+    _, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r["manifest_hit"]
+
+
+def test_manifest_corruption_falls_back_to_entries(tmp_path):
+    import os
+
+    mats = _mats(seed=6)
+    cache = PlanCache(str(tmp_path))
+    plans, _ = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    mdir = tmp_path / "manifest"
+    mfiles = [os.path.join(r, f) for r, _, fs in os.walk(mdir)
+              for f in fs]
+    assert len(mfiles) == 1
+    with open(mfiles[0], "wb") as f:
+        f.write(b"{not json")
+    fixed, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert not r["manifest_hit"]
+    assert r["cache_hits"] == len(mats)     # per-entry fallback
+    for name in mats:
+        assert_plans_identical(fixed[name], plans[name])
+    # The fallback rewrote a valid manifest.
+    _, r = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r["manifest_hit"]
 
 
 # --------------------------- model deployment ----------------------------

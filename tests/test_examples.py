@@ -1,0 +1,42 @@
+"""Tier-1 smoke tests for the example entry points.
+
+The examples are the repo's front door; they run in-process here with
+tiny shapes so a refactor that breaks their imports or call signatures
+fails tier-1 instead of the first user.  Output goes to stdout (pytest
+captures it); the assertions are "runs to completion" plus a couple of
+cheap sanity greps on the printed physics.
+"""
+import jax
+
+from repro.core.tiling import CrossbarSpec
+
+
+def test_quickstart_runs_tiny(capsys):
+    from examples import quickstart
+
+    quickstart.main(in_dim=64, out_dim=8, batch=2,
+                    spec=CrossbarSpec(rows=16, cols=16, n_bits=8))
+    out = capsys.readouterr().out
+    assert "mode=mdm" in out
+    assert "circuit-measured NF" in out
+    # eta=0 semantics check printed a small error
+    line = [ln for ln in out.splitlines() if "max err" in ln][0]
+    assert float(line.rsplit(":", 1)[1]) < 1e-5
+
+
+def test_cim_deploy_runs_smoke_config(capsys):
+    from examples import cim_deploy
+
+    # Smallest smoke config; high --min-size keeps the per-leaf planning
+    # to a handful of matrices, 16x16 tiles keep each one cheap.
+    cim_deploy.main(["--arch", "phi3-mini-3.8b", "--mode", "mdm",
+                     "--min-size", "4096", "--rows", "16",
+                     "--cols", "16"])
+    out = capsys.readouterr().out
+    assert "TOTAL:" in out
+    assert "deployment image for lm_head" in out
+
+
+def test_examples_do_not_leak_x64():
+    """The examples must not flip global precision state for the suite."""
+    assert jax.numpy.zeros(1).dtype == jax.numpy.float32

@@ -88,6 +88,33 @@ def test_row_order_ties_break_by_index():
     assert perm.tolist() == [1, 3, 0, 2]
 
 
+@pytest.mark.parametrize("jk", [(16, 16), (64, 64), (128, 10), (4, 1024)])
+@pytest.mark.parametrize("seed", [0, 11, 77])
+def test_packed_key_sort_equals_lexsort(jk, seed):
+    """The packed single-key int32 sort (one argsort) must reproduce the
+    two-argsort lexsort exactly — count desc, score desc, index asc —
+    at every production geometry (wide tiles beyond int32 range fall
+    back to lexsort, covered by the wide-tile regression above)."""
+    j, k = jk
+    key = jax.random.PRNGKey(seed)
+    m = (jax.random.uniform(key, (j, k)) < 0.25).astype(jnp.float32)
+    ref = jnp.lexsort((-manhattan.row_scores(m),
+                       -manhattan.row_counts(m)))
+    got = manhattan.optimal_row_order(m)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_packed_key_sort_dense_extremes():
+    """All-ones / all-zeros rows exercise the packed key's bounds."""
+    m = np.zeros((6, 64), np.float32)
+    m[2] = 1.0               # full row: max count, max score
+    m[4, :32] = 1.0
+    ref = jnp.lexsort((-manhattan.row_scores(jnp.asarray(m)),
+                       -manhattan.row_counts(jnp.asarray(m))))
+    got = manhattan.optimal_row_order(jnp.asarray(m))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
 def test_mdm_reduces_nf_bell_shaped():
     """Full MDM (reverse + sort) reduces aggregate NF on gaussian weights,
     and each ablation is internally consistent."""

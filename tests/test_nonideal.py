@@ -1,0 +1,408 @@
+"""Device-nonideality subsystem: models, Monte-Carlo engine parity,
+fault-aware planning, and end-to-end fault injection.
+
+The engine contract under test: (a) the vectorised Monte-Carlo NF
+engine must match the per-sample oracle (no batching artefacts), (b)
+fault maps live in physical coordinates and the same map must produce
+consistent results through the circuit solver, the Eq-17 evaluator and
+the deployment-code injector, (c) fault-aware MDM must beat plain MDM
+under known stuck-at-OFF faults.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import manhattan
+from repro.core.bitslice import bitslice
+from repro.core.mdm import MODES, placed_masks, plan_from_bits
+from repro.core.tiling import CrossbarSpec
+from repro.nonideal import (
+    STUCK_OFF,
+    STUCK_ON,
+    NonidealModel,
+    apply_to_conductances,
+    conductances_from_masks,
+    mc_nf,
+    mc_nf_oracle,
+    nonideal_magnitude,
+    nonideal_weights,
+    sample_cell_state,
+    sample_stuck,
+)
+
+SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
+
+
+def rand_masks(key, t=3, j=16, k=16, p=0.25):
+    return (jax.random.uniform(key, (t, j, k)) < p).astype(jnp.float32)
+
+
+# ------------------------------ device models -----------------------------
+
+def test_sample_stuck_rates_and_exclusivity():
+    key = jax.random.PRNGKey(0)
+    s = np.asarray(sample_stuck(key, (200, 200), 0.1, 0.05))
+    assert set(np.unique(s)) <= {0, STUCK_OFF, STUCK_ON}
+    assert abs((s == STUCK_OFF).mean() - 0.1) < 0.01
+    assert abs((s == STUCK_ON).mean() - 0.05) < 0.01
+
+
+def test_sample_cell_state_key_discipline():
+    """Enabling one term must not reshuffle another's draws (fixed
+    fold_in tags), and identical keys reproduce identical samples."""
+    key = jax.random.PRNGKey(3)
+    shape = (4, 16, 16)
+    a = sample_cell_state(key, shape,
+                          NonidealModel(p_stuck_off=0.1,
+                                        sigma_program=0.2))
+    b = sample_cell_state(key, shape,
+                          NonidealModel(p_stuck_off=0.1,
+                                        sigma_program=0.2,
+                                        sigma_read=0.1))
+    np.testing.assert_array_equal(np.asarray(a.stuck), np.asarray(b.stuck))
+    np.testing.assert_array_equal(np.asarray(a.gamma), np.asarray(b.gamma))
+    c = sample_cell_state(key, shape,
+                          NonidealModel(p_stuck_off=0.1,
+                                        sigma_program=0.2))
+    np.testing.assert_array_equal(np.asarray(a.gamma), np.asarray(c.gamma))
+
+
+def test_apply_to_conductances_semantics():
+    key = jax.random.PRNGKey(1)
+    masks = rand_masks(key, t=2)
+    g_on, g_off = 1.0 / SPEC.r_on, 1.0 / SPEC.r_off
+
+    # Ideal model: identity on the clean conductances.
+    ideal = sample_cell_state(key, masks.shape, NonidealModel())
+    g = np.asarray(apply_to_conductances(masks, ideal, SPEC,
+                                         NonidealModel()))
+    np.testing.assert_allclose(
+        g, np.asarray(conductances_from_masks(masks, SPEC)), rtol=1e-7)
+
+    # Stuck cells pin to the rail conductances exactly, overriding
+    # variation; drift scales healthy ON cells only.
+    model = NonidealModel(p_stuck_off=0.2, p_stuck_on=0.2,
+                          sigma_program=0.3, drift_nu=0.1, drift_time=10.)
+    s = sample_cell_state(key, masks.shape, model)
+    g = np.asarray(apply_to_conductances(masks, s, SPEC, model))
+    stuck = np.asarray(s.stuck)
+    np.testing.assert_allclose(g[stuck == STUCK_ON], g_on, rtol=1e-7)
+    np.testing.assert_allclose(g[stuck == STUCK_OFF], g_off, rtol=1e-7)
+    on_healthy = (np.asarray(masks) > 0) & (stuck == 0)
+    expect = (g_on * model.drift_factor
+              * np.asarray(s.gamma)[on_healthy])
+    np.testing.assert_allclose(g[on_healthy], expect, rtol=1e-6)
+    assert (g >= 0).all()
+
+
+# --------------------------- Monte-Carlo engine ---------------------------
+
+@pytest.mark.parametrize("model", [
+    NonidealModel(p_stuck_off=0.05, p_stuck_on=0.01),
+    NonidealModel(sigma_program=0.15, sigma_read=0.02),
+    NonidealModel(p_stuck_off=0.03, sigma_program=0.1, sigma_read=0.01,
+                  drift_nu=0.05, drift_time=100.0),
+])
+def test_mc_engine_matches_per_sample_oracle(model):
+    """The fused (samples x tiles)-batched solve must reproduce the
+    explicit per-sample loop: same PRNG draws, same currents to solver
+    tolerance."""
+    masks = rand_masks(jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(7)
+    a = mc_nf(masks, SPEC, model, 3, key, precision="f64")
+    b = mc_nf_oracle(masks, SPEC, model, 3, key, precision="f64")
+    np.testing.assert_allclose(np.asarray(a.nf_total), b.nf_total,
+                               rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(a.weighted_err), b.weighted_err,
+                               rtol=1e-9)
+    assert int(a.unconverged) == 0
+
+
+def test_mc_engine_sharded_matches_oracle():
+    from repro.distributed.solver_shard import tile_sharding_ctx
+
+    masks = rand_masks(jax.random.PRNGKey(4))
+    model = NonidealModel(p_stuck_off=0.05, sigma_program=0.1)
+    key = jax.random.PRNGKey(8)
+    a = mc_nf(masks, SPEC, model, 4, key, precision="f64",
+              ctx=tile_sharding_ctx())
+    b = mc_nf_oracle(masks, SPEC, model, 4, key, precision="f64")
+    np.testing.assert_allclose(np.asarray(a.nf_total), b.nf_total,
+                               rtol=1e-9)
+    assert int(a.unconverged) == 0
+
+
+def test_mc_ideal_model_is_degenerate():
+    """Zero nonideality: every sample reproduces the clean solve."""
+    from repro.crossbar.batched import measured_nf_batched
+
+    masks = rand_masks(jax.random.PRNGKey(5))
+    res = mc_nf(masks, SPEC, NonidealModel(), 3, jax.random.PRNGKey(0),
+                precision="f64")
+    nf = np.asarray(res.nf_total)
+    assert float(np.std(nf, axis=0).max()) == 0.0
+    clean = measured_nf_batched(masks, SPEC)
+    # rtol floor: conductances_from_masks stores g in f32 (device
+    # conductances are not known to 1e-8 anyway); the mask path builds
+    # g in f64.
+    np.testing.assert_allclose(nf[0], np.asarray(clean.nf_total),
+                               rtol=1e-6)
+
+
+def test_mc_fixed_stuck_map_shared_across_samples():
+    masks = rand_masks(jax.random.PRNGKey(6))
+    stuck = sample_stuck(jax.random.PRNGKey(1), masks.shape, 0.1, 0.0)
+    model = NonidealModel(p_stuck_off=0.5)  # rate ignored: map is pinned
+    a = mc_nf(masks, SPEC, model, 2, jax.random.PRNGKey(0), stuck=stuck,
+              precision="f64")
+    b = mc_nf_oracle(masks, SPEC, model, 2, jax.random.PRNGKey(0),
+                     stuck=stuck, precision="f64")
+    np.testing.assert_allclose(np.asarray(a.nf_total), b.nf_total,
+                               rtol=1e-9)
+    # no variation terms -> the fixed map makes samples identical
+    assert float(np.std(np.asarray(a.nf_total), axis=0).max()) == 0.0
+
+
+@pytest.mark.slow
+def test_mc_engine_paper_scale_tiles():
+    """64x64 paper-geometry ensemble through the sharded engine."""
+    from repro.distributed.solver_shard import tile_sharding_ctx
+
+    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    masks = (jax.random.uniform(jax.random.PRNGKey(0), (8, 64, 64))
+             < 0.2).astype(jnp.float32)
+    model = NonidealModel(p_stuck_off=0.02, sigma_program=0.1)
+    res = mc_nf(masks, spec, model, 8, jax.random.PRNGKey(1),
+                precision="mixed", ctx=tile_sharding_ctx())
+    assert np.asarray(res.nf_total).shape == (8, 8)
+    assert int(res.unconverged) == 0
+    assert float(np.std(np.asarray(res.nf_total), axis=0).min()) > 0
+
+
+# --------------------------- fault-aware planning -------------------------
+
+def test_fault_aware_order_reduces_to_plain_without_faults():
+    for seed in (0, 3, 9):
+        m = rand_masks(jax.random.PRNGKey(seed), t=1)[0]
+        plain = manhattan.optimal_row_order(m)
+        aware = manhattan.fault_aware_row_order(
+            m, jnp.zeros(m.shape, jnp.int8), SPEC.nf_unit)
+        np.testing.assert_array_equal(np.asarray(plain),
+                                      np.asarray(aware))
+
+
+def test_fault_aware_order_is_permutation_and_steers():
+    m = rand_masks(jax.random.PRNGKey(1), t=1)[0]
+    dens = np.asarray(manhattan.row_counts(m))
+    # Physical row 0 heavily stuck-OFF: the densest row must not land
+    # there (it goes to the cheapest healthy position instead).
+    stuck = jnp.zeros(m.shape, jnp.int8).at[0, :].set(STUCK_OFF)
+    perm = np.asarray(manhattan.fault_aware_row_order(m, stuck,
+                                                      SPEC.nf_unit))
+    assert sorted(perm.tolist()) == list(range(m.shape[0]))
+    assert dens[perm[0]] == dens.min()   # sparsest row absorbs the faults
+    assert dens[perm[1]] == dens.max()   # densest takes the next position
+
+
+def test_plan_population_fault_maps_matches_rowwise():
+    masks = rand_masks(jax.random.PRNGKey(2), t=4)
+    stuck = sample_stuck(jax.random.PRNGKey(3), masks.shape, 0.1, 0.05)
+    from repro.core.mdm import plan_tile_population
+    from repro.core.tiling import reverse_dataflow
+
+    perm, pos, _, _ = plan_tile_population(masks, SPEC, "mdm", stuck)
+    placed = reverse_dataflow(masks)
+    for t in range(masks.shape[0]):
+        ref = manhattan.fault_aware_row_order(placed[t], stuck[t],
+                                              SPEC.nf_unit)
+        np.testing.assert_array_equal(np.asarray(perm[t]),
+                                      np.asarray(ref))
+        np.testing.assert_array_equal(
+            np.asarray(pos[t])[np.asarray(perm[t])],
+            np.arange(masks.shape[1]))
+
+
+@pytest.mark.parametrize("mode", [m for m in MODES
+                                  if m not in ("sort", "mdm")])
+def test_fault_maps_noop_for_unsorted_modes(mode):
+    from repro.core.mdm import plan_tile_population
+
+    masks = rand_masks(jax.random.PRNGKey(4), t=2)
+    stuck = sample_stuck(jax.random.PRNGKey(5), masks.shape, 0.2, 0.0)
+    a = plan_tile_population(masks, SPEC, mode)
+    b = plan_tile_population(masks, SPEC, mode, stuck)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fault_aware_mdm_beats_plain_mdm_measured(seed):
+    """The acceptance check at tier-1 scale: under a known stuck-at-OFF
+    map, fault-aware MDM must beat plain MDM on both the circuit-
+    measured NF and the significance-weighted error distributions."""
+    w = jax.random.laplace(jax.random.PRNGKey(seed), (64, 8)) * 0.01
+    sliced = bitslice(w, SPEC.n_bits)
+    ti, tn = SPEC.grid(*w.shape)
+    stuck = sample_stuck(jax.random.PRNGKey(100 + seed),
+                         (ti, tn, SPEC.rows, SPEC.cols), 0.08, 0.0)
+    model = NonidealModel(p_stuck_off=0.08)
+    wgt = (2.0 ** -(1.0 + np.arange(SPEC.cols) % SPEC.n_bits))[::-1]
+    out = {}
+    for name, aware in (("mdm", False), ("aware", True)):
+        plan = plan_from_bits(sliced.bits, sliced.scale, SPEC, "mdm",
+                              stuck if aware else None)
+        placed = placed_masks(sliced.bits, plan, SPEC)
+        res = mc_nf(placed.reshape(ti * tn, SPEC.rows, SPEC.cols), SPEC,
+                    model, 2, jax.random.PRNGKey(7),
+                    stuck=stuck.reshape(ti * tn, SPEC.rows, SPEC.cols),
+                    col_weights=wgt.copy(), precision="f64")
+        out[name] = (float(np.mean(np.asarray(res.nf_total))),
+                     float(np.mean(np.asarray(res.weighted_err))))
+    assert out["aware"][0] < out["mdm"][0]
+    assert out["aware"][1] < out["mdm"][1]
+
+
+# ----------------------- evaluator / injection parity ---------------------
+
+def test_nonideal_magnitude_reduces_to_noisy_magnitude():
+    from repro.core.noise import noisy_magnitude
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2
+    sliced = bitslice(w, SPEC.n_bits)
+    for mode in ("baseline", "mdm"):
+        plan = plan_from_bits(sliced.bits, sliced.scale, SPEC, mode)
+        a = noisy_magnitude(sliced.bits, sliced.scale, plan, SPEC, 2e-3)
+        b = nonideal_magnitude(sliced.bits, sliced.scale, plan, SPEC,
+                               2e-3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6)
+
+
+def test_stuck_codes_injection_matches_evaluator():
+    """Stuck faults folded into the deployment codes must reproduce the
+    Eq-17 evaluator through the production cim_mvm path."""
+    from repro.deploy import package_deployment_host
+    from repro.kernels.cim_mvm.ops import cim_mvm
+    from repro.nonideal.inject import HostCells
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 48))
+    ti, tn = SPEC.grid(*w.shape)
+    stuck = np.asarray(sample_stuck(
+        jax.random.PRNGKey(3), (ti, tn, SPEC.rows, SPEC.cols),
+        0.05, 0.02))
+    for mode in ("baseline", "mdm"):
+        wp, plan = nonideal_weights(w, SPEC, mode, eta=2e-3,
+                                    stuck=jnp.asarray(stuck))
+        dep = package_deployment_host(
+            np.asarray(w, np.float32), SPEC, mode, 2e-3, plan,
+            cells=HostCells(stuck=stuck, gamma=None))
+        dep = jax.tree_util.tree_map(jnp.asarray, dep)
+        y = cim_mvm(x, dep, impl="xla")
+        ref = x @ wp
+        err = float(jnp.max(jnp.abs(y - ref))
+                    / jnp.max(jnp.abs(ref)))
+        assert err < 1e-5, (mode, err)
+
+
+def test_variation_gain_tracks_evaluator():
+    """Per-weight gain folding is exact on the clean-magnitude term and
+    O(eta * sigma) on the parasitic column moment — the serving path
+    must track the exact evaluator within that budget."""
+    from repro.deploy import package_deployment_host
+    from repro.kernels.cim_mvm.ops import cim_mvm
+    from repro.nonideal.inject import HostCells
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 48))
+    ti, tn = SPEC.grid(*w.shape)
+    model = NonidealModel(sigma_program=0.1)
+    gamma = np.asarray(jnp.exp(0.1 * jax.random.normal(
+        jax.random.PRNGKey(4), (ti, tn, SPEC.rows, SPEC.cols))),
+        np.float32)
+    wp, plan = nonideal_weights(w, SPEC, "mdm", eta=2e-3,
+                                gamma=jnp.asarray(gamma), model=model)
+    dep = package_deployment_host(
+        np.asarray(w, np.float32), SPEC, "mdm", 2e-3, plan,
+        cells=HostCells(stuck=None, gamma=gamma), nonideal=model)
+    assert dep.gain is not None
+    dep = jax.tree_util.tree_map(jnp.asarray, dep)
+    y = cim_mvm(x, dep, impl="xla")
+    ref = x @ wp
+    rel = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 5e-3
+    # interpret mode must refuse rather than silently drop the gain
+    with pytest.raises(ValueError, match="gain"):
+        cim_mvm(x, dep, impl="interpret")
+
+
+# ----------------------------- deployment E2E -----------------------------
+
+def _serve_cfg():
+    from repro.configs.base import CimConfig, ModelConfig
+
+    return ModelConfig(
+        name="cim-nonideal-test", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, block_pattern=("attn",),
+        remat="none", dtype="float32", attn_chunk=32,
+        cim=CimConfig(enabled=True, mode="mdm", rows=16, cols=16,
+                      n_bits=4))
+
+
+def test_serve_engine_generates_under_injected_faults():
+    from repro.deploy import PlanCache
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = _serve_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = NonidealModel(p_stuck_off=0.02, p_stuck_on=0.005,
+                          sigma_program=0.05)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    with tempfile.TemporaryDirectory() as d:
+        eng = ServeEngine(cfg, params, max_seq=64,
+                          plan_cache=PlanCache(d), nonideal=model,
+                          nonideal_seed=3)
+        assert eng.deploy_report["nonideal"]
+        assert eng.deploy_report["fault_aware"]
+        assert eng.deploy_report["stuck_cells"] > 0
+        out = np.asarray(eng.generate(prompts, 3))
+        assert out.shape == (2, 3)
+        # Same seed -> same fault map -> identical generation; the
+        # fault-aware plans also hit the cache (keys include the map).
+        eng2 = ServeEngine(cfg, params, max_seq=64,
+                           plan_cache=PlanCache(d), nonideal=model,
+                           nonideal_seed=3)
+        assert eng2.deploy_report["cache_misses"] == 0
+        np.testing.assert_array_equal(out,
+                                      np.asarray(eng2.generate(prompts, 3)))
+        # A different fault seed is a different deployment.
+        eng3 = ServeEngine(cfg, params, max_seq=64,
+                           plan_cache=PlanCache(d), nonideal=model,
+                           nonideal_seed=4)
+        assert eng3.deploy_report["cache_misses"] > 0
+
+
+def test_deploy_fault_maps_change_plan_keys():
+    from repro.deploy import plan_matrices
+
+    mats = {"m": jax.random.normal(jax.random.PRNGKey(0), (48, 6)) * 0.2}
+    ti, tn = SPEC.grid(48, 6)
+    stuck = np.asarray(sample_stuck(jax.random.PRNGKey(1),
+                                    (ti, tn, SPEC.rows, SPEC.cols),
+                                    0.1, 0.0))
+    with tempfile.TemporaryDirectory() as d:
+        from repro.deploy import PlanCache
+
+        cache = PlanCache(d)
+        plan_matrices(mats, SPEC, "mdm", cache=cache)
+        _, r = plan_matrices(mats, SPEC, "mdm", cache=cache,
+                             fault_maps={"m": stuck})
+        assert r["cache_misses"] == 1   # fault map entered the key
+        _, r = plan_matrices(mats, SPEC, "mdm", cache=cache,
+                             fault_maps={"m": stuck})
+        assert r["cache_hits"] == 1 and r["manifest_hit"]
