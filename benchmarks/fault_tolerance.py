@@ -1,9 +1,10 @@
-"""Benchmark: fault/variation tolerance of MDM mappings.
+"""Benchmark: fault/variation tolerance of mapping pipelines.
 
-Sweeps stuck-at-OFF fault rate x programming-variation sigma over three
-mappings — baseline, plain MDM, and fault-aware MDM (the known physical
-fault map folded into the row sort,
-:func:`repro.core.manhattan.fault_aware_row_order`) — and records the
+Sweeps stuck-at-OFF fault rate x programming-variation sigma over four
+mapping pipelines — baseline, plain MDM, fault-aware MDM (uniform fault
+currency) and significance-weighted fault-aware MDM (stuck columns
+weighted by the hosted bit plane's 2^-(k+1) shift-add weight,
+:class:`repro.mapping.SignificanceWeightedRows`) — and records the
 circuit-measured **distributions** (mean/std/p95 over the Monte-Carlo
 fault+variation ensemble, :mod:`repro.nonideal.montecarlo`):
 
@@ -14,9 +15,11 @@ fault+variation ensemble, :mod:`repro.nonideal.montecarlo`):
 
 The comparison is paired: one physical fault map is sampled per fault
 rate (hardware defects do not move when the mapping changes) and the
-per-sample variation draws share the PRNG key across mappings.  The
-headline check — recorded per rate — is fault-aware MDM beating plain
-MDM on both distributions under known stuck-at-OFF faults.
+per-sample variation draws share the PRNG key across mappings.  Two
+headline checks are recorded per rate: fault-aware MDM beating plain
+MDM on both distributions, and the significance-weighted strategy
+matching-or-beating plain fault-aware on the accuracy proxy at equal
+NF currency (the ROADMAP follow-up this strategy implements).
 """
 from __future__ import annotations
 
@@ -27,22 +30,28 @@ import numpy as np
 from repro.core.bitslice import bitslice
 from repro.core.mdm import placed_masks, plan_from_bits
 from repro.core.tiling import CrossbarSpec
+from repro.mapping import MappingPipeline, named_pipelines
 from repro.nonideal import NonidealModel, mc_nf, sample_stuck, summarize
 
-# mapping name -> (MDM mode, fold the known fault map into the sort?)
-MAPPINGS = {
-    "baseline": ("baseline", False),
-    "mdm": ("mdm", False),
-    "mdm_fault_aware": ("mdm", True),
+# mapping name -> (MappingPipeline, feed the known fault map to the sort?)
+_P = named_pipelines()
+MAPPINGS: dict[str, tuple[MappingPipeline, bool]] = {
+    "baseline": (_P["baseline"], False),
+    "mdm": (_P["mdm"], False),
+    "mdm_fault_aware": (_P["fault_aware"], True),
+    "mdm_sig_weighted": (_P["significance_weighted"], True),
 }
 
 
-def _col_significance(spec: CrossbarSpec, mode: str) -> np.ndarray:
-    """2^-(k+1) weight of each physical column's bit plane."""
-    k_of_col = np.arange(spec.cols) % spec.n_bits
-    if mode in ("reverse", "mdm"):
-        k_of_col = k_of_col[::-1]
-    return (2.0 ** -(1.0 + k_of_col)).astype(np.float32)
+def _col_significance(spec: CrossbarSpec,
+                      pipe: MappingPipeline) -> np.ndarray:
+    """2^-(k+1) weight of each physical column's bit plane (identity
+    column strategies; column-permuting pipelines would need the
+    per-tile plan layout)."""
+    from repro.core.mdm import physical_column_significance
+
+    return np.asarray(physical_column_significance(
+        spec, pipe.reversed_dataflow))[0]
 
 
 def run(n_rows: int = 256, n_samples: int = 6,
@@ -57,6 +66,7 @@ def run(n_rows: int = 256, n_samples: int = 6,
 
     out: dict = {"tiles": T, "n_samples": n_samples}
     aware_wins = {}
+    sig_wins = {}
     for ri, rate in enumerate(rates):
         # One fixed physical fault map per rate: defects belong to the
         # hardware, shared by every mapping under comparison.
@@ -67,9 +77,9 @@ def run(n_rows: int = 256, n_samples: int = 6,
                                   sigma_program=sigma, sigma_read=0.01)
             mc_key = jax.random.fold_in(key, 1000 + ri)
             entry: dict = {}
-            for name, (mode, aware) in MAPPINGS.items():
+            for name, (pipe, aware) in MAPPINGS.items():
                 plan = plan_from_bits(sliced.bits, sliced.scale, spec,
-                                      mode, stuck if aware else None)
+                                      pipe, stuck if aware else None)
                 placed = placed_masks(sliced.bits, plan, spec,
                                       masks=None)
                 res = mc_nf(
@@ -77,7 +87,7 @@ def run(n_rows: int = 256, n_samples: int = 6,
                     model, n_samples, mc_key,
                     stuck=jnp.asarray(stuck).reshape(T, spec.rows,
                                                      spec.cols),
-                    col_weights=_col_significance(spec, mode),
+                    col_weights=_col_significance(spec, pipe),
                     precision="mixed")
                 entry[name] = {
                     "nf": summarize(res.nf_total),
@@ -98,11 +108,25 @@ def run(n_rows: int = 256, n_samples: int = 6,
                     < entry["mdm"]["weighted_err"]["mean"]
                     and entry["mdm_fault_aware"]["nf"]["mean"]
                     < entry["mdm"]["nf"]["mean"])
+                # The significance-weighted acceptance: >= plain
+                # fault-aware on the accuracy proxy (weighted err) at
+                # equal NF — NF is allowed to tie or trade marginally
+                # (the strategy deliberately spends NF currency on
+                # significance).
+                sig_wins[f"{rate:g}"] = bool(
+                    entry["mdm_sig_weighted"]["weighted_err"]["mean"]
+                    <= entry["mdm_fault_aware"]["weighted_err"]["mean"]
+                    * (1 + 1e-6))
     out["fault_aware_beats_mdm"] = aware_wins
     out["fault_aware_beats_mdm_any_rate"] = any(aware_wins.values())
+    out["sig_weighted_matches_fault_aware"] = sig_wins
+    out["sig_weighted_matches_fault_aware_all_rates"] = all(
+        sig_wins.values())
     if verbose:
         print("  fault-aware MDM beats plain MDM (nf & weighted err):",
               aware_wins)
+        print("  significance-weighted >= fault-aware (weighted err):",
+              sig_wins)
     return out
 
 

@@ -1,9 +1,13 @@
 """Benchmark: NF reduction with MDM (paper §V-B, Fig 5).
 
 For bell-shaped weight ensembles representative of the assigned model
-families, computes the analytical (Eq-16) NF under every MDM ablation
-and both dataflows, reporting the % reduction (paper: up to 46%, with
-reversed dataflow improving MDM by up to 50% over conventional).
+families, computes the analytical (Eq-16) NF under every mapping
+pipeline ablation — the paper's four (baseline/reverse/sort/mdm) plus
+the X-CHANGR-style bitline-sorted composite — and reports the %
+reduction (paper: up to 46%, with reversed dataflow improving MDM by up
+to 50% over conventional).  Mappings are selected through the
+:mod:`repro.mapping` registry, so a strategy added for a new paper
+appears in this table by adding its name to ``PIPELINES``.
 
 Additionally validates the *dataflow-reversal physics* with the circuit
 solver: the first-order Eq-17 noise model cannot show the benefit of
@@ -20,9 +24,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitslice import bitslice
-from repro.core.mdm import MODES, placed_masks, plan_from_bits
+from repro.core.mdm import placed_masks, plan_from_bits
 from repro.core.tiling import CrossbarSpec
 from repro.crossbar.batched import measured_nf_batched
+from repro.mapping import named_pipelines
+
+_NAMED = named_pipelines()
+# Analytic table: the paper's ablations + the bitline-sorted composite.
+PIPELINES = ("baseline", "reverse", "sort", "mdm", "xchangr")
+# Circuit check sweeps the paper's four ablations.
+CIRCUIT_PIPELINES = ("baseline", "reverse", "sort", "mdm")
 
 
 ENSEMBLES = {
@@ -56,15 +67,17 @@ def run(n_rows: int = 512, verbose: bool = True) -> dict:
             sliced = bitslice(w, spec.n_bits)
             sparsity = 1.0 - float(jnp.mean(sliced.bits))
             nf = {}
-            for mode in MODES:
-                plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
-                nf[mode] = float(jnp.sum(plan.nf_after))
-            red = {m: 100 * (1 - nf[m] / nf["baseline"]) for m in MODES}
+            for pname in PIPELINES:
+                plan = plan_from_bits(sliced.bits, sliced.scale, spec,
+                                      _NAMED[pname])
+                nf[pname] = float(jnp.sum(plan.nf_after))
+            red = {m: 100 * (1 - nf[m] / nf["baseline"])
+                   for m in PIPELINES}
             out[f"{gname} | {name}"] = {
                 "nf": nf, "reduction_pct": red, "bit_sparsity": sparsity}
             if verbose:
                 print(f"  {gname:15s} {name:28s} sp={sparsity:.2f} "
-                      + " ".join(f"{m}={red[m]:5.1f}%" for m in MODES
+                      + " ".join(f"{m}={red[m]:5.1f}%" for m in PIPELINES
                                  if m != "baseline"))
     out["circuit_reversal_check"] = _circuit_reversal_check(
         CrossbarSpec(rows=64, cols=64, n_bits=8), verbose)
@@ -84,17 +97,18 @@ def _circuit_reversal_check(_spec_unused: CrossbarSpec,
     t0 = time.perf_counter()
     spec = CrossbarSpec(rows=128, cols=10, n_bits=10)
     key = jax.random.PRNGKey(7)
-    results = {m: {"nf": 0.0, "weighted": 0.0} for m in MODES}
+    results = {m: {"nf": 0.0, "weighted": 0.0} for m in CIRCUIT_PIPELINES}
     n_tiles = 4
-    # Build every (tile, mode) physical mask first, then solve the whole
-    # stack in ONE batched call (16 tiles, one fused PCG).
+    # Build every (tile, pipeline) physical mask first, then solve the
+    # whole stack in ONE batched call (16 tiles, one fused PCG).
     stack = []
     for i in range(n_tiles):
         key, k = jax.random.split(key)
         w = jnp.abs(jax.random.laplace(k, (128, 1))) * 0.02
         sliced = bitslice(w, spec.n_bits)
-        for mode in MODES:
-            plan = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+        for pname in CIRCUIT_PIPELINES:
+            plan = plan_from_bits(sliced.bits, sliced.scale, spec,
+                                  _NAMED[pname])
             stack.append(placed_masks(sliced.bits, plan, spec)[0, 0])
     # Mixed precision (f32 CG + f64 polish): tracks the f64 oracle to
     # ~1e-11 relative, orders of magnitude under the ~1e-3 weighted-
@@ -102,21 +116,22 @@ def _circuit_reversal_check(_spec_unused: CrossbarSpec,
     res = measured_nf_batched(jnp.stack(stack), spec, precision="mixed")
     di_all = np.asarray(res.currents) - np.asarray(res.ideal)
     for i in range(n_tiles):
-        for mi, mode in enumerate(MODES):
-            t = i * len(MODES) + mi
+        for mi, pname in enumerate(CIRCUIT_PIPELINES):
+            t = i * len(CIRCUIT_PIPELINES) + mi
             k_of_col = np.arange(spec.cols) % spec.n_bits
-            if mode in ("reverse", "mdm"):
+            if _NAMED[pname].reversed_dataflow:
                 k_of_col = k_of_col[::-1]
             wgt = 2.0 ** -(1.0 + k_of_col)
-            results[mode]["nf"] += float(res.nf_total[t]) / n_tiles
-            results[mode]["weighted"] += float(
+            results[pname]["nf"] += float(res.nf_total[t]) / n_tiles
+            results[pname]["weighted"] += float(
                 np.abs(di_all[t] * wgt).sum()) / n_tiles
     base = results["baseline"]["weighted"]
-    gains = {m: 100 * (1 - results[m]["weighted"] / base) for m in MODES}
+    gains = {m: 100 * (1 - results[m]["weighted"] / base)
+             for m in CIRCUIT_PIPELINES}
     if verbose:
         print("  circuit-level weighted-error check (128x10): "
-              + " ".join(f"{m}={gains[m]:+.1f}%" for m in MODES
-                         if m != "baseline")
+              + " ".join(f"{m}={gains[m]:+.1f}%"
+                         for m in CIRCUIT_PIPELINES if m != "baseline")
               + f"  [{time.perf_counter()-t0:.1f}s]")
     return {"results": results, "weighted_error_reduction_pct": gains}
 

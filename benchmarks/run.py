@@ -29,6 +29,7 @@ from benchmarks import (  # noqa: E402
     deploy_throughput,
     fault_tolerance,
     hypothesis_fit,
+    mapping_matrix,
     nf_reduction,
     planning_cost,
     roofline_table,
@@ -75,11 +76,15 @@ def main() -> None:
         "deploy_throughput": lambda: deploy_throughput.run(
             n_per_shape=1 if q else 3),
         # §Nonideal: stuck-fault x variation Monte-Carlo distributions,
-        # baseline vs MDM vs fault-aware MDM
+        # baseline vs MDM vs fault-aware vs significance-weighted MDM
         "fault_tolerance": lambda: fault_tolerance.run(
             n_rows=128 if q else 256, n_samples=3 if q else 6,
             rates=(0.01, 0.05) if q else (0.002, 0.01, 0.05),
             sigmas=(0.0,) if q else (0.0, 0.1)),
+        # §Mapping API: registered row x column strategy matrix (Eq-16
+        # NF on the standard 64x64 population)
+        "mapping_matrix": lambda: mapping_matrix.run(
+            n_rows=128 if q else 512),
         # §Dry-run / §Roofline summary
         "roofline_table": lambda: roofline_table.run(),
     }
@@ -165,7 +170,12 @@ def _derive(name: str, res: dict) -> str:
         if name == "fault_tolerance":
             wins = res["fault_aware_beats_mdm"]
             return ("fault_aware_beats_mdm="
-                    + ",".join(f"{k}:{v}" for k, v in wins.items()))
+                    + ",".join(f"{k}:{v}" for k, v in wins.items())
+                    + ";sig_ge_aware="
+                    + str(res["sig_weighted_matches_fault_aware_all_rates"]))
+        if name == "mapping_matrix":
+            return (f"best={res['best_cell']}@"
+                    f"{res['best_reduction_pct']:.1f}%")
     except Exception as e:
         return f"derive_error:{e!r}"
     return "ok"

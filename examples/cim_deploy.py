@@ -1,8 +1,13 @@
 """Deploy a model's weight matrices onto memristive crossbars: per-layer
-MDM planning report (tiles, sparsity, NF before/after) and a deployment
-image export through the bitslice_pack kernel.
+mapping-pipeline planning report (tiles, sparsity, NF before/after) and
+a deployment image export through the bitslice_pack kernel.
 
-    PYTHONPATH=src python examples/cim_deploy.py [--arch phi3-mini-3.8b]
+    PYTHONPATH=src python examples/cim_deploy.py [--arch phi3-mini-3.8b] \
+        [--mode mdm|xchangr|significance_weighted|"df=...,row=..."]
+
+``--mode`` takes any named mapping pipeline or spec string resolved by
+``repro.mapping.resolve_pipeline`` (the legacy mode strings keep
+working through the deprecation shim).
 """
 import argparse
 import os
@@ -18,24 +23,29 @@ from repro.core import CrossbarSpec
 from repro.core.bitslice import bitslice
 from repro.core.mdm import plan_from_bits
 from repro.kernels.bitslice_pack import bitslice_pack
+from repro.mapping import resolve_pipeline
 from repro.models.model import init_params
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
-    ap.add_argument("--mode", default="mdm")
+    ap.add_argument("--mode", default="mdm",
+                    help="mapping pipeline: named (mdm, xchangr, ...) "
+                         "or 'df=...,row=...,col=...' spec string")
     ap.add_argument("--min-size", type=int, default=1024,
                     help="skip weight leaves smaller than this")
     ap.add_argument("--rows", type=int, default=64)
     ap.add_argument("--cols", type=int, default=64)
     args = ap.parse_args(argv)
 
+    pipe = resolve_pipeline(args.mode)
     cfg = get_config(args.arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     spec = CrossbarSpec(rows=args.rows, cols=args.cols, n_bits=8)
 
-    print(f"deploying {args.arch} (reduced config) with mode={args.mode}")
+    print(f"deploying {args.arch} (reduced config) with "
+          f"pipeline={args.mode} [{pipe.fingerprint()}]")
     total_tiles, nf_b, nf_a = 0, 0.0, 0.0
     min_size = args.min_size
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
@@ -49,7 +59,7 @@ def main(argv=None):
         name = jax.tree_util.keystr(path) + (f" x{reps}" if reps > 1 else "")
         w = leaf.astype(jnp.float32)
         sliced = bitslice(w, spec.n_bits)
-        plan = plan_from_bits(sliced.bits, sliced.scale, spec, args.mode)
+        plan = plan_from_bits(sliced.bits, sliced.scale, spec, pipe)
         ti, tn = plan.nf_before.shape
         b, a = float(jnp.sum(plan.nf_before)), float(jnp.sum(plan.nf_after))
         total_tiles += ti * tn * reps
@@ -67,7 +77,7 @@ def main(argv=None):
     codes, sign, _ = quantize_magnitude(w, spec.n_bits)
     img = bitslice_pack(
         (codes.astype(jnp.int32) * sign).astype(jnp.int32), spec.n_bits,
-        reversed_df=args.mode in ("reverse", "mdm"))
+        reversed_df=pipe.reversed_dataflow)
     print(f"deployment image for lm_head: {img.shape} uint8 "
           f"({img.size/1e6:.1f} MB)")
 

@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper end-to-end at toy scale: bit-slice a layer, build the
-MDM plan, inspect the NF reduction, run the PR-distorted CIM matmul
-through the fused Pallas kernel, and cross-check one tile against the
-circuit-level Kirchhoff solver.
+Walks the paper end-to-end at toy scale with the composable mapping
+API (``repro.mapping``): bit-slice a layer, build deployment plans for
+the registered mapping pipelines (the paper's ablations plus the
+X-CHANGR-style bitline sort), inspect the NF reduction, run the
+PR-distorted CIM matmul through the fused kernel, and cross-check one
+tile against the circuit-level Kirchhoff solver.
 """
 import os
 import sys
@@ -21,6 +23,11 @@ from repro.core.bitslice import bitslice, unbitslice
 from repro.core.mdm import placed_masks, plan_from_bits
 from repro.crossbar.solver import measured_nf
 from repro.kernels.cim_mvm.ops import cim_mvm, deploy
+from repro.mapping import named_pipelines
+
+# The paper's four ablations + the column-sorted composite, all from
+# the strategy registry (add a registered pipeline and it shows up).
+WALK_PIPELINES = ("baseline", "reverse", "sort", "mdm", "xchangr")
 
 
 def main(in_dim: int = 256, out_dim: int = 64, batch: int = 8,
@@ -32,37 +39,40 @@ def main(in_dim: int = 256, out_dim: int = 64, batch: int = 8,
     w = jax.random.normal(key, (in_dim, out_dim)) * 0.02  # a small layer
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
     spec = spec or CrossbarSpec(rows=64, cols=64, n_bits=8)
+    pipes = named_pipelines()
 
-    # 1. MDM plan: dataflow reversal + Manhattan row sort
-    for mode in ("baseline", "reverse", "sort", "mdm"):
-        plan = plan_layer(w, spec, mode)
-        print(f"mode={mode:9s} aggregate NF = "
-              f"{float(jnp.sum(plan.nf_after)):.4f} "
-              f"(reduction {float(plan.nf_reduction)*100:5.1f}%)"
-              if mode == "mdm" else
-              f"mode={mode:9s} aggregate NF = "
-              f"{float(jnp.sum(plan.nf_after)):.4f}")
+    # 1. mapping plans: dataflow reversal, row sort, bitline sort
+    for name in WALK_PIPELINES:
+        plan = plan_layer(w, spec, pipes[name])
+        extra = (f" (reduction {float(plan.nf_reduction)*100:5.1f}%)"
+                 if name in ("mdm", "xchangr") else "")
+        print(f"pipeline={name:9s} aggregate NF = "
+              f"{float(jnp.sum(plan.nf_after)):.4f}{extra}")
 
-    # 2. semantics check: eta=0 CIM matmul == quantised matmul
-    dep0, _ = deploy(w, spec, "mdm", eta=0.0)
-    y0 = cim_mvm(x, dep0)
+    # 2. semantics check: eta=0 CIM matmul == quantised matmul, even
+    # under the bitline-permuted pipeline (the column mux inverts it)
     wq = unbitslice(bitslice(w, spec.n_bits))
-    print("eta=0 kernel vs quantised matmul max err:",
-          float(jnp.max(jnp.abs(y0 - x @ wq))))
+    for name in ("mdm", "xchangr"):
+        dep0, _ = deploy(w, spec, pipes[name], eta=0.0)
+        y0 = cim_mvm(x, dep0)
+        print(f"eta=0 kernel ({name}) vs quantised matmul max err:",
+              float(jnp.max(jnp.abs(y0 - x @ wq))))
 
     # 3. PR-distorted inference (Eq 17) through the fused kernel
-    dep, plan = deploy(w, spec, "mdm", eta=2e-3)
+    dep, plan = deploy(w, spec, pipes["mdm"], eta=2e-3)
     y = cim_mvm(x, dep)
+    dep0, _ = deploy(w, spec, pipes["mdm"], eta=0.0)
+    y0 = cim_mvm(x, dep0)
     print("PR distortion shifts outputs by",
           f"{float(jnp.mean(jnp.abs(y - y0)) / jnp.mean(jnp.abs(y0))):.2%}")
 
     # 4. circuit-level cross-check of one tile
     sliced = bitslice(w, spec.n_bits)
-    for mode in ("baseline", "mdm"):
-        p = plan_from_bits(sliced.bits, sliced.scale, spec, mode)
+    for name in ("baseline", "mdm", "xchangr"):
+        p = plan_from_bits(sliced.bits, sliced.scale, spec, pipes[name])
         mask = placed_masks(sliced.bits, p, spec)[0, 0]
         res = measured_nf(mask, spec)
-        print(f"circuit-measured NF ({mode:8s}): "
+        print(f"circuit-measured NF ({name:8s}): "
               f"{float(res.nf_total):.5f}")
 
 

@@ -2,9 +2,10 @@
 # Full (nightly) test profile: includes the @slow solver-oracle shapes,
 # full-batch equivalence sweeps and the heavy Monte-Carlo nonideality
 # shapes that the tier-1 default (`pytest.ini` addopts = -m "not slow")
-# skips, plus the whole-model deployment and fault-tolerance benchmarks
-# (fused planning / plan-cache / CIM serving / fault+variation
-# distribution numbers recorded into results/benchmarks.json).
+# skips, plus the whole-model deployment, fault-tolerance and
+# mapping-strategy-matrix benchmarks (fused planning / plan-cache /
+# CIM serving / fault+variation distributions / row-x-column strategy
+# NF numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
@@ -13,3 +14,5 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only deploy_throughput
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only fault_tolerance
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only mapping_matrix

@@ -10,7 +10,13 @@ class CimConfig:
     """CIM deployment of matmuls onto memristive crossbars (the paper)."""
 
     enabled: bool = False
-    mode: str = "mdm"            # baseline | reverse | sort | mdm
+    # Mapping strategy: a named pipeline ("baseline" | "reverse" |
+    # "sort" | "mdm" | "fault_aware" | "significance_weighted" |
+    # "xchangr" | ...) or a "df=...,row=...,col=...,part=..." spec
+    # string — resolved by repro.mapping.resolve_pipeline.  The first
+    # four are the legacy mode strings (deprecation shim, identical
+    # plans and cache keys).
+    mode: str = "mdm"
     eta: float = 2e-3            # PR noise coefficient (Eq 17)
     rows: int = 64
     cols: int = 64

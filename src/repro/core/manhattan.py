@@ -106,8 +106,30 @@ def optimal_row_order(active: jax.Array) -> jax.Array:
     return jnp.lexsort((-s, -n))
 
 
+def optimal_col_order(active: jax.Array) -> jax.Array:
+    """Column permutation minimising the Manhattan-model NF.
+
+    The column-placement term of Eq 16, ``sum_c pos_c * m_c`` (``m_c``
+    = active cells of column c), is independent of the row term, so the
+    rearrangement inequality applies column-wise exactly as it does
+    row-wise: sort columns by active count descending (ties by column
+    Manhattan score, then index — the transpose of
+    :func:`optimal_row_order`, packed key and wide-tile fallback
+    included).  Any bitline order preserves the matmul — columns are
+    sensed independently and shift-added digitally through the column
+    mux — so this is the X-CHANGR-style remapping freedom expressed in
+    the Manhattan model.
+
+    Returns ``perm`` such that ``active[:, perm]`` is the remapped
+    tile.  Single tile (J, K) only; vmap for batches.
+    """
+    return optimal_row_order(jnp.swapaxes(active, -1, -2))
+
+
 def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
-                          nf_unit: float | jax.Array) -> jax.Array:
+                          nf_unit: float | jax.Array,
+                          col_weights: jax.Array | None = None
+                          ) -> jax.Array:
     """Row permutation minimising Manhattan NF *plus* expected fault loss.
 
     ``active`` is the tile's (J, K) logical row masks in physical column
@@ -134,16 +156,32 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
     approximation is what keeps the assignment a product form — exact
     per-row/per-position overlap costs would need a Hungarian solve.)
 
+    ``col_weights`` (optional, (K,) f32) generalises the fault currency
+    from "one stuck cell = one unit" to a per-physical-column weight —
+    the significance-weighted strategy passes the hosted bit plane's
+    shift-add weight 2^-(k+1), so positions whose stuck columns carry
+    high-order planes read as more expensive.  ``None`` keeps the exact
+    uniform-currency arithmetic (``w_c = 1`` reduces to it
+    analytically: ``(sum w off - sum w on) / sum w = (n_off - n_on) /
+    K``).
+
     With no stuck cells ``phi_p`` is strictly increasing in ``p`` and
     the result equals :func:`optimal_row_order` exactly.  Single tile
     only; vmap for batches (``repro.core.mdm.plan_tile_population``).
     """
     J, K = active.shape[-2], active.shape[-1]
     row_rank = optimal_row_order(active)
-    n_off = jnp.sum((stuck == 1).astype(jnp.float32), axis=-1)
-    n_on = jnp.sum((stuck == 2).astype(jnp.float32), axis=-1)
+    if col_weights is None:
+        n_off = jnp.sum((stuck == 1).astype(jnp.float32), axis=-1)
+        n_on = jnp.sum((stuck == 2).astype(jnp.float32), axis=-1)
+        pen = (n_off - n_on) / K
+    else:
+        w = jnp.asarray(col_weights, jnp.float32)
+        w_off = jnp.sum(w * (stuck == 1).astype(jnp.float32), axis=-1)
+        w_on = jnp.sum(w * (stuck == 2).astype(jnp.float32), axis=-1)
+        pen = (w_off - w_on) / jnp.maximum(jnp.sum(w), 1e-30)
     phi = (jnp.asarray(nf_unit, jnp.float32)
-           * jnp.arange(J, dtype=jnp.float32) + (n_off - n_on) / K)
+           * jnp.arange(J, dtype=jnp.float32) + pen)
     pos_rank = jnp.argsort(phi, stable=True)
     # perm[p] = logical row hosted at physical position p: the r-th
     # densest row goes to the r-th cheapest position.

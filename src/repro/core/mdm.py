@@ -1,19 +1,27 @@
 """Manhattan Distance Mapping (MDM) — the paper's core algorithm.
 
 Post-training, semantics-preserving remap of DNN weights onto crossbar
-tiles (paper §IV), in three steps:
+tiles (paper §IV), generalised to a composable
+:class:`repro.mapping.MappingPipeline` of registered passes:
 
-  1. *Dataflow reversal* — mirror tile columns so the dense low-order bit
-     planes sit closest to the input rail.
-  2. *Row scoring* — per-row Manhattan exposure score of active cells.
-  3. *Row sorting* — permute rows so high-score (dense) rows occupy the
-     positions closest to the I/O rails.
+  1. *Dataflow orientation* — mirror tile columns so the dense
+     low-order bit planes sit closest to the input rail.
+  2. *Column order* — optional per-tile bitline permutation
+     (X-CHANGR-style; ``identity`` reproduces the paper).
+  3. *Row order* — per-row Manhattan scoring + sort (``mdm``), its
+     fault-aware / significance-weighted variants, or ``identity``.
 
-The result is an :class:`MdmPlan`: per-tile row permutations plus the
-dataflow direction.  The plan is pure bookkeeping — applying it and then
-inverting it digitally (input mux per tile) reproduces the original
-matmul exactly; only the *physical positions* (and hence the parasitic-
+The result is an :class:`MdmPlan`: per-tile row (and optionally
+column) permutations plus the dataflow direction.  The plan is pure
+bookkeeping — applying it and then inverting it digitally (input mux
+per tile row, column mux per bitline) reproduces the original matmul
+exactly; only the *physical positions* (and hence the parasitic-
 resistance exposure) change.
+
+The legacy ``mode`` strings ("baseline"/"reverse"/"sort"/"mdm") are a
+deprecation shim resolved by :func:`repro.mapping.resolve_pipeline`;
+they produce bit-identical plans and identical plan-cache keys to the
+pre-pipeline planner (pinned in tests/test_mapping.py).
 """
 from __future__ import annotations
 
@@ -26,8 +34,9 @@ import jax.numpy as jnp
 from repro.core import manhattan
 from repro.core.bitslice import bitslice
 from repro.core.tiling import CrossbarSpec, reverse_dataflow, tile_masks
+from repro.mapping import MappingPipeline, resolve_pipeline
 
-MODES = ("baseline", "reverse", "sort", "mdm")  # mdm = reverse + sort
+MODES = ("baseline", "reverse", "sort", "mdm")  # legacy shim names
 
 
 class MdmPlan(NamedTuple):
@@ -40,6 +49,11 @@ class MdmPlan(NamedTuple):
     reversed_dataflow: python bool (static).
     nf_before / nf_after: (Ti, Tn) f32 per-tile NF (Manhattan model).
     scale: f32 quantisation scale of the bit-sliced weights.
+    col_perm:     (Ti, Tn, cols) int32 — physical bitline p hosts
+                  dataflow-layout column ``col_perm[ti,tn,p]`` — or
+                  None (identity column strategies; the pre-pipeline
+                  plan layout).
+    col_position: (Ti, Tn, cols) int32 inverse of ``col_perm``, or None.
     """
 
     row_perm: jax.Array
@@ -48,6 +62,8 @@ class MdmPlan(NamedTuple):
     nf_before: jax.Array
     nf_after: jax.Array
     scale: jax.Array
+    col_perm: jax.Array | None = None
+    col_position: jax.Array | None = None
 
     @property
     def nf_reduction(self) -> jax.Array:
@@ -56,57 +72,86 @@ class MdmPlan(NamedTuple):
         return (b - a) / jnp.maximum(b, 1e-30)
 
 
+def physical_column_significance(spec: CrossbarSpec, reversed_df: bool,
+                                 col_perm: jax.Array | None = None,
+                                 n_tiles: int = 1) -> jax.Array:
+    """Per-physical-column bit significance 2^-(k+1), (T, cols) f32.
+
+    ``k`` is the bit plane hosted at each physical bitline after the
+    dataflow orientation and (optionally) a per-tile column permutation
+    ``col_perm`` ((T, cols): physical position -> dataflow-layout
+    column).
+    """
+    K = spec.n_bits
+    k_of = jnp.arange(spec.cols, dtype=jnp.int32) % K
+    if reversed_df:
+        k_of = (K - 1) - k_of
+    sig = 2.0 ** -(1.0 + k_of.astype(jnp.float32))
+    if col_perm is None:
+        return jnp.broadcast_to(sig, (n_tiles, spec.cols))
+    return sig[col_perm]
+
+
 @partial(jax.jit, static_argnames=("spec", "mode"))
 def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
-                         mode: str = "mdm",
+                         mode: str | MappingPipeline = "mdm",
                          fault_maps: jax.Array | None = None
                          ) -> tuple[jax.Array, jax.Array,
+                                    jax.Array | None, jax.Array | None,
                                     jax.Array, jax.Array]:
     """Fused planning core over a flat tile population (T, rows, cols).
 
-    Scoring, lexsort and NF bookkeeping are vmapped over the whole
+    Scoring, sorting and NF bookkeeping are vmapped over the whole
     population in one jit — the tiles may come from one layer's grid or
     from every layer of a model at once (``repro.deploy.planner``
     amortises planning this way, the same trick the batched circuit
     solver uses for its tile populations).
 
+    ``mode`` is a :class:`repro.mapping.MappingPipeline` (or a named /
+    legacy string resolved through ``repro.mapping.resolve_pipeline``).
     ``fault_maps`` (optional, (T, rows, cols) int8 physical cell states
-    — see ``repro.nonideal.models``) switches the sorting modes to
-    fault-aware placement (:func:`repro.core.manhattan
-    .fault_aware_row_order`): known stuck cells steer dense rows away
-    from fault-heavy physical rows.  The maps live in *physical* tile
-    coordinates and are never dataflow-reversed.
+    — see ``repro.nonideal.models``) feeds the fault-aware row
+    strategies; the maps live in *physical* tile coordinates and are
+    never dataflow-reversed or column-permuted.  Pipelines whose row
+    pass does not consume faults ignore the argument (matching the
+    legacy no-op for unsorted modes).
 
-    Returns (row_perm, row_position, nf_before, nf_after), each with a
-    leading T dim.
+    Returns (row_perm, row_position, col_perm, col_position, nf_before,
+    nf_after); the col entries are None for identity column strategies.
     """
-    if mode not in MODES:
-        raise ValueError(f"mode={mode!r} not in {MODES}")
+    pipe = resolve_pipeline(mode, fault_maps is not None)
     T, rows = masks.shape[0], masks.shape[1]
     nf_before = manhattan.nonideality_factor(masks, spec.r, spec.r_on)
 
-    rev = mode in ("reverse", "mdm")
-    placed = reverse_dataflow(masks) if rev else masks
+    placed = reverse_dataflow(masks) if pipe.reversed_dataflow else masks
+    stuck = fault_maps if pipe.rows.uses_faults else None
 
-    if mode in ("sort", "mdm"):
-        if fault_maps is None:
-            perm = jax.vmap(manhattan.optimal_row_order)(placed)
-        else:
-            perm = jax.vmap(manhattan.fault_aware_row_order,
-                            in_axes=(0, 0, None))(placed, fault_maps,
-                                                  spec.nf_unit)
+    col_perm = pipe.cols.order_tiles(placed, stuck, spec)
+    col_position = None
+    if col_perm is not None:
+        col_perm = col_perm.astype(jnp.int32)
+        col_position = jnp.argsort(col_perm, axis=-1).astype(jnp.int32)
+        placed = jnp.take_along_axis(placed, col_perm[:, None, :], axis=-1)
+
+    col_sig = None
+    if pipe.rows.uses_col_significance:
+        col_sig = physical_column_significance(
+            spec, pipe.reversed_dataflow, col_perm, T)
+
+    perm = pipe.rows.order_tiles(placed, stuck, col_sig, spec)
+    if perm is None:
+        perm = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32), (T, rows))
+    else:
         perm = perm.astype(jnp.int32)
         placed = jnp.take_along_axis(placed, perm[..., None], axis=-2)
-    else:
-        perm = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32), (T, rows))
 
     position = jnp.argsort(perm, axis=-1).astype(jnp.int32)
     nf_after = manhattan.nonideality_factor(placed, spec.r, spec.r_on)
-    return perm, position, nf_before, nf_after
+    return perm, position, col_perm, col_position, nf_before, nf_after
 
 
 def plan_from_masks(masks: jax.Array, scale: jax.Array, spec: CrossbarSpec,
-                    mode: str = "mdm",
+                    mode: str | MappingPipeline = "mdm",
                     fault_maps: jax.Array | None = None) -> MdmPlan:
     """Build an MDM plan from tile activity masks (Ti, Tn, rows, cols).
 
@@ -114,36 +159,39 @@ def plan_from_masks(masks: jax.Array, scale: jax.Array, spec: CrossbarSpec,
     layout (``deploy()`` computes it once and shares it with
     ``placed_masks``, instead of re-deriving the bit planes twice).
     ``fault_maps`` ((Ti, Tn, rows, cols) int8 physical cell states)
-    makes the sorting modes fault-aware.
+    feeds the fault-aware row strategies.
     """
-    if mode not in MODES:
-        raise ValueError(f"mode={mode!r} not in {MODES}")
+    pipe = resolve_pipeline(mode, fault_maps is not None)
     ti, tn, rows, cols = masks.shape
     flat = masks.reshape(ti * tn, rows, cols)
     if fault_maps is not None:
         fault_maps = fault_maps.reshape(ti * tn, rows, cols)
-    perm, position, nf_before, nf_after = plan_tile_population(
-        flat, spec, mode, fault_maps)
-    rev = mode in ("reverse", "mdm")
+    perm, position, col_perm, col_position, nf_before, nf_after = \
+        plan_tile_population(flat, spec, pipe, fault_maps)
     return MdmPlan(perm.reshape(ti, tn, rows),
                    position.reshape(ti, tn, rows),
-                   jnp.asarray(rev),
+                   jnp.asarray(pipe.reversed_dataflow),
                    nf_before.reshape(ti, tn),
-                   nf_after.reshape(ti, tn), scale)
+                   nf_after.reshape(ti, tn), scale,
+                   None if col_perm is None
+                   else col_perm.reshape(ti, tn, cols),
+                   None if col_position is None
+                   else col_position.reshape(ti, tn, cols))
 
 
 @partial(jax.jit, static_argnames=("spec", "mode"))
 def plan_from_bits(bits: jax.Array, scale: jax.Array, spec: CrossbarSpec,
-                   mode: str = "mdm",
+                   mode: str | MappingPipeline = "mdm",
                    fault_maps: jax.Array | None = None) -> MdmPlan:
     """Build an MDM plan from bit-sliced weights (I, N, K)."""
     return plan_from_masks(tile_masks(bits, spec), scale, spec, mode,
                            fault_maps)
 
 
-def plan_layer(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+def plan_layer(w: jax.Array, spec: CrossbarSpec,
+               mode: str | MappingPipeline = "mdm",
                fault_maps: jax.Array | None = None) -> MdmPlan:
-    """Bit-slice a weight matrix and build its MDM deployment plan.
+    """Bit-slice a weight matrix and build its deployment plan.
 
     ``fault_maps`` ((Ti, Tn, rows, cols) int8 physical cell states)
     folds known stuck cells into the row sort (fault-aware MDM).
@@ -165,6 +213,9 @@ def placed_masks(bits: jax.Array, plan: MdmPlan, spec: CrossbarSpec,
         masks = tile_masks(bits, spec)
     masks = jnp.where(jnp.asarray(plan.reversed_dataflow),
                       reverse_dataflow(masks), masks)
+    if plan.col_perm is not None:
+        masks = jnp.take_along_axis(masks, plan.col_perm[..., None, :],
+                                    axis=-1)
     return jnp.take_along_axis(masks, plan.row_perm[..., None], axis=-2)
 
 

@@ -54,7 +54,6 @@ def noisy_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
     col = slot[:, None] * K + jnp.arange(K)[None, :]          # (N, K)
     rev = jnp.asarray(plan.reversed_dataflow)
     col = jnp.where(rev, (spec.cols - 1) - col, col)
-    col = col.astype(jnp.float32)
 
     # Physical row of input row i when feeding column-tile tn.
     ti = jnp.arange(I) // rows
@@ -65,14 +64,23 @@ def noisy_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
     p = pos_itn[:, tn].astype(jnp.float32)                    # (I, N)
 
     m0 = jnp.einsum("ink,k->in", b, bw)
-    m1 = jnp.einsum("ink,nk->in", b, bw * col)
+    if plan.col_position is None:
+        m1 = jnp.einsum("ink,nk->in", b, bw * col.astype(jnp.float32))
+    else:
+        # Column-permuted plan: bitline of (i, n, k) is per-tile.
+        colp = plan.col_position[ti[:, None, None], tn[None, :, None],
+                                 col[None, :, :]].astype(jnp.float32)
+        m1 = jnp.einsum("ink,ink->in", b, bw * colp)
     return scale * ((1.0 + eta * p) * m0 + eta * m1)
 
 
-def noisy_weights(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+def noisy_weights(w: jax.Array, spec: CrossbarSpec, mode="mdm",
                   eta: float | jax.Array = PAPER_ETA,
                   plan: MdmPlan | None = None) -> tuple[jax.Array, MdmPlan]:
-    """Eq 17 end-to-end: bit-slice, plan (MDM or ablation), distort.
+    """Eq 17 end-to-end: bit-slice, plan, distort.
+
+    ``mode`` is a ``repro.mapping.MappingPipeline`` or a named/legacy
+    string (resolved by ``repro.mapping.resolve_pipeline``).
 
     Returns (W', plan).  With eta=0 this returns the plain bit-sliced
     quantisation of W — the semantics-preservation baseline.
@@ -123,7 +131,7 @@ def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
     return eta
 
 
-def tree_noisy_weights(params, spec: CrossbarSpec, mode: str = "mdm",
+def tree_noisy_weights(params, spec: CrossbarSpec, mode="mdm",
                        eta: float | jax.Array = PAPER_ETA, min_size: int = 1024):
     """Apply Eq 17 to every 2-D weight matrix in a pytree (>= min_size
     elements; biases/norms are left untouched — they stay digital)."""

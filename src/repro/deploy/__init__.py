@@ -19,6 +19,8 @@ from repro.deploy.cache import (  # noqa: F401
 )
 from repro.deploy.engine import (  # noqa: F401
     DEPLOYABLE,
+    MOE_EXPERT_NAMES,
+    collect_model_matrices,
     collect_projection_matrices,
     deploy_matrices,
     deploy_model_params,

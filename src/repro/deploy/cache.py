@@ -82,10 +82,14 @@ def plan_key(w_fingerprint: str, spec: CrossbarSpec, mode: str,
              fault_fingerprint: str | None = None) -> str:
     """Content address of one layer's plan.
 
-    ``fault_fingerprint`` (a :func:`weight_fingerprint` of the physical
-    fault map) enters the key when fault-aware planning is requested —
-    a changed fault map must invalidate the plan exactly like changed
-    weights do.
+    ``mode`` is the pipeline's cache token
+    (:meth:`repro.mapping.MappingPipeline.cache_token`): the historical
+    mode string for the canonical legacy pipelines — so shim-resolved
+    deployments hit pre-redesign entries — and a ``"pipe:..."``
+    strategy fingerprint otherwise.  ``fault_fingerprint`` (a
+    :func:`weight_fingerprint` of the physical fault map) enters the
+    key when the pipeline's row pass consumes fault maps — a changed
+    fault map must invalidate the plan exactly like changed weights do.
     """
     payload = {
         "version": PLAN_CACHE_VERSION,
@@ -150,13 +154,24 @@ class PlanCache:
 
     @classmethod
     def _encode_plan(cls, plan: MdmPlan) -> bytes:
+        # Flags bit 0: reversed dataflow; bit 1: column-permuted plan
+        # (a trailing [cols u4 header field + col_perm/col_position
+        # block] follows the NF block).  Legacy entries have flags in
+        # {0, 1} and no col block, so the format stays self-describing
+        # at PLAN_CACHE_VERSION 1 and pre-pipeline entries still hit.
         perm = np.asarray(plan.row_perm)
         ti, tn, rows = perm.shape
         perm_dt = cls._perm_dtype(rows)
-        return b"".join([
-            bytes([int(bool(plan.reversed_dataflow)),
-                   PLAN_CACHE_VERSION, 0, 0, 0]),
+        has_cols = plan.col_perm is not None
+        flags = int(bool(plan.reversed_dataflow)) | (2 if has_cols else 0)
+        parts = [
+            bytes([flags, PLAN_CACHE_VERSION, 0, 0, 0]),
             np.asarray([ti, tn, rows], "<u4").tobytes(),
+        ]
+        if has_cols:
+            cols = np.asarray(plan.col_perm).shape[-1]
+            parts.append(np.asarray([cols], "<u4").tobytes())
+        parts += [
             np.stack([perm, np.asarray(plan.row_position)]
                      ).astype(perm_dt).tobytes(),
             np.concatenate([
@@ -164,27 +179,47 @@ class PlanCache:
                 np.asarray(plan.nf_after, np.float32).ravel(),
                 np.asarray(plan.scale, np.float32).reshape(1),
             ]).astype("<f4").tobytes(),
-        ])
+        ]
+        if has_cols:
+            parts.append(np.stack([np.asarray(plan.col_perm),
+                                   np.asarray(plan.col_position)]
+                                  ).astype(cls._perm_dtype(cols)).tobytes())
+        return b"".join(parts)
 
     @classmethod
     def _decode_plan(cls, buf: bytes) -> MdmPlan:
         if len(buf) < 17 or buf[1] != PLAN_CACHE_VERSION:
             raise ValueError("bad plan entry header")
+        flags = buf[0]
+        has_cols = bool(flags & 2)
         ti, tn, rows = np.frombuffer(buf, "<u4", 3, offset=5)
         ti, tn, rows = int(ti), int(tn), int(rows)
+        off = 17
+        cols = 0
+        if has_cols:
+            cols = int(np.frombuffer(buf, "<u4", 1, offset=off)[0])
+            off += 4
         perm_dt = cls._perm_dtype(rows)
         n_perm = 2 * ti * tn * rows
-        off = 17
         perms = np.frombuffer(buf, perm_dt, n_perm, offset=off)
         off += n_perm * perms.itemsize
         nfs = np.frombuffer(buf, "<f4", 2 * ti * tn + 1, offset=off)
+        off += nfs.size * 4
+        col_perm = col_position = None
+        if has_cols:
+            col_dt = cls._perm_dtype(cols)
+            cperms = np.frombuffer(buf, col_dt, 2 * ti * tn * cols,
+                                   offset=off)
+            cperms = cperms.astype(np.int32).reshape(2, ti, tn, cols)
+            col_perm, col_position = cperms[0], cperms[1]
         perms = perms.astype(np.int32).reshape(2, ti, tn, rows)
         return MdmPlan(
             row_perm=perms[0], row_position=perms[1],
-            reversed_dataflow=np.bool_(buf[0] & 1),
+            reversed_dataflow=np.bool_(flags & 1),
             nf_before=nfs[:ti * tn].reshape(ti, tn),
             nf_after=nfs[ti * tn:2 * ti * tn].reshape(ti, tn),
-            scale=np.float32(nfs[-1]))
+            scale=np.float32(nfs[-1]),
+            col_perm=col_perm, col_position=col_position)
 
     def get(self, key: str) -> MdmPlan | None:
         try:

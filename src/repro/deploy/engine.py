@@ -1,17 +1,21 @@
 """Whole-model CIM deployment: model params -> routed CimDeployments.
 
 Walks a model's parameter pytree, extracts every deployable projection
-matrix (attention q/k/v/o and dense-MLP up/gate/down — the matmuls the
-model zoo routes through ``cim_mvm`` when ``cfg.cim.enabled`` is set),
-plans all of them in one fused pass (:mod:`repro.deploy.planner`,
-through the persistent :class:`repro.deploy.cache.PlanCache`), and
-packages per-slot stacks of :class:`CimDeployment` shaped for the
-model's ``lax.scan`` over pattern repeats.
+matrix (attention q/k/v/o, dense-MLP up/gate/down, and — under an
+expert-axis partition pipeline — MoE expert banks), plans all of them
+in one fused pass (:mod:`repro.deploy.planner`, through the persistent
+:class:`repro.deploy.cache.PlanCache`), and packages per-slot stacks of
+:class:`CimDeployment` shaped for the model's ``lax.scan`` over pattern
+repeats.
 
-Embeddings, the LM head, norms/biases and recurrent/SSM state weights
-stay digital (standard CIM practice: crossbars host the dense
-projection GEMMs); MoE expert banks are skipped for now — their (E, I,
-N) layout wants expert-axis-aware tiling, tracked in ROADMAP.
+Every parameter the walk does *not* deploy is recorded with a reason in
+the collection summary (``report["matrices"]``) — nothing is silently
+dropped.  Embeddings, the LM head, norms/biases and recurrent/SSM state
+weights stay digital (standard CIM practice: crossbars host the dense
+projection GEMMs); MoE expert banks deploy per-expert when the
+pipeline's partition strategy is expert-axis-aware
+(:class:`repro.mapping.ExpertPartition`) and are reported as skipped
+otherwise.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ from repro.deploy.cache import PlanCache
 from repro.deploy.planner import plan_matrices, quantize_codes_host
 from repro.distributed.sharding import ShardingCtx
 from repro.kernels.cim_mvm.ops import CimDeployment
+from repro.mapping import MappingPipeline, resolve_pipeline
 
 # Projection parameters the serving path routes through cim_mvm, with
 # the reshape that turns each per-layer tensor into a 2-D matmul weight.
@@ -36,6 +41,9 @@ _QKV_NAMES = ("wq", "wk", "wv", "attn_wq", "attn_wk", "attn_wv")
 _OUT_NAMES = ("wo", "attn_wo")
 _MLP_NAMES = ("ffn_w_gate", "ffn_w_up", "ffn_w_down")
 DEPLOYABLE = _QKV_NAMES + _OUT_NAMES + _MLP_NAMES
+# MoE expert banks: (R, E, D, F) stacks, deployable per expert when the
+# pipeline partition is expert-axis-aware.
+MOE_EXPERT_NAMES = ("ffn_we_gate", "ffn_we_up", "ffn_we_down")
 
 
 def _as_matrix(name: str, w) -> np.ndarray:
@@ -53,11 +61,34 @@ def spec_from_config(cfg: ModelConfig) -> CrossbarSpec:
                         r=c.r, r_on=c.r_on, r_off=c.r_off)
 
 
-def collect_projection_matrices(params: dict, cfg: ModelConfig
-                                ) -> dict[str, np.ndarray]:
-    """name "slot/param/repeat" -> 2-D f32 host matrix for every
-    deployable projection in the model, in deterministic traversal
-    order.
+def _skip_reason(pname: str, expert_partition: bool) -> str:
+    """Why a parameter stays digital (collection-summary bookkeeping)."""
+    if pname in MOE_EXPERT_NAMES:
+        return ("moe-expert-bank: select an expert-axis partition "
+                "(e.g. pipeline 'mdm_expert') to deploy")
+    if "norm" in pname or pname in ("bq", "bk", "bv"):
+        return "norm/bias (digital)"
+    if pname.startswith(("ffn_router", "ffn_shared", "ffn_ws")):
+        return "moe routing / shared expert (digital)"
+    if pname.startswith(("ssm_", "mlstm_", "slstm_", "conv_")) \
+            or pname.startswith(("w_in", "w_x", "w_h", "a_log", "dt_")):
+        return "recurrent/SSM state path (digital)"
+    return "no crossbar mapping for this parameter"
+
+
+def collect_model_matrices(params: dict, cfg: ModelConfig,
+                           pipeline: MappingPipeline | str | None = None
+                           ) -> tuple[dict[str, np.ndarray], dict]:
+    """Extract every crossbar-deployable matrix, accounting for the rest.
+
+    Returns ``(mats, summary)``: ``mats`` maps ``"slot/param/repeat"``
+    (dense) or ``"slot/param/repeat/e{expert}"`` (expert-partitioned
+    MoE banks) to 2-D f32 host matrices in deterministic traversal
+    order; ``summary`` records the deployed names and — new with the
+    pipeline API — every *skipped* parameter with a reason, so
+    MoE/recurrent weights are never dropped silently
+    (``{"deployed": [...], "skipped": {name: reason},
+    "n_deployed": int, "n_skipped": int}``).
 
     Matrices land on the host (one device->host pull per stacked
     parameter): fingerprinting and the fused planner's bit-slicing are
@@ -65,10 +96,21 @@ def collect_projection_matrices(params: dict, cfg: ModelConfig
     add an upload plus two full download sweeps per deployment.
     bf16 -> f32 widening is exact, so the cast matches the device cast.
     """
+    pipe = resolve_pipeline(pipeline if pipeline is not None
+                            else cfg.cim.mode)
+    expert = getattr(pipe.partition, "expert_axis", False)
     mats: dict[str, np.ndarray] = {}
+    skipped: dict[str, str] = {}
+    for top in params:
+        if not top.startswith("slot"):
+            skipped[top] = "embedding/head/final-norm (digital by design)"
     for i, bt in enumerate(cfg.block_pattern):
         slot = f"slot{i}_{bt}"
         slot_params = params.get(slot, {})
+        # Deterministic traversal: DEPLOYABLE order first (the legacy
+        # order — nonideal cell sampling slices the fused draw in mats
+        # order, so this keeps fault maps stable per seed), then expert
+        # banks, then the skip accounting.
         for pname in DEPLOYABLE:
             if pname not in slot_params:
                 continue
@@ -76,10 +118,41 @@ def collect_projection_matrices(params: dict, cfg: ModelConfig
             for r in range(stacked.shape[0]):
                 mats[f"{slot}/{pname}/{r}"] = np.asarray(
                     _as_matrix(pname, stacked[r]), np.float32)
+        for pname in MOE_EXPERT_NAMES:
+            if pname not in slot_params or not expert:
+                continue
+            stacked = np.asarray(slot_params[pname])  # (R, E, D, F)
+            for r in range(stacked.shape[0]):
+                parts = pipe.partition.split(f"{slot}/{pname}/{r}",
+                                             stacked[r])
+                if parts is None:
+                    skipped[f"{slot}/{pname}"] = (
+                        f"partition {pipe.partition.name!r} cannot "
+                        f"split shape {stacked[r].shape}")
+                    break
+                for sub, w2 in parts:
+                    mats[sub] = np.asarray(w2, np.float32)
+        for pname in slot_params:
+            if pname in DEPLOYABLE or (pname in MOE_EXPERT_NAMES
+                                       and expert):
+                continue
+            skipped[f"{slot}/{pname}"] = _skip_reason(pname, expert)
+    summary = {"deployed": list(mats), "skipped": skipped,
+               "n_deployed": len(mats), "n_skipped": len(skipped)}
+    return mats, summary
+
+
+def collect_projection_matrices(params: dict, cfg: ModelConfig
+                                ) -> dict[str, np.ndarray]:
+    """Back-compat wrapper: the deployable-matrix mapping only (dense
+    partition semantics).  New code should use
+    :func:`collect_model_matrices`, which also accounts for skipped
+    parameters and honours the pipeline's partition strategy."""
+    mats, _ = collect_model_matrices(params, cfg, "mdm")
     return mats
 
 
-def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
+def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
                             eta: float, plan: MdmPlan,
                             cells=None, nonideal=None) -> CimDeployment:
     """Host mirror of ``repro.kernels.cim_mvm.ops.deploy`` packaging.
@@ -93,6 +166,10 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     per-slot ``jnp.stack`` in :func:`deploy_model_params` uploads each
     stacked field once.
 
+    The physical layout (dataflow direction, column permutation) is
+    read from ``plan`` itself; ``mode`` is retained for call
+    compatibility only.
+
     ``cells`` (a :class:`repro.nonideal.inject.HostCells` sample, plus
     its :class:`repro.nonideal.models.NonidealModel` as ``nonideal``)
     injects device nonidealities at packaging time: stuck-at faults are
@@ -100,8 +177,11 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     drift into the per-weight ``gain`` field — generation then runs
     under the injected faults through the unchanged ``cim_mvm``.
     """
+    del mode  # layout comes from the plan (kept for signature compat)
     I, N = w.shape
-    rev = mode in ("reverse", "mdm")
+    rev = bool(plan.reversed_dataflow)
+    col_position = (None if plan.col_position is None
+                    else np.asarray(plan.col_position, np.int32))
     scale = magnitude_scale_host(w, spec.n_bits)
     codes = quantize_codes_host(w, scale, spec.n_bits)
     sign = np.where(np.asarray(w, np.float32) < 0, -1, 1).astype(np.int32)
@@ -126,11 +206,11 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
         stuck_log = None
         if cells.stuck is not None:
             stuck_log = gather_physical_host(cells.stuck, row_position,
-                                             rev, spec)
+                                             rev, spec, col_position)
             codes = perturb_codes_host(codes, stuck_log, spec.n_bits)
         if cells.gamma is not None:
             gamma_log = gather_physical_host(cells.gamma, row_position,
-                                             rev, spec)
+                                             rev, spec, col_position)
             drift = 1.0 if nonideal is None else nonideal.drift_factor
             gain = variation_gain_host(codes, stuck_log, gamma_log,
                                        spec.n_bits, drift)
@@ -144,21 +224,31 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode: str,
     return CimDeployment(
         codes=signed, pos=pos, scale=np.float32(scale),
         n_bits=spec.n_bits, wpt=wpt, cols=spec.cols, eta=float(eta),
-        reversed_df=rev, in_dim=I, out_dim=N, gain=gain)
+        reversed_df=rev, in_dim=I, out_dim=N, gain=gain,
+        col_pos=col_position)
 
 
 def deploy_model_params(params: dict, cfg: ModelConfig,
                         cache: PlanCache | None = None,
                         ctx: ShardingCtx | None = None,
                         nonideal=None, nonideal_key=None,
-                        fault_aware: bool = True) -> tuple[dict, dict]:
+                        fault_aware: bool = True,
+                        pipeline: MappingPipeline | str | None = None,
+                        verbose: bool = False) -> tuple[dict, dict]:
     """Deploy every projection matrix of a model onto crossbars.
 
     Returns (cim_tree, report): ``cim_tree[slot][param]`` is one
     :class:`CimDeployment` whose array leaves are stacked over the
-    slot's pattern repeats — exactly the xs layout ``apply_model``'s
-    layer scan consumes.  The report carries the fused-planning stats
-    plus packaging wall-clock.
+    slot's pattern repeats (and, for expert-partitioned MoE banks, over
+    the expert axis: leading dims ``(repeats, E)``) — exactly the xs
+    layout ``apply_model``'s layer scan consumes.  The report carries
+    the fused-planning stats, the collection summary (deployed vs.
+    skipped matrices, with reasons) and packaging wall-clock.
+
+    ``pipeline`` selects the mapping strategy
+    (:class:`repro.mapping.MappingPipeline`, a named pipeline, or a
+    spec string); it defaults to ``cfg.cim.mode``, where the legacy
+    mode strings keep working through the deprecation shim.
 
     ``nonideal`` (a :class:`repro.nonideal.models.NonidealModel`)
     deploys onto *imperfect* devices: one fused PRNG draw samples the
@@ -171,9 +261,10 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     """
     t0 = time.perf_counter()
     spec = spec_from_config(cfg)
-    mode, eta = cfg.cim.mode, cfg.cim.eta
+    eta = cfg.cim.eta
+    mode = pipeline if pipeline is not None else cfg.cim.mode
 
-    mats = collect_projection_matrices(params, cfg)
+    mats, summary = collect_model_matrices(params, cfg, mode)
 
     cells = fault_maps = None
     if nonideal is not None and not nonideal.is_ideal:
@@ -190,8 +281,28 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
             fault_maps = {name: c.stuck for name, c in cells.items()
                           if c.stuck is not None} or None
 
+    if fault_maps is not None:
+        # fault_aware=True must steer ANY sorting pipeline, not just the
+        # legacy "sort"/"mdm" strings: upgrade plain-MDM rows to the
+        # fault-aware pass (cache tokens are unchanged — FaultAwareRows
+        # shares MdmRows' token, keyed by the fault-map fingerprint).
+        # Identity-row pipelines stay identity (the legacy no-op for
+        # unsorted modes) and fault-consuming rows pass through.
+        from repro.mapping import FaultAwareRows, MdmRows
+
+        pipe_eff = resolve_pipeline(mode, True)
+        if isinstance(pipe_eff.rows, MdmRows):
+            pipe_eff = pipe_eff.replace(rows=FaultAwareRows())
+        mode = pipe_eff
+
     plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx,
                                   fault_maps=fault_maps)
+
+    def _package(name):
+        return package_deployment_host(
+            mats[name], spec, mode, eta, plans[name],
+            cells=None if cells is None else cells[name],
+            nonideal=nonideal)
 
     cim_tree: dict = {}
     for i, bt in enumerate(cfg.block_pattern):
@@ -201,32 +312,59 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
             if pname not in params.get(slot, {}):
                 continue
             reps = params[slot][pname].shape[0]
-            deps = [package_deployment_host(
-                mats[f"{slot}/{pname}/{r}"], spec, mode, eta,
-                plans[f"{slot}/{pname}/{r}"],
-                cells=None if cells is None
-                else cells[f"{slot}/{pname}/{r}"],
-                nonideal=nonideal) for r in range(reps)]
+            deps = [_package(f"{slot}/{pname}/{r}") for r in range(reps)]
             # One upload per stacked field (codes/pos/scale), not per
             # matrix: the stack is the device hand-off point.
             slot_deps[pname] = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *deps)
+        for pname in MOE_EXPERT_NAMES:
+            if pname not in params.get(slot, {}):
+                continue
+            reps = params[slot][pname].shape[0]
+            # Sub-matrix names come from the partition pass's split()
+            # output (collection order), not from a hardcoded naming
+            # scheme — a custom partition strategy packages the same
+            # way it collects.  Inner per-repeat stack stays on host
+            # (numpy); the outer stack over repeats is the single
+            # device upload per field.
+            rows_ = []
+            for r in range(reps):
+                prefix = f"{slot}/{pname}/{r}/"
+                subs = [n for n in mats if n.startswith(prefix)]
+                if not subs:
+                    break
+                rows_.append(jax.tree_util.tree_map(
+                    lambda *xs: np.stack(xs),
+                    *[_package(n) for n in subs]))
+            if len(rows_) == reps:
+                slot_deps[pname] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *rows_)
         cim_tree[slot] = slot_deps
 
     report = dict(report)
+    report["matrices"] = summary
     report["deploy_seconds"] = time.perf_counter() - t0
     report["n_slots"] = len(cim_tree)
     if cells is not None:
         report["nonideal"] = True
-        report["fault_aware"] = bool(fault_maps)
+        # True only when planning actually consumed the fault maps
+        # (identity-row pipelines sample cells for injection but never
+        # steer — the legacy no-op for unsorted modes).
+        report["fault_aware"] = bool(fault_maps) and resolve_pipeline(
+            mode, fault_maps is not None).rows.uses_faults
         report["stuck_cells"] = int(sum(
             (c.stuck != 0).sum() for c in cells.values()
             if c.stuck is not None))
+    if verbose:
+        print(f"deployed {summary['n_deployed']} matrices, skipped "
+              f"{summary['n_skipped']} parameters:")
+        for name, reason in summary["skipped"].items():
+            print(f"  skip {name:40s} {reason}")
     return cim_tree, report
 
 
 def deploy_matrices(mats: dict[str, jax.Array], spec: CrossbarSpec,
-                    mode: str = "mdm", eta: float | None = None,
+                    mode="mdm", eta: float | None = None,
                     cache: PlanCache | None = None,
                     ctx: ShardingCtx | None = None
                     ) -> tuple[dict[str, CimDeployment], dict]:

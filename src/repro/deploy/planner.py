@@ -50,6 +50,7 @@ from repro.deploy.cache import (
     weight_fingerprint,
 )
 from repro.distributed.sharding import ShardingCtx, logical_spec
+from repro.mapping import resolve_pipeline
 
 
 def quantize_codes_host(w: np.ndarray, scale: np.float32,
@@ -133,22 +134,33 @@ def _flat_fault_map(name: str, fm, spec: CrossbarSpec,
 
 
 def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
-                  mode: str = "mdm", cache: PlanCache | None = None,
+                  mode="mdm", cache: PlanCache | None = None,
                   ctx: ShardingCtx | None = None,
                   fault_maps: Mapping[str, np.ndarray] | None = None
                   ) -> tuple[dict[str, MdmPlan], dict]:
     """Plan every matrix of a model in one fused pass.
 
     mats: name -> (I, N) weight matrix (shapes may differ per matrix).
-    ``fault_maps`` (optional, name -> (Ti, Tn, rows, cols) int8 physical
-    cell states — :mod:`repro.nonideal.models`) makes the sorting modes
-    fault-aware; the maps are fingerprinted into the cache keys so a
-    changed fault map replans exactly like changed weights.
+    ``mode`` is a :class:`repro.mapping.MappingPipeline` or a
+    named/legacy string (``repro.mapping.resolve_pipeline``); the
+    pipeline's cache token keys the plans, so legacy mode strings hit
+    pre-redesign cache entries unchanged.  ``fault_maps`` (optional,
+    name -> (Ti, Tn, rows, cols) int8 physical cell states —
+    :mod:`repro.nonideal.models`) feeds fault-aware row strategies (the
+    legacy "sort"/"mdm" strings auto-upgrade, matching the old
+    side-channel semantics); the maps are fingerprinted into the cache
+    keys so a changed fault map replans exactly like changed weights.
+    Pipelines whose row pass ignores faults drop the maps from both
+    planning and keys.
     Returns ({name: MdmPlan}, report); the report records tile counts,
     cache hit/miss split (including whether the whole set resolved from
     one manifest read) and wall-clock of the fused planning pass.
     """
     t0 = time.perf_counter()
+    pipe = resolve_pipeline(mode, fault_maps is not None)
+    if not pipe.rows.uses_faults:
+        fault_maps = None
+    token = pipe.cache_token()
     plans: dict[str, MdmPlan] = {}
     keys: dict[str, str] = {}
     misses: list[str] = []
@@ -161,7 +173,7 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         ffp = (None if fault_maps is None or name not in fault_maps
                else weight_fingerprint(np.asarray(fault_maps[name],
                                                   np.int8)))
-        return plan_key(weight_fingerprint(mats[name]), spec, mode, ffp)
+        return plan_key(weight_fingerprint(mats[name]), spec, token, ffp)
 
     if cache is None:
         misses = list(mats)
@@ -232,13 +244,14 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         flat = put(flat)
         if faults is not None:
             faults = put(faults)
-        pop = plan_tile_population(flat, spec, mode, faults)
+        pop = plan_tile_population(flat, spec, pipe, faults)
         # One transfer per field; slicing back per matrix is then pure
         # host views (an on-device slice would cost one dispatch per
         # matrix per field — most of the warm fused wall-clock).
-        perm, position, nf_before, nf_after = (np.asarray(a) for a in pop)
+        perm, position, col_perm, col_position, nf_before, nf_after = (
+            None if a is None else np.asarray(a) for a in pop)
 
-        rev = np.bool_(mode in ("reverse", "mdm"))
+        rev = np.bool_(pipe.reversed_dataflow)
         off = 0
         for name in order:
             ti, tn = grids[name]
@@ -250,7 +263,11 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
                 reversed_dataflow=rev,
                 nf_before=nf_before[sl].reshape(ti, tn),
                 nf_after=nf_after[sl].reshape(ti, tn),
-                scale=scales[name])
+                scale=scales[name],
+                col_perm=None if col_perm is None
+                else col_perm[sl].reshape(ti, tn, spec.cols),
+                col_position=None if col_position is None
+                else col_position[sl].reshape(ti, tn, spec.cols))
             off += nt
             plans[name] = plan
             if cache is not None:
@@ -284,7 +301,8 @@ def plan_model_tiles(mats: Mapping[str, jax.Array],
 
 
 def fingerprint_matrices(mats: Mapping[str, jax.Array],
-                         spec: CrossbarSpec, mode: str) -> dict[str, str]:
+                         spec: CrossbarSpec, mode) -> dict[str, str]:
     """Content-address every matrix (exposed for cache tooling/tests)."""
-    return {name: plan_key(weight_fingerprint(w), spec, mode)
+    token = resolve_pipeline(mode).cache_token()
+    return {name: plan_key(weight_fingerprint(w), spec, token)
             for name, w in mats.items()}

@@ -38,12 +38,13 @@ from repro.core.tiling import CrossbarSpec
 from repro.kernels.cim_mvm.kernel import cim_mvm_pallas
 from repro.kernels.cim_mvm.xla import cim_mvm_xla
 from repro.kernels.runtime import round_up
+from repro.mapping import resolve_pipeline
 
 IMPLS = ("auto", "pallas", "xla", "interpret")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("codes", "pos", "scale", "gain"),
+         data_fields=("codes", "pos", "scale", "gain", "col_pos"),
          meta_fields=("n_bits", "wpt", "cols", "eta", "reversed_df",
                       "in_dim", "out_dim"))
 @dataclasses.dataclass
@@ -58,11 +59,16 @@ class CimDeployment:
            ``repro.nonideal.inject`` to fold programming variation /
            drift into the deployment (stuck-at faults fold into the
            codes themselves); consumed by the fused XLA path only.
+    col_pos: (I_tiles, N_tiles, cols) int32 physical bitline of each
+           dataflow-layout column per tile, or None (identity column
+           strategies — the pre-pipeline layout).  Produced by
+           column-permuting mapping pipelines (e.g. the X-CHANGR-style
+           bitline sort); consumed by the fused XLA path only.
 
     Registered as a pytree with the array fields as data, so stacked
     deployments (one per scanned model layer) thread through ``lax.scan``
-    and ``jax.jit`` like any other parameter (a None gain is an empty
-    subtree and costs nothing).
+    and ``jax.jit`` like any other parameter (a None gain/col_pos is an
+    empty subtree and costs nothing).
     """
 
     codes: jax.Array
@@ -76,17 +82,20 @@ class CimDeployment:
     in_dim: int
     out_dim: int
     gain: jax.Array | None = None
+    col_pos: jax.Array | None = None
 
 
-def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+def deploy(w: jax.Array, spec: CrossbarSpec, mode="mdm",
            eta: float = PAPER_ETA,
            plan: MdmPlan | None = None) -> tuple[CimDeployment, MdmPlan]:
-    """Quantise, plan (MDM or ablation) and package a weight matrix.
+    """Quantise, plan and package a weight matrix.
 
-    Pass ``plan`` (e.g. a cache hit or a slice of a fused whole-model
-    plan from ``repro.deploy``) to skip the planning pass entirely; the
-    bit planes are then never materialised — packaging needs only the
-    int16 codes and the plan's position table.
+    ``mode`` is a :class:`repro.mapping.MappingPipeline` or a
+    named/legacy string (``repro.mapping.resolve_pipeline``).  Pass
+    ``plan`` (e.g. a cache hit or a slice of a fused whole-model plan
+    from ``repro.deploy``) to skip the planning pass entirely; the bit
+    planes are then never materialised — packaging needs only the int16
+    codes and the plan's position tables.
     """
     if w.ndim != 2:
         raise ValueError("deploy expects (in_dim, out_dim)")
@@ -94,7 +103,7 @@ def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
     codes, sign, scale = quantize_magnitude(w, spec.n_bits)
     if plan is None:
         plan = plan_from_bits(codes_to_bits(codes, spec.n_bits), scale,
-                              spec, mode)
+                              spec, resolve_pipeline(mode))
 
     ti, tn = spec.grid(I, N)
     rows, wpt = spec.rows, spec.weights_per_tile
@@ -107,10 +116,16 @@ def deploy(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
     tii = jnp.arange(i_pad) // rows
     pos = plan.row_position[tii, :, qi].astype(jnp.int32)      # (i_pad, tn)
 
+    # The physical layout (dataflow direction, bitline permutation)
+    # comes from the plan itself, so a supplied plan (cache hit / fused
+    # whole-model slice) stays consistent even when ``mode`` disagrees.
+    col_pos = (None if plan.col_position is None
+               else plan.col_position.astype(jnp.int32))
     return CimDeployment(
         codes=signed, pos=pos, scale=scale, n_bits=spec.n_bits, wpt=wpt,
         cols=spec.cols, eta=float(eta),
-        reversed_df=mode in ("reverse", "mdm"), in_dim=I, out_dim=N), plan
+        reversed_df=bool(plan.reversed_dataflow), in_dim=I, out_dim=N,
+        col_pos=col_pos), plan
 
 
 def _block_sizes(M: int, I: int, N: int, wpt: int) -> tuple[int, int, int]:
@@ -156,18 +171,21 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
     """
     requested = impl
     impl = resolve_impl(impl)
-    if dep.gain is not None and impl != "xla":
-        # Per-weight nonideality gain lives in the fused XLA expansion
-        # only; the Pallas kernel has no gain operand.  "auto" on TPU
-        # legitimately lands here — degrade to the XLA path rather than
-        # silently dropping the injected variation.  An *explicit*
+    if (dep.gain is not None or dep.col_pos is not None) and impl != "xla":
+        # Per-weight nonideality gain and per-tile column permutations
+        # live in the fused XLA expansion only; the Pallas kernel has
+        # neither operand.  "auto" on TPU legitimately lands here —
+        # degrade to the XLA path rather than silently dropping the
+        # injected variation / bitline remap.  An *explicit*
         # pallas/interpret request must not be silently rerouted (a TPU
         # parity check would attribute XLA numbers to the kernel), so
         # surface the conflict instead.
         if requested != "auto":
+            what = ("a deployment gain" if dep.gain is not None
+                    else "a column-permuted deployment")
             raise ValueError(
-                f"impl={requested!r} cannot apply a deployment gain; "
-                "use impl='xla' (or 'auto') for nonideal deployments")
+                f"impl={requested!r} cannot apply {what}; "
+                "use impl='xla' (or 'auto') for such deployments")
         impl = "xla"
     batch_shape = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
@@ -182,7 +200,7 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
         y = cim_mvm_xla(x2, dep.codes, dep.pos, dep.scale,
                         n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols,
                         eta=dep.eta, reversed_df=dep.reversed_df,
-                        gain=dep.gain)
+                        gain=dep.gain, col_pos=dep.col_pos)
         return y[:, :dep.out_dim].reshape(*batch_shape, dep.out_dim)
 
     bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)

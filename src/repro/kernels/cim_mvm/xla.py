@@ -23,13 +23,16 @@ import jax.numpy as jnp
 
 def cim_effective_weights(codes: jax.Array, pos: jax.Array,
                           scale: jax.Array, *, n_bits: int, wpt: int,
-                          cols: int, eta: float,
-                          reversed_df: bool) -> jax.Array:
+                          cols: int, eta: float, reversed_df: bool,
+                          col_pos: jax.Array | None = None) -> jax.Array:
     """Effective PR-distorted weight matrix from signed codes.
 
     codes: (I, N) int16 signed quantisation codes (sign * magnitude).
     pos:   (I, N // wpt) int32 physical row positions per column-tile.
     scale: () f32 quantisation scale.
+    col_pos: optional (Ti, Tn, cols) int32 per-tile physical bitline of
+    each dataflow-layout column (column-permuting mapping pipelines);
+    None keeps the fixed layout.
     Returns (I, N) f32 — Eq 17's W' with the same row/column split as
     the Pallas kernel:  W' = sign * scale * [(1 + eta*p) * M0 + eta*M1].
     """
@@ -43,13 +46,24 @@ def cim_effective_weights(codes: jax.Array, pos: jax.Array,
     # Column-distance moment, unrolled over the K bit planes.
     N = codes.shape[1]
     slot = jnp.arange(N, dtype=jnp.int32) % wpt
+    if col_pos is not None:
+        # Tile coordinates of every (input row, output column) pair:
+        # the bitline of bit k then resolves per tile through col_pos.
+        rows = codes.shape[0] // col_pos.shape[0]
+        tii = jnp.arange(codes.shape[0], dtype=jnp.int32) // rows
+        tnn = jnp.arange(N, dtype=jnp.int32) // wpt
     m1 = jnp.zeros_like(m0)
     for k in range(n_bits):
         bit = ((mag >> (n_bits - 1 - k)) & 1).astype(jnp.float32)
         col = slot * n_bits + k
         if reversed_df:
             col = (cols - 1) - col
-        m1 = m1 + bit * (2.0 ** -(k + 1)) * col.astype(jnp.float32)
+        if col_pos is None:
+            colf = col.astype(jnp.float32)                     # (N,)
+        else:
+            colf = col_pos[tii[:, None], tnn[None, :],
+                           col[None, :]].astype(jnp.float32)   # (I, N)
+        m1 = m1 + bit * (2.0 ** -(k + 1)) * colf
 
     # Physical row position p[i, n] = pos[i, n // wpt].
     p = jnp.repeat(pos.astype(jnp.float32), wpt, axis=1)
@@ -59,17 +73,22 @@ def cim_effective_weights(codes: jax.Array, pos: jax.Array,
 def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
                 scale: jax.Array, *, n_bits: int, wpt: int, cols: int,
                 eta: float, reversed_df: bool,
-                gain: jax.Array | None = None) -> jax.Array:
+                gain: jax.Array | None = None,
+                col_pos: jax.Array | None = None) -> jax.Array:
     """y = x @ W' with on-the-fly code expansion; x: (M, I) f32.
 
     ``gain`` (optional, (I, N) f32 from ``repro.nonideal.inject``)
     multiplies the effective weights cell-wise — programming variation /
     drift folded per weight; it fuses into the same elementwise pipeline
     feeding the matmul, so the weight-traffic story is unchanged.
+    ``col_pos`` (optional, (Ti, Tn, cols) int32) applies a per-tile
+    bitline permutation to the column-distance moment (X-CHANGR-style
+    mapping pipelines).
     """
     w_eff = cim_effective_weights(codes, pos, scale, n_bits=n_bits,
                                   wpt=wpt, cols=cols, eta=eta,
-                                  reversed_df=reversed_df)
+                                  reversed_df=reversed_df,
+                                  col_pos=col_pos)
     if gain is not None:
         w_eff = w_eff * gain
     return jax.lax.dot_general(

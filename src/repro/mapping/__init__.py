@@ -1,0 +1,83 @@
+"""Composable mapping-strategy API for crossbar weight deployment.
+
+The paper's MDM is one point in a family of spatial mapping strategies
+(X-CHANGR bitline remapping, arXiv:1907.00285; partition/orientation
+studies, arXiv:1912.08716).  This package replaces the planner's
+hard-coded ``mode: str`` + ``fault_maps`` side-channel with a
+:class:`MappingPipeline` of registered passes:
+
+=============  ==========================================================
+pass           strategies
+=============  ==========================================================
+dataflow       ``"conventional"`` | ``"reversed"`` (low-order-side
+               feeding, paper MDM step 1)
+rows           ``identity`` | ``mdm`` | ``fault_aware`` |
+               ``significance_weighted`` (:mod:`repro.mapping.rows`)
+cols           ``identity`` | ``xchangr`` (:mod:`repro.mapping.columns`)
+partition      ``dense`` | ``expert`` ((E, I, N) MoE banks,
+               :mod:`repro.mapping.partition`)
+=============  ==========================================================
+
+**Pass contract** (enforced conventions, see :mod:`repro.mapping.base`
+for per-kind signatures):
+
+1. *Pure*: a pass is a frozen dataclass whose output depends only on
+   its inputs — no RNG, no hidden state — so plans are reproducible
+   and pipelines are valid jit static arguments.
+2. *Fingerprinted*: every pass has a stable registry name + param
+   fingerprint; :meth:`MappingPipeline.cache_token` composes them into
+   ``repro.deploy.cache`` plan keys, so strategy changes invalidate
+   cached plans by construction (and *only* strategy changes do).
+3. *Composition order is fixed*: dataflow orientation -> column order
+   -> row order -> NF bookkeeping.  Column and row placement are
+   independent terms of the Manhattan objective, but fault-aware row
+   passes consume per-physical-column significance, which the column
+   pass determines — hence columns settle first.  Partitioning runs
+   host-side before any of this (tensor -> named 2-D matrices).
+
+**Adding a strategy from a new paper** is one file: subclass the kind's
+base, decorate with ``@register(kind, name)``, and every consumer —
+``plan_tile_population``, the fused ``plan_matrices`` planner,
+``deploy_model_params``, ``ServeEngine(pipeline=...)`` and the
+benchmark sweeps — can select it by name, with correct cache keys, no
+further threading.
+
+Legacy ``mode`` strings ("baseline"/"reverse"/"sort"/"mdm") remain as
+a deprecation shim via :func:`resolve_pipeline`: they resolve to the
+canonical pipelines and produce bit-identical plans and identical
+plan-cache keys (tests/test_mapping.py pins both).
+"""
+from repro.mapping.base import (  # noqa: F401
+    KINDS,
+    Strategy,
+    available,
+    get_strategy,
+    register,
+)
+from repro.mapping.columns import IdentityCols, XChangrCols  # noqa: F401
+from repro.mapping.partition import (  # noqa: F401
+    DensePartition,
+    ExpertPartition,
+)
+from repro.mapping.pipeline import (  # noqa: F401
+    LEGACY_MODES,
+    MappingPipeline,
+    named_pipelines,
+    register_pipeline,
+    resolve_pipeline,
+)
+from repro.mapping.rows import (  # noqa: F401
+    FaultAwareRows,
+    IdentityRows,
+    MdmRows,
+    SignificanceWeightedRows,
+)
+
+__all__ = [
+    "KINDS", "Strategy", "available", "get_strategy", "register",
+    "IdentityCols", "XChangrCols", "DensePartition", "ExpertPartition",
+    "LEGACY_MODES", "MappingPipeline", "named_pipelines",
+    "register_pipeline", "resolve_pipeline",
+    "FaultAwareRows", "IdentityRows", "MdmRows",
+    "SignificanceWeightedRows",
+]

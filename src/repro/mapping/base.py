@@ -1,0 +1,116 @@
+"""Strategy registry and pass contract for the mapping pipeline.
+
+A *strategy* is one composable pass of a :class:`repro.mapping.pipeline
+.MappingPipeline` — a frozen dataclass registered under a ``(kind,
+name)`` pair.  Three kinds exist:
+
+``rows``
+    Row-order passes.  ``order_tiles(placed, stuck, col_sig, spec)``
+    maps a ``(T, rows, cols)`` batch of *placed* activity masks (tile
+    columns already in physical layout: dataflow orientation and any
+    column pass applied) to a ``(T, rows)`` permutation — ``perm[t, p]``
+    is the tile-local logical row hosted at physical position ``p`` —
+    or ``None`` for the identity.  ``stuck`` is the physical
+    ``(T, rows, cols)`` int8 cell-state batch (or None), ``col_sig``
+    the per-tile physical-column bit significance (or None); a pass
+    declares what it consumes via ``uses_faults`` /
+    ``uses_col_significance`` and must ignore the rest.
+
+``cols``
+    Column-order passes.  ``order_tiles(placed, stuck, spec)`` maps the
+    dataflow-oriented mask batch to a ``(T, cols)`` permutation
+    (``perm[t, p]`` = dataflow-layout column hosted at physical bitline
+    ``p``) or ``None`` for the identity.
+
+``partition``
+    Host-side tensor partitioning.  ``split(name, w)`` maps one named
+    weight tensor to a list of ``(sub_name, 2-D matrix)`` pairs, or
+    ``None`` when the tensor is not partitionable by this strategy
+    (the caller records it as skipped).
+
+The contract every strategy must honour:
+
+* **pure** — output depends only on the inputs (no hidden state, no
+  RNG), so plans are reproducible and cache-correct;
+* **fingerprinted** — :meth:`Strategy.fingerprint` is a stable string
+  derived from the registry name plus the dataclass params, identical
+  across processes and releases (it composes into
+  ``repro.deploy.cache`` plan keys);
+* **hashable** — strategies are frozen dataclasses so pipelines can be
+  jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+KINDS = ("rows", "cols", "partition")
+
+_REGISTRY: dict[str, dict[str, type]] = {k: {} for k in KINDS}
+
+
+class Strategy:
+    """Mixin for registered mapping passes (frozen dataclasses).
+
+    ``kind`` / ``name`` are stamped by :func:`register`; params are the
+    dataclass fields.
+    """
+
+    kind: str = ""
+    name: str = ""
+
+    def fingerprint(self) -> str:
+        """Stable registry name + params, e.g. ``"mdm"``.
+
+        Dataclass field order is the declaration order, so the string
+        is deterministic across processes; values are ``repr``\\ s of
+        plain python scalars only (the params of a registered strategy
+        must be hashable primitives).
+        """
+        fields = dataclasses.fields(self)
+        if not fields:
+            return self.name
+        params = ",".join(f"{f.name}={getattr(self, f.name)!r}"
+                          for f in fields)
+        return f"{self.name}({params})"
+
+
+def register(kind: str, name: str, override: bool = False):
+    """Class decorator: register a strategy under ``(kind, name)``.
+
+    Duplicate names raise unless ``override=True``: a silently
+    replaced strategy would keep emitting the original's cache token
+    while producing different plans — poisoning every shared
+    ``PlanCache``.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind={kind!r} not in {KINDS}")
+
+    def deco(cls):
+        if not override and name in _REGISTRY[kind]:
+            raise ValueError(
+                f"{kind} strategy {name!r} is already registered "
+                f"({_REGISTRY[kind][name].__name__}); pass "
+                "override=True to replace it")
+        cls.kind, cls.name = kind, name
+        _REGISTRY[kind][name] = cls
+        return cls
+
+    return deco
+
+
+def available(kind: str) -> tuple[str, ...]:
+    """Registered strategy names of one kind, sorted."""
+    if kind not in KINDS:
+        raise ValueError(f"kind={kind!r} not in {KINDS}")
+    return tuple(sorted(_REGISTRY[kind]))
+
+
+def get_strategy(kind: str, name: str, **params):
+    """Instantiate a registered strategy by name."""
+    try:
+        cls = _REGISTRY[kind][name]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} strategy {name!r}; "
+            f"available: {available(kind)}") from None
+    return cls(**params)

@@ -1,0 +1,44 @@
+"""Column-order strategies: which bit column lands on which bitline.
+
+Every crossbar column is sensed independently and shift-added
+digitally, so *any* per-tile bitline permutation preserves the matmul
+exactly (the column mux knows the mapping) — only the parasitic
+exposure changes.  X-CHANGR (arXiv:1907.00285) exploits exactly this
+freedom by remapping columns across crossbars; here the same idea is a
+registered pass composing with the row sort.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.mapping.base import Strategy, register
+
+
+@register("cols", "identity")
+@dataclasses.dataclass(frozen=True)
+class IdentityCols(Strategy):
+    """Keep the (possibly dataflow-reversed) column order unchanged."""
+
+    def order_tiles(self, placed, stuck, spec):
+        return None
+
+
+@register("cols", "xchangr")
+@dataclasses.dataclass(frozen=True)
+class XChangrCols(Strategy):
+    """X-CHANGR-style bitline sort: densest columns nearest the rail.
+
+    Under Eq 16 the column-placement term ``sum_c pos_c * m_c`` (``m_c``
+    = active cells of column c) is independent of the row term, so by
+    the rearrangement inequality the optimal bitline order sorts
+    columns by active count descending — the exact column-wise dual of
+    the MDM row sort, subsuming plain dataflow reversal whenever the
+    low-order planes really are the dense ones.
+    """
+
+    def order_tiles(self, placed, stuck, spec):
+        from repro.core import manhattan
+
+        return jax.vmap(manhattan.optimal_col_order)(placed)

@@ -1,0 +1,52 @@
+"""Tile-partitioning strategies: tensors -> named 2-D crossbar matrices.
+
+Partitioning runs host-side, before planning: it decides how a weight
+tensor decomposes into independent 2-D matmul matrices, each of which
+then gets its own tile grid, plan and cache entry.  The partition pass
+is part of the pipeline fingerprint but — deliberately — not of the
+per-matrix plan-cache keys: each produced matrix is content-addressed
+by its own bytes, so two pipelines that slice the same bank the same
+way share cache entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.mapping.base import Strategy, register
+
+
+@register("partition", "dense")
+@dataclasses.dataclass(frozen=True)
+class DensePartition(Strategy):
+    """Plain 2-D matrices only (the pre-pipeline behaviour)."""
+
+    expert_axis = False
+
+    def split(self, name: str, w) -> list[tuple[str, np.ndarray]] | None:
+        if np.ndim(w) != 2:
+            return None
+        return [(name, w)]
+
+
+@register("partition", "expert")
+@dataclasses.dataclass(frozen=True)
+class ExpertPartition(Strategy):
+    """Expert-axis-aware partitioning for MoE banks.
+
+    A stacked ``(E, I, N)`` expert bank splits along the leading expert
+    axis into E independent 2-D matrices named ``{name}/e{e}`` — each
+    expert's projection deploys onto its own tile grid (experts never
+    share crossbar rows, so per-expert planning is exact, not an
+    approximation).  Plain 2-D matrices pass through unchanged.
+    """
+
+    expert_axis = True
+
+    def split(self, name: str, w) -> list[tuple[str, np.ndarray]] | None:
+        if np.ndim(w) == 2:
+            return [(name, w)]
+        if np.ndim(w) == 3:
+            return [(f"{name}/e{e}", w[e]) for e in range(w.shape[0])]
+        return None

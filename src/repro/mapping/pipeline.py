@@ -1,0 +1,189 @@
+"""MappingPipeline: composed, fingerprinted weight-mapping strategy.
+
+A pipeline is (dataflow orientation, row order, column order, tile
+partition) — the full spatial mapping of a weight matrix onto crossbar
+tiles.  Passes compose in a fixed order (see the package docstring);
+the pipeline is a frozen dataclass, so it rides jit static arguments
+and hashes into plan-cache keys.
+
+**Legacy ``mode`` strings.**  The pre-pipeline planner took a
+``mode: str`` in {"baseline", "reverse", "sort", "mdm"} plus an ad-hoc
+``fault_maps`` side-channel.  :func:`resolve_pipeline` keeps those
+strings working as a thin deprecation shim: each resolves to the
+canonical pipeline below, and :meth:`MappingPipeline.cache_token`
+returns the *original mode string* for exactly those canonical
+combinations — so shim-resolved plans produce bit-identical
+``PlanCache`` keys and existing caches stay warm (pinned in
+tests/test_mapping.py).  New strategy combinations get a
+``"pipe:..."`` token derived from the pass fingerprints.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.mapping.base import Strategy, available, get_strategy
+from repro.mapping.columns import IdentityCols, XChangrCols
+from repro.mapping.partition import DensePartition, ExpertPartition
+from repro.mapping.rows import (
+    FaultAwareRows,
+    IdentityRows,
+    MdmRows,
+    SignificanceWeightedRows,
+)
+
+DATAFLOWS = ("conventional", "reversed")
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingPipeline:
+    """Composable mapping strategy (dataflow, rows, cols, partition)."""
+
+    dataflow: str = "reversed"
+    rows: Strategy = MdmRows()
+    cols: Strategy = IdentityCols()
+    partition: Strategy = DensePartition()
+
+    def __post_init__(self):
+        if self.dataflow not in DATAFLOWS:
+            raise ValueError(
+                f"dataflow={self.dataflow!r} not in {DATAFLOWS}")
+
+    @property
+    def reversed_dataflow(self) -> bool:
+        return self.dataflow == "reversed"
+
+    def fingerprint(self) -> str:
+        """Full stable identity of the pipeline (includes partition)."""
+        return (f"df={self.dataflow};row={self.rows.fingerprint()};"
+                f"col={self.cols.fingerprint()};"
+                f"part={self.partition.fingerprint()}")
+
+    def cache_token(self) -> str:
+        """The string that enters per-matrix plan-cache keys.
+
+        Canonical legacy combinations return the historical mode string
+        so pre-redesign cache entries stay reachable.  ``fault_aware``
+        rows intentionally share the ``"mdm"``/``"sort"`` token: the
+        legacy key distinguished fault-aware planning purely by the
+        fault-map fingerprint (see :func:`repro.deploy.cache.plan_key`),
+        and :class:`FaultAwareRows` reduces exactly to :class:`MdmRows`
+        when no maps are supplied.  The partition pass never enters the
+        token — produced matrices are content-addressed individually.
+        """
+        if isinstance(self.cols, IdentityCols):
+            if isinstance(self.rows, IdentityRows):
+                return "reverse" if self.reversed_dataflow else "baseline"
+            if isinstance(self.rows, (MdmRows, FaultAwareRows)):
+                return "mdm" if self.reversed_dataflow else "sort"
+        return (f"pipe:df={self.dataflow};row={self.rows.fingerprint()};"
+                f"col={self.cols.fingerprint()}")
+
+    def spec(self) -> str:
+        """Config-friendly spec string; inverse of :func:`from_spec`."""
+        return (f"df={self.dataflow},row={self.rows.name},"
+                f"col={self.cols.name},part={self.partition.name}")
+
+    @staticmethod
+    def from_spec(spec: str) -> "MappingPipeline":
+        """Parse ``"df=reversed,row=mdm,col=xchangr,part=dense"``.
+
+        Every field is optional and defaults to the canonical MDM
+        pipeline's value; unknown keys or strategy names raise.
+        """
+        kw: dict = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(f"bad pipeline spec item {item!r} "
+                                 f"in {spec!r} (want key=value)")
+            k, v = (s.strip() for s in item.split("=", 1))
+            if k == "df":
+                kw["dataflow"] = v
+            elif k in ("row", "rows"):
+                kw["rows"] = get_strategy("rows", v)
+            elif k in ("col", "cols"):
+                kw["cols"] = get_strategy("cols", v)
+            elif k in ("part", "partition"):
+                kw["partition"] = get_strategy("partition", v)
+            else:
+                raise ValueError(f"unknown pipeline spec key {k!r} "
+                                 f"in {spec!r}")
+        return MappingPipeline(**kw)
+
+    def replace(self, **kw) -> "MappingPipeline":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------- named pipelines ------------------------------
+
+_NAMED: dict[str, MappingPipeline] = {}
+
+
+def register_pipeline(name: str, pipe: MappingPipeline,
+                      override: bool = False) -> MappingPipeline:
+    """Register a named pipeline (config / CLI shorthand).
+
+    Duplicate names raise unless ``override=True`` — see
+    :func:`repro.mapping.base.register` for why silent replacement is
+    dangerous.
+    """
+    if not override and name in _NAMED:
+        raise ValueError(f"pipeline {name!r} is already registered "
+                         f"({_NAMED[name].fingerprint()}); pass "
+                         "override=True to replace it")
+    _NAMED[name] = pipe
+    return pipe
+
+
+def named_pipelines() -> dict[str, MappingPipeline]:
+    return dict(_NAMED)
+
+
+register_pipeline("baseline", MappingPipeline(
+    dataflow="conventional", rows=IdentityRows()))
+register_pipeline("reverse", MappingPipeline(rows=IdentityRows()))
+register_pipeline("sort", MappingPipeline(dataflow="conventional"))
+register_pipeline("mdm", MappingPipeline())
+register_pipeline("fault_aware", MappingPipeline(rows=FaultAwareRows()))
+register_pipeline("significance_weighted",
+                  MappingPipeline(rows=SignificanceWeightedRows()))
+register_pipeline("xchangr", MappingPipeline(cols=XChangrCols()))
+register_pipeline("xchangr_fault_aware", MappingPipeline(
+    rows=FaultAwareRows(), cols=XChangrCols()))
+register_pipeline("mdm_expert", MappingPipeline(
+    partition=ExpertPartition()))
+
+# The legacy planner modes.  They double as registered named pipelines
+# (so cfg.cim.mode="mdm" stays first-class and warning-free); what makes
+# them a *shim* is the fault-map auto-upgrade below and the historical
+# cache tokens, both pinned by tests/test_mapping.py.
+LEGACY_MODES = ("baseline", "reverse", "sort", "mdm")
+
+
+def resolve_pipeline(mode, have_faults: bool = False) -> MappingPipeline:
+    """Resolve a pipeline, a named/spec string, or a legacy mode.
+
+    ``have_faults`` reproduces the legacy side-channel semantics: the
+    old planner upgraded the sorting modes ("sort"/"mdm") to fault-aware
+    placement whenever ``fault_maps`` was supplied, so the shim resolves
+    those strings to :class:`FaultAwareRows` under the same condition
+    (an explicit :class:`MappingPipeline` is never upgraded — pass
+    ``rows=FaultAwareRows()`` to opt in).
+    """
+    if isinstance(mode, MappingPipeline):
+        return mode
+    if not isinstance(mode, str):
+        raise TypeError(f"expected MappingPipeline or str, got "
+                        f"{type(mode).__name__}")
+    if have_faults and mode in ("sort", "mdm"):
+        return _NAMED[mode].replace(rows=FaultAwareRows())
+    if mode in _NAMED:
+        return _NAMED[mode]
+    if "=" in mode:
+        return MappingPipeline.from_spec(mode)
+    raise ValueError(
+        f"unknown mapping pipeline {mode!r}; named pipelines: "
+        f"{tuple(sorted(_NAMED))}, row strategies: {available('rows')}, "
+        "or a 'df=...,row=...,col=...,part=...' spec string")

@@ -1,0 +1,90 @@
+"""Row-order strategies: which logical row lands on which physical row.
+
+All passes delegate to :mod:`repro.core.manhattan` primitives and are
+vmapped over the tile population exactly the way the pre-pipeline
+planner did, so the canonical pipelines reproduce the legacy
+``mode``-string plans bit for bit (pinned in tests/test_mapping.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.mapping.base import Strategy, register
+
+
+def _manhattan():
+    # Deferred: repro.core.mdm imports repro.mapping at module level, so
+    # a top-level repro.core import here would be circular.
+    from repro.core import manhattan
+    return manhattan
+
+
+@register("rows", "identity")
+@dataclasses.dataclass(frozen=True)
+class IdentityRows(Strategy):
+    """Keep the original row order (the paper's baseline/reverse)."""
+
+    uses_faults = False
+    uses_col_significance = False
+
+    def order_tiles(self, placed, stuck, col_sig, spec):
+        return None
+
+
+@register("rows", "mdm")
+@dataclasses.dataclass(frozen=True)
+class MdmRows(Strategy):
+    """Paper step 3: densest rows to the positions nearest the rails."""
+
+    uses_faults = False
+    uses_col_significance = False
+
+    def order_tiles(self, placed, stuck, col_sig, spec):
+        return jax.vmap(_manhattan().optimal_row_order)(placed)
+
+
+@register("rows", "fault_aware")
+@dataclasses.dataclass(frozen=True)
+class FaultAwareRows(Strategy):
+    """MDM plus stuck-cell steering (uniform per-cell fault currency).
+
+    With no fault maps supplied this reduces exactly to :class:`MdmRows`
+    (and shares its cache keys), mirroring the legacy behaviour of
+    ``mode="mdm"`` without ``fault_maps``.
+    """
+
+    uses_faults = True
+    uses_col_significance = False
+
+    def order_tiles(self, placed, stuck, col_sig, spec):
+        if stuck is None:
+            return jax.vmap(_manhattan().optimal_row_order)(placed)
+        return jax.vmap(_manhattan().fault_aware_row_order,
+                        in_axes=(0, 0, None))(placed, stuck, spec.nf_unit)
+
+
+@register("rows", "significance_weighted")
+@dataclasses.dataclass(frozen=True)
+class SignificanceWeightedRows(Strategy):
+    """Fault steering weighted by bit significance 2^-(k+1).
+
+    A stuck column hosting a high-order bit plane destroys far more
+    *accuracy* than one hosting the LSB plane, even though both cost
+    one NF unit; weighting the per-position fault penalty by the hosted
+    plane's shift-add significance buys weighted-error reduction at
+    equal NF (ROADMAP follow-up; measured in
+    ``benchmarks/fault_tolerance.py``).  Reduces exactly to
+    :class:`MdmRows` with no faults.
+    """
+
+    uses_faults = True
+    uses_col_significance = True
+
+    def order_tiles(self, placed, stuck, col_sig, spec):
+        if stuck is None:
+            return jax.vmap(_manhattan().optimal_row_order)(placed)
+        return jax.vmap(_manhattan().fault_aware_row_order,
+                        in_axes=(0, 0, None, 0))(placed, stuck,
+                                                 spec.nf_unit, col_sig)

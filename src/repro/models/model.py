@@ -211,7 +211,7 @@ def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
     if bt in ("attn", "hybrid") and cfg.mlp_type != "none":
         hf = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
         if cfg.n_experts:
-            yf, aux = moe_ffn(p, hf, cfg, ctx)
+            yf, aux = moe_ffn(p, hf, cfg, ctx, cim=cim)
         else:
             yf = dense_mlp(p, hf, cfg, ctx, cim=cim)
         x = x + yf

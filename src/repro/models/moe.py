@@ -24,12 +24,41 @@ def _silu(x):
     return x * jax.nn.sigmoid(x)
 
 
+def _expert_mm(xe: jax.Array, w: jax.Array, dep, expert_axis: int):
+    """Per-expert matmul, through deployed crossbars when available.
+
+    ``xe``: activations with the expert dim at ``expert_axis``; ``dep``
+    a CimDeployment stacked over experts (leading axis), or None for
+    the plain einsum.  ``w``: (E, in, out).  vmapping the
+    backend-dispatched ``cim_mvm`` over the expert axis keeps every
+    expert on its own tile grid — the expert-partitioned deployment of
+    ``repro.deploy`` (pipeline ``partition=expert``).
+    """
+    if dep is None:
+        eq = ("ecd,edf->ecf" if expert_axis == 0 else "becd,edf->becf")
+        return jnp.einsum(eq, xe, w)
+    from repro.kernels.cim_mvm.ops import cim_mvm
+
+    y = jax.vmap(lambda a, d: cim_mvm(a, d),
+                 in_axes=(expert_axis, 0),
+                 out_axes=expert_axis)(xe, dep)
+    return y.astype(xe.dtype)
+
+
 def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
-            prefix: str = "ffn_"):
-    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+            prefix: str = "ffn_", cim: dict | None = None):
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar).
+
+    ``cim``: optional per-slot CimDeployment dict; expert banks deploy
+    under keys ``ffn_we_{gate,up,down}`` with the expert axis stacked
+    (see ``repro.deploy.deploy_model_params`` with an expert-axis
+    partition pipeline), routing the expert matmuls through ``cim_mvm``.
+    Routing, gating and shared experts stay digital.
+    """
     if cfg.moe_dispatch == "grouped":
-        return moe_ffn_grouped(p, x, cfg, ctx, prefix)
+        return moe_ffn_grouped(p, x, cfg, ctx, prefix, cim=cim)
     g = lambda n: p[prefix + n]
+    c = lambda n: None if cim is None else cim.get(prefix + n)
     B, S, D = x.shape
     T = B * S
     E, K = cfg.n_experts, cfg.n_experts_per_token
@@ -64,10 +93,10 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     buf = buf.at[e_s, pos_safe].set(xt[tok_s])
     xe = shard(buf[:, :cap], ctx, "experts", "batch", "act_embed")
 
-    h = _silu(jnp.einsum("ecd,edf->ecf", xe, g("we_gate")))
-    h = h * jnp.einsum("ecd,edf->ecf", xe, g("we_up"))
+    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 0))
+    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 0)
     h = shard(h, ctx, "experts", "batch", "act_mlp")
-    ye = jnp.einsum("ecf,efd->ecd", h, g("we_down"))
+    ye = _expert_mm(h, g("we_down"), c("we_down"), 0)
     ye = shard(ye, ctx, "experts", "batch", "act_embed")
 
     y_tok = ye[e_s, pos_safe] * (keep * w_s)[:, None].astype(ye.dtype)
@@ -83,7 +112,8 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 
 
 def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig,
-                    ctx: ShardingCtx, prefix: str = "ffn_"):
+                    ctx: ShardingCtx, prefix: str = "ffn_",
+                    cim: dict | None = None):
     """Group-local sort-based dispatch (§Perf optimisation).
 
     The global variant sorts all B*S tokens in one index space, so every
@@ -97,6 +127,7 @@ def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig,
     — physically equivalent to per-DP-shard capacity in production MoE.
     """
     g = lambda n: p[prefix + n]
+    c = lambda n: None if cim is None else cim.get(prefix + n)
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.n_experts_per_token
 
@@ -136,10 +167,10 @@ def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig,
     buf = buf.at[jnp.arange(B)[:, None], e_s, pos_safe].set(x_tok)
     xe = shard(buf[:, :, :cap], ctx, "batch", "experts", None, "act_embed")
 
-    h = _silu(jnp.einsum("becd,edf->becf", xe, g("we_gate")))
-    h = h * jnp.einsum("becd,edf->becf", xe, g("we_up"))
+    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 1))
+    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 1)
     h = shard(h, ctx, "batch", "experts", None, "act_mlp")
-    ye = jnp.einsum("becf,efd->becd", h, g("we_down"))
+    ye = _expert_mm(h, g("we_down"), c("we_down"), 1)
     ye = shard(ye, ctx, "batch", "experts", None, "act_embed")
 
     y_tok = ye[jnp.arange(B)[:, None], e_s, pos_safe] \

@@ -85,10 +85,15 @@ def sample_deployment_cells(key: jax.Array,
 
 
 def gather_physical_host(field: np.ndarray, row_position: np.ndarray,
-                         reversed_df: bool,
-                         spec: CrossbarSpec) -> np.ndarray:
+                         reversed_df: bool, spec: CrossbarSpec,
+                         col_position: np.ndarray | None = None
+                         ) -> np.ndarray:
     """Numpy mirror of :func:`repro.nonideal.weights.gather_physical`
-    over the full padded (I_pad, N_pad, K) logical layout."""
+    over the full padded (I_pad, N_pad, K) logical layout.
+
+    ``col_position`` ((Ti, Tn, cols) int32, optional) remaps dataflow
+    columns through a per-tile bitline permutation (column-permuting
+    mapping pipelines)."""
     ti_n, tn_n = field.shape[0], field.shape[1]
     rows, wpt, K = spec.rows, spec.weights_per_tile, spec.n_bits
     i_pad, n_pad = ti_n * rows, tn_n * wpt
@@ -100,8 +105,14 @@ def gather_physical_host(field: np.ndarray, row_position: np.ndarray,
     col = slot[:, None] * K + np.arange(K)[None, :]           # (N, K)
     if reversed_df:
         col = (spec.cols - 1) - col
+    if col_position is None:
+        return field[ti[:, None, None], tn[None, :, None],
+                     p[:, :, None], col[None, :, :]]          # (I, N, K)
+    colp = np.asarray(col_position)[ti[:, None, None],
+                                    tn[None, :, None],
+                                    col[None, :, :]]          # (I, N, K)
     return field[ti[:, None, None], tn[None, :, None],
-                 p[:, :, None], col[None, :, :]]              # (I, N, K)
+                 p[:, :, None], colp]
 
 
 def perturb_codes_host(codes: np.ndarray, stuck_log: np.ndarray,

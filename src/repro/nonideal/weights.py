@@ -40,7 +40,9 @@ def gather_physical(field: jax.Array, plan: MdmPlan,
 
     Logical bit (i, n, k) sits at physical row
     ``plan.row_position[i // rows, n // wpt, i % rows]`` and physical
-    column ``slot * K + k`` (mirrored when the dataflow is reversed).
+    column ``slot * K + k`` (mirrored when the dataflow is reversed,
+    then remapped through ``plan.col_position`` when the plan carries a
+    bitline permutation).
     """
     rows, wpt, K = spec.rows, spec.weights_per_tile, spec.n_bits
     ti = jnp.arange(I) // rows
@@ -51,8 +53,13 @@ def gather_physical(field: jax.Array, plan: MdmPlan,
     col = slot[:, None] * K + jnp.arange(K)[None, :]          # (N, K)
     col = jnp.where(jnp.asarray(plan.reversed_dataflow),
                     (spec.cols - 1) - col, col)
+    if plan.col_position is None:
+        return field[ti[:, None, None], tn[None, :, None],
+                     p[:, :, None], col[None, :, :]]          # (I, N, K)
+    colp = plan.col_position[ti[:, None, None], tn[None, :, None],
+                             col[None, :, :]]                 # (I, N, K)
     return field[ti[:, None, None], tn[None, :, None],
-                 p[:, :, None], col[None, :, :]]              # (I, N, K)
+                 p[:, :, None], colp]
 
 
 @partial(jax.jit, static_argnames=("spec", "model"))
@@ -80,7 +87,7 @@ def nonideal_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
     slot = jnp.arange(N) % wpt
     col = slot[:, None] * K + jnp.arange(K)[None, :]
     col = jnp.where(jnp.asarray(plan.reversed_dataflow),
-                    (spec.cols - 1) - col, col).astype(jnp.float32)
+                    (spec.cols - 1) - col, col)
 
     ti = jnp.arange(I) // rows
     q = jnp.arange(I) % rows
@@ -88,11 +95,16 @@ def nonideal_magnitude(bits: jax.Array, scale: jax.Array, plan: MdmPlan,
     p = plan.row_position[ti, :, q][:, tn].astype(jnp.float32)
 
     m0 = jnp.einsum("ink,k->in", c, bw)
-    m1 = jnp.einsum("ink,nk->in", c, bw * col)
+    if plan.col_position is None:
+        m1 = jnp.einsum("ink,nk->in", c, bw * col.astype(jnp.float32))
+    else:
+        colp = plan.col_position[ti[:, None, None], tn[None, :, None],
+                                 col[None, :, :]].astype(jnp.float32)
+        m1 = jnp.einsum("ink,ink->in", c, bw * colp)
     return scale * ((1.0 + eta * p) * m0 + eta * m1)
 
 
-def nonideal_weights(w: jax.Array, spec: CrossbarSpec, mode: str = "mdm",
+def nonideal_weights(w: jax.Array, spec: CrossbarSpec, mode="mdm",
                      eta: float | jax.Array = PAPER_ETA,
                      stuck: jax.Array | None = None,
                      gamma: jax.Array | None = None,

@@ -72,7 +72,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx | None = None,
                  max_seq: int = 2048, temperature: float = 0.0,
                  plan_cache=None, nonideal=None, nonideal_seed: int = 0,
-                 fault_aware: bool = True):
+                 fault_aware: bool = True, pipeline=None):
         self.cfg = cfg
         self.ctx = ctx or ShardingCtx()
         self.params = params
@@ -82,15 +82,19 @@ class ServeEngine:
         if cfg.cim.enabled:
             from repro.deploy import PlanCache, deploy_model_params
             cache = plan_cache if plan_cache is not None else PlanCache()
-            # ``nonideal`` (repro.nonideal.models.NonidealModel) serves
-            # the model on imperfect devices: stuck faults / variation
-            # are sampled once at deployment (keyed by nonideal_seed),
-            # folded into the deployment codes/gain, and — with
-            # fault_aware — steered around by the MDM row sort.
+            # ``pipeline`` (a repro.mapping.MappingPipeline, named
+            # pipeline or spec string) selects the mapping strategy;
+            # default is cfg.cim.mode (legacy mode strings keep working
+            # through the deprecation shim).  ``nonideal``
+            # (repro.nonideal.models.NonidealModel) serves the model on
+            # imperfect devices: stuck faults / variation are sampled
+            # once at deployment (keyed by nonideal_seed), folded into
+            # the deployment codes/gain, and — with fault_aware —
+            # steered around by the MDM row sort.
             self.cim, self.deploy_report = deploy_model_params(
                 params, cfg, cache=cache, ctx=self.ctx,
                 nonideal=nonideal, nonideal_key=nonideal_seed,
-                fault_aware=fault_aware)
+                fault_aware=fault_aware, pipeline=pipeline)
         # Donate the state on both lowerables: prefill writes the whole
         # cache anyway, so aliasing the fresh buffers avoids one full
         # cache copy at the prefill->decode handoff.

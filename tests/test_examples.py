@@ -17,11 +17,14 @@ def test_quickstart_runs_tiny(capsys):
     quickstart.main(in_dim=64, out_dim=8, batch=2,
                     spec=CrossbarSpec(rows=16, cols=16, n_bits=8))
     out = capsys.readouterr().out
-    assert "mode=mdm" in out
+    assert "pipeline=mdm" in out
+    assert "pipeline=xchangr" in out
     assert "circuit-measured NF" in out
-    # eta=0 semantics check printed a small error
-    line = [ln for ln in out.splitlines() if "max err" in ln][0]
-    assert float(line.rsplit(":", 1)[1]) < 1e-5
+    # eta=0 semantics checks printed a small error (mdm AND xchangr)
+    lines = [ln for ln in out.splitlines() if "max err" in ln]
+    assert len(lines) == 2
+    for line in lines:
+        assert float(line.rsplit(":", 1)[1]) < 1e-5
 
 
 def test_cim_deploy_runs_smoke_config(capsys):

@@ -1,0 +1,461 @@
+"""Composable mapping-strategy API: legacy-shim bit-identity, cache-key
+back-compat, registry round-trips, and the new strategies end-to-end.
+
+The redesign's contract (ISSUE 5): legacy ``mode`` strings resolve to
+canonical pipelines that produce **bit-identical plans and identical
+plan-cache keys** — existing caches stay warm — while new strategies
+(significance-weighted fault steering, the X-CHANGR-style bitline sort,
+expert-axis partitioning) are selectable end-to-end through
+``ServeEngine`` by registry name.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import manhattan
+from repro.core.bitslice import bitslice, unbitslice
+from repro.core.mdm import (
+    MODES,
+    physical_column_significance,
+    placed_masks,
+    plan_from_bits,
+    plan_layer,
+)
+from repro.core.tiling import CrossbarSpec
+from repro.deploy import (
+    PlanCache,
+    deploy_model_params,
+    fingerprint_matrices,
+    plan_matrices,
+)
+from repro.mapping import (
+    MappingPipeline,
+    XChangrCols,
+    available,
+    get_strategy,
+    named_pipelines,
+    resolve_pipeline,
+)
+from repro.nonideal import sample_stuck
+
+SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
+NAMED = named_pipelines()
+
+
+def _w(seed=0, shape=(48, 6), scale=0.2):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def _mats(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {f"m{j}": jax.random.normal(jax.random.fold_in(key, j),
+                                       (i, n)) * 0.2
+            for j, (i, n) in enumerate([(48, 6), (70, 13), (33, 7)])}
+
+
+def assert_plans_identical(a, b):
+    for fa, fb in zip(a, b):
+        if fa is None or fb is None:
+            assert fa is None and fb is None
+            continue
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# -------------------- legacy shim: plan bit-identity ----------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_legacy_mode_strings_resolve_to_bit_identical_plans(mode):
+    w = _w(seed=MODES.index(mode))
+    assert_plans_identical(plan_layer(w, SPEC, mode),
+                           plan_layer(w, SPEC, resolve_pipeline(mode)))
+
+
+def test_legacy_fault_map_side_channel_resolves_to_fault_aware():
+    """mode="mdm" + fault_maps was fault-aware planning; the shim must
+    reproduce it exactly, and equal the explicit fault_aware pipeline."""
+    w = _w(seed=3)
+    ti, tn = SPEC.grid(*w.shape)
+    stuck = sample_stuck(jax.random.PRNGKey(1),
+                         (ti, tn, SPEC.rows, SPEC.cols), 0.1, 0.02)
+    legacy = plan_layer(w, SPEC, "mdm", stuck)
+    explicit = plan_layer(w, SPEC, NAMED["fault_aware"], stuck)
+    assert_plans_identical(legacy, explicit)
+    # ...and it is genuinely fault-aware (differs from plain MDM here).
+    plain = plan_layer(w, SPEC, "mdm")
+    assert not np.array_equal(np.asarray(legacy.row_perm),
+                              np.asarray(plain.row_perm))
+
+
+def test_pipeline_rows_ignore_faults_unless_declared():
+    """An explicit MdmRows pipeline is never silently upgraded: fault
+    maps are dropped from planning (and from cache keys)."""
+    w = _w(seed=4)
+    ti, tn = SPEC.grid(*w.shape)
+    stuck = sample_stuck(jax.random.PRNGKey(2),
+                         (ti, tn, SPEC.rows, SPEC.cols), 0.2, 0.0)
+    assert_plans_identical(plan_layer(w, SPEC, NAMED["mdm"], stuck),
+                           plan_layer(w, SPEC, NAMED["mdm"]))
+
+
+# -------------------- legacy shim: cache-key identity ---------------------
+
+def test_legacy_cache_entries_hit_under_pipeline_keys(tmp_path):
+    """Entries written under mode strings must be pure hits when the
+    same mapping is requested as a canonical pipeline — including the
+    one-read manifest — and vice versa."""
+    mats = _mats(seed=1)
+    cache = PlanCache(str(tmp_path))
+    cold, r1 = plan_matrices(mats, SPEC, "mdm", cache=cache)
+    assert r1["cache_misses"] == len(mats)
+    hit, r2 = plan_matrices(mats, SPEC, NAMED["mdm"], cache=cache)
+    assert r2["cache_hits"] == len(mats) and r2["cache_misses"] == 0
+    assert r2["manifest_hit"]
+    for name in mats:
+        assert_plans_identical(cold[name], hit[name])
+    # Keys are equal string-for-string for every legacy mode.
+    for mode in MODES:
+        assert fingerprint_matrices(mats, SPEC, mode) == \
+            fingerprint_matrices(mats, SPEC, resolve_pipeline(mode))
+
+
+def test_new_strategies_get_distinct_cache_keys(tmp_path):
+    mats = _mats(seed=2)
+    keys = [frozenset(fingerprint_matrices(mats, SPEC, m).values())
+            for m in ("mdm", "xchangr", "significance_weighted",
+                      "baseline")]
+    for i in range(len(keys)):
+        for j in range(i + 1, len(keys)):
+            assert keys[i].isdisjoint(keys[j])
+    # Column-permuted plans round-trip through the cache bit-exactly.
+    cache = PlanCache(str(tmp_path))
+    cold, _ = plan_matrices(mats, SPEC, "xchangr", cache=cache)
+    hit, r = plan_matrices(mats, SPEC, "xchangr", cache=cache)
+    assert r["cache_hits"] == len(mats)
+    for name in mats:
+        assert hit[name].col_perm is not None
+        assert_plans_identical(cold[name], hit[name])
+
+
+# ------------------------- registry round-trips ---------------------------
+
+def test_registry_roundtrip_name_pipeline_fingerprint():
+    for name, pipe in NAMED.items():
+        assert resolve_pipeline(name) == pipe
+        # spec string -> pipeline -> fingerprint round-trips
+        assert MappingPipeline.from_spec(pipe.spec()) == pipe
+        assert MappingPipeline.from_spec(pipe.spec()).fingerprint() \
+            == pipe.fingerprint()
+    for kind in ("rows", "cols", "partition"):
+        for sname in available(kind):
+            s = get_strategy(kind, sname)
+            assert s.name == sname and s.kind == kind
+
+
+def test_fingerprints_stable_across_processes():
+    """The cache tokens/fingerprints must be process-independent (no
+    id()/hash()-derived content) — a fresh interpreter computes the
+    same strings."""
+    code = (
+        "import sys; sys.path.insert(0, sys.argv[1])\n"
+        "from repro.mapping import named_pipelines\n"
+        "for n, p in sorted(named_pipelines().items()):\n"
+        "    print(n, p.fingerprint(), p.cache_token())\n"
+    )
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code, src], check=True, timeout=120,
+        capture_output=True, text=True).stdout
+    want = "".join(f"{n} {p.fingerprint()} {p.cache_token()}\n"
+                   for n, p in sorted(NAMED.items()))
+    assert out == want
+
+
+def test_cache_tokens_pin_legacy_strings():
+    assert NAMED["baseline"].cache_token() == "baseline"
+    assert NAMED["reverse"].cache_token() == "reverse"
+    assert NAMED["sort"].cache_token() == "sort"
+    assert NAMED["mdm"].cache_token() == "mdm"
+    # fault_aware shares mdm's token (legacy keyed fault-awareness via
+    # the fault-map fingerprint, not the mode string)...
+    assert NAMED["fault_aware"].cache_token() == "mdm"
+    # ...while genuinely new strategies get namespaced tokens.
+    assert NAMED["xchangr"].cache_token().startswith("pipe:")
+    assert NAMED["significance_weighted"].cache_token().startswith("pipe:")
+    # The partition pass never enters the plan token.
+    assert NAMED["mdm_expert"].cache_token() == "mdm"
+
+
+def test_unknown_pipeline_raises():
+    with pytest.raises(ValueError, match="unknown mapping pipeline"):
+        resolve_pipeline("nope")
+    with pytest.raises(ValueError):
+        MappingPipeline.from_spec("row=nope")
+    with pytest.raises(ValueError):
+        MappingPipeline.from_spec("bogus_key=x")
+
+
+# ----------------------- new strategy semantics ---------------------------
+
+def test_significance_weighted_reduces_to_mdm_without_faults():
+    w = _w(seed=5)
+    assert_plans_identical(
+        plan_layer(w, SPEC, NAMED["significance_weighted"]),
+        plan_layer(w, SPEC, NAMED["mdm"]))
+
+
+def test_uniform_col_weights_match_unweighted_fault_order():
+    """col_weights=ones must reproduce the uniform-currency order (the
+    significance weighting is a strict generalisation)."""
+    key = jax.random.PRNGKey(0)
+    m = (jax.random.uniform(key, (16, 16)) < 0.3).astype(jnp.float32)
+    stuck = sample_stuck(jax.random.PRNGKey(1), (16, 16), 0.15, 0.05)
+    a = manhattan.fault_aware_row_order(m, stuck, SPEC.nf_unit)
+    b = manhattan.fault_aware_row_order(m, stuck, SPEC.nf_unit,
+                                        jnp.ones((16,)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_significance_weighted_steers_by_significance():
+    """Every physical row carries exactly one stuck cell — uniform
+    currency cannot tell them apart (it keeps the densest row at
+    position 0) — but physical row 0's fault sits under the *most
+    significant* bit plane, so the weighted order must route the dense
+    row around it."""
+    J = K = SPEC.rows
+    m = jnp.zeros((J, K)).at[0, :].set(1.0)   # one dense logical row
+    sig = np.asarray(physical_column_significance(SPEC, True))[0]
+    hi, lo = int(np.argmax(sig)), int(np.argmin(sig))
+    stuck = jnp.zeros((J, K), jnp.int8)
+    for p in range(J):
+        stuck = stuck.at[p, hi if p == 0 else lo].set(1)
+    uniform = np.asarray(manhattan.fault_aware_row_order(
+        m, stuck, SPEC.nf_unit))
+    weighted = np.asarray(manhattan.fault_aware_row_order(
+        m, stuck, SPEC.nf_unit, jnp.asarray(sig)))
+    assert uniform[0] == 0           # uniform currency: equal penalties
+    assert weighted[0] != 0          # weighted: MSB fault is expensive
+    assert weighted[1] == 0          # ...dense row takes the next slot
+    assert sorted(weighted.tolist()) == list(range(J))
+
+
+def test_xchangr_col_perm_is_permutation_and_reduces_nf():
+    w = _w(seed=6, shape=(64, 8))
+    px = plan_layer(w, SPEC, NAMED["xchangr"])
+    pm = plan_layer(w, SPEC, NAMED["mdm"])
+    cp = np.asarray(px.col_perm)
+    for a in range(cp.shape[0]):
+        for b in range(cp.shape[1]):
+            assert sorted(cp[a, b].tolist()) == list(range(SPEC.cols))
+            np.testing.assert_array_equal(
+                np.asarray(px.col_position)[a, b][cp[a, b]],
+                np.arange(SPEC.cols))
+    assert float(jnp.sum(px.nf_after)) <= float(jnp.sum(pm.nf_after)) + 1e-6
+
+
+def test_xchangr_placed_masks_preserve_row_col_marginals():
+    """The bitline permutation relabels columns inside each tile: cell
+    multisets per tile are preserved (placement changes, content not)."""
+    w = _w(seed=7)
+    sliced = bitslice(w, SPEC.n_bits)
+    plan = plan_layer(w, SPEC, NAMED["xchangr"])
+    base = plan_layer(w, SPEC, NAMED["baseline"])
+    a = np.asarray(placed_masks(sliced.bits, plan, SPEC))
+    b = np.asarray(placed_masks(sliced.bits, base, SPEC))
+    assert a.sum() == b.sum()
+    np.testing.assert_array_equal(np.sort(a.sum((2, 3)).ravel()),
+                                  np.sort(b.sum((2, 3)).ravel()))
+
+
+# --------------------------- end-to-end serving ---------------------------
+
+def test_xchangr_deployment_semantics_and_dispatch_guard():
+    from repro.kernels.cim_mvm.ops import cim_mvm, deploy
+
+    w = _w(seed=8)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, w.shape[0]))
+    dep, _ = deploy(w, SPEC, NAMED["xchangr"], eta=0.0)
+    assert dep.col_pos is not None
+    y = cim_mvm(x, dep)   # auto -> xla (col_pos unsupported in pallas)
+    wq = unbitslice(bitslice(w, SPEC.n_bits))
+    assert float(jnp.max(jnp.abs(y - x @ wq))) < 1e-5
+    with pytest.raises(ValueError, match="column-permuted"):
+        cim_mvm(x, dep, impl="interpret")
+    # The distortion differs from plain MDM's (the permutation moved
+    # bit cells to different Manhattan distances).
+    dep_e, _ = deploy(w, SPEC, NAMED["xchangr"], eta=2e-3)
+    dep_m, _ = deploy(w, SPEC, NAMED["mdm"], eta=2e-3)
+    assert float(jnp.max(jnp.abs(cim_mvm(x, dep_e)
+                                 - cim_mvm(x, dep_m)))) > 0
+
+
+def test_eq17_evaluator_matches_kernel_under_new_pipelines():
+    """noisy_weights (the model-eval path) and the serving kernel must
+    agree on W' for the column-permuted pipeline too."""
+    from repro.core.noise import noisy_weights
+    from repro.kernels.cim_mvm.ops import cim_mvm, deploy
+
+    w = _w(seed=10)
+    x = jax.random.normal(jax.random.PRNGKey(11), (5, w.shape[0]))
+    for name in ("mdm", "xchangr"):
+        wn, plan = noisy_weights(w, SPEC, NAMED[name], eta=2e-3)
+        dep, _ = deploy(w, SPEC, NAMED[name], eta=2e-3, plan=plan)
+        y_kernel = cim_mvm(x, dep, impl="xla")
+        y_eval = x @ wn
+        rel = float(jnp.max(jnp.abs(y_kernel - y_eval))
+                    / jnp.max(jnp.abs(y_eval)))
+        assert rel < 1e-5, (name, rel)
+
+
+def _serve_cfg(**cim_kw):
+    from repro.configs.base import CimConfig, ModelConfig
+
+    return ModelConfig(
+        name="map-serve-test", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, block_pattern=("attn",),
+        remat="none", dtype="float32", attn_chunk=32,
+        cim=CimConfig(enabled=True, rows=16, cols=16, n_bits=4,
+                      **cim_kw))
+
+
+def test_serve_engine_generates_under_xchangr_pipeline(tmp_path):
+    """A genuinely new strategy is selectable end-to-end through
+    ServeEngine via cfg.cim.mode (named pipeline string)."""
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = _serve_cfg(mode="xchangr")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64,
+                      plan_cache=PlanCache(str(tmp_path)))
+    assert eng.deploy_report["matrices"]["n_deployed"] == 14
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 3))
+    assert out.shape == (2, 3) and (out >= 0).all()
+
+
+# ------------------- collection summary / expert banks --------------------
+
+def _moe_cfg():
+    from repro.configs.base import CimConfig, ModelConfig
+
+    return ModelConfig(
+        name="map-moe-test", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, block_pattern=("attn",),
+        remat="none", dtype="float32", attn_chunk=32, n_experts=4,
+        n_experts_per_token=2, moe_d_ff=48,
+        cim=CimConfig(enabled=True, mode="mdm", rows=16, cols=16,
+                      n_bits=4))
+
+
+def test_collection_summary_accounts_for_every_parameter():
+    """No silent dropping: every non-deployed parameter appears in the
+    skip record with a reason; MoE banks deploy under expert-axis
+    partitioning."""
+    from repro.deploy import collect_model_matrices
+    from repro.models.model import init_params
+
+    cfg = _moe_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mats, summary = collect_model_matrices(params, cfg, "mdm")
+    # dense partition: expert banks recorded as skipped, with a hint
+    assert any("ffn_we_gate" in k for k in summary["skipped"])
+    assert any("expert" in v for v in summary["skipped"].values())
+    n_slot_params = sum(len(v) for k, v in params.items()
+                        if k.startswith("slot"))
+    n_top = sum(1 for k in params if not k.startswith("slot"))
+    deployed_params = {n.rsplit("/", 1)[0].replace("/", ".", 1)
+                      for n in summary["deployed"]}
+    assert len(deployed_params) + summary["n_skipped"] \
+        == n_slot_params + n_top
+
+    mats_e, summary_e = collect_model_matrices(params, cfg,
+                                               NAMED["mdm_expert"])
+    E, reps = cfg.n_experts, cfg.pattern_repeats
+    assert "slot0_attn/ffn_we_gate/0/e0" in mats_e
+    # 4 attn projections + 3 expert banks x E, per repeat
+    assert summary_e["n_deployed"] == reps * (4 + 3 * E)
+    assert not any("ffn_we" in k for k in summary_e["skipped"])
+    assert mats_e["slot0_attn/ffn_we_down/0/e1"].shape == (48, 32)
+
+
+def test_fault_aware_flag_steers_non_legacy_pipelines(tmp_path):
+    """fault_aware=True must upgrade ANY plain-MDM-rows pipeline (e.g.
+    xchangr), not just the legacy "sort"/"mdm" strings — sampled fault
+    maps must never be silently dropped."""
+    from repro.models.model import init_params
+    from repro.nonideal import NonidealModel
+
+    cfg = _serve_cfg(mode="mdm")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = NonidealModel(p_stuck_off=0.05)
+    kw = dict(nonideal=model, nonideal_key=7)
+    _, r_aware = deploy_model_params(
+        params, cfg, cache=PlanCache(str(tmp_path / "a")),
+        pipeline=NAMED["xchangr"], fault_aware=True, **kw)
+    assert r_aware["fault_aware"]
+    # The fault maps entered the plan keys: replanning without them
+    # (fault_aware=False) misses the cache.
+    _, r_plain = deploy_model_params(
+        params, cfg, cache=PlanCache(str(tmp_path / "a")),
+        pipeline=NAMED["xchangr"], fault_aware=False, **kw)
+    assert r_plain["cache_misses"] == r_plain["n_matrices"]
+    # Identity-row pipelines keep the legacy no-op (never upgraded).
+    _, r_base = deploy_model_params(
+        params, cfg, cache=PlanCache(str(tmp_path / "b")),
+        pipeline=NAMED["baseline"], fault_aware=True, **kw)
+    assert not r_base["fault_aware"]
+
+
+def test_deploy_layout_follows_supplied_plan():
+    """deploy(plan=...) must take the physical layout from the plan,
+    even when the mode argument disagrees (cache-hit path)."""
+    from repro.kernels.cim_mvm.ops import deploy
+
+    w = _w(seed=12)
+    plan = plan_layer(w, SPEC, "sort")       # conventional dataflow
+    dep, _ = deploy(w, SPEC, plan=plan)      # mode left at its default
+    assert dep.reversed_df is False
+    xplan = plan_layer(w, SPEC, NAMED["xchangr"])
+    dep2, _ = deploy(w, SPEC, "baseline", plan=xplan)
+    assert dep2.reversed_df is True and dep2.col_pos is not None
+
+
+def test_deploy_report_carries_matrix_summary(tmp_path):
+    from repro.models.model import init_params
+
+    cfg = _serve_cfg(mode="mdm")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    _, report = deploy_model_params(params, cfg,
+                                    cache=PlanCache(str(tmp_path)))
+    s = report["matrices"]
+    assert s["n_deployed"] == report["n_matrices"] == 14
+    assert s["n_skipped"] > 0
+    assert all(isinstance(v, str) and v for v in s["skipped"].values())
+
+
+@pytest.mark.slow
+def test_serve_engine_moe_expert_partition_generates(tmp_path):
+    """MoE expert banks deploy per-expert and the expert matmuls route
+    through vmapped cim_mvm end-to-end."""
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = _moe_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=64,
+                      plan_cache=PlanCache(str(tmp_path)),
+                      pipeline=NAMED["mdm_expert"])
+    slot = eng.cim["slot0_attn"]
+    assert {"ffn_we_gate", "ffn_we_up", "ffn_we_down"} <= set(slot)
+    reps, E = cfg.pattern_repeats, cfg.n_experts
+    assert slot["ffn_we_gate"].codes.shape[:2] == (reps, E)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    out = np.asarray(eng.generate(prompts, 3))
+    assert out.shape == (2, 3)

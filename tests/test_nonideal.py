@@ -213,7 +213,8 @@ def test_plan_population_fault_maps_matches_rowwise():
     from repro.core.mdm import plan_tile_population
     from repro.core.tiling import reverse_dataflow
 
-    perm, pos, _, _ = plan_tile_population(masks, SPEC, "mdm", stuck)
+    perm, pos, _, _, _, _ = plan_tile_population(masks, SPEC, "mdm",
+                                                 stuck)
     placed = reverse_dataflow(masks)
     for t in range(masks.shape[0]):
         ref = manhattan.fault_aware_row_order(placed[t], stuck[t],
