@@ -35,7 +35,7 @@ def run(verbose: bool = True) -> dict:
     out = {}
     layers = {}
     for (i, n) in [(1024, 1024), (4096, 4096)]:
-        w = jax.random.normal(key, (i, n)) * 0.02
+        w = jax.random.normal(jax.random.fold_in(key, i), (i, n)) * 0.02
         layers[f"{i}x{n}"] = w
         dt = _time(lambda w: plan_layer(w, spec, "mdm"), w)
         ti, tn = spec.grid(i, n)
@@ -60,7 +60,8 @@ def run(verbose: bool = True) -> dict:
               f"{tiles} tiles): {dt*1e3:.1f} ms "
               f"({dt/tiles*1e6:.1f} us/tile)")
 
-    masks = (jax.random.uniform(key, (256, 64, 64)) < 0.2).astype(jnp.uint8)
+    masks = (jax.random.uniform(jax.random.fold_in(key, 0),
+                                (256, 64, 64)) < 0.2).astype(jnp.uint8)
     dt = _time(lambda m: manhattan_score(m, nf_unit=spec.nf_unit), masks)
     out["score_kernel_256tiles"] = {"seconds": dt, "interpret": INTERPRET}
     if verbose:

@@ -1,17 +1,29 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--list]
 
 Prints a ``name,seconds,derived`` CSV line per benchmark plus each
 module's detailed output, and dumps results/benchmarks.json.
+
+The :data:`BENCHES` table is the **registry of record**: the semantic
+auditor (``repro.analysis.audit``) cross-checks it against the module
+files on disk and against the ``--only`` names ``scripts/test_nightly
+.sh`` invokes, so a benchmark module that exists but is not registered
+— or a nightly entry that silently matches nothing — fails CI.
+``--only`` accepts either the registered benchmark name or the module
+name (one module may back several benchmarks) and **errors** on an
+unknown token instead of no-opping: a typo'd nightly line must fail
+loudly, not skip the benchmark and exit 0.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
 import time
+from typing import Callable
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -38,73 +50,130 @@ from benchmarks import (  # noqa: E402
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class Bench:
+    """One registered benchmark.
+
+    ``name`` is the historical results/benchmarks.json key (stable —
+    changing it orphans recorded history); ``module`` is the backing
+    ``benchmarks/<module>.py`` file; ``run`` takes the ``--quick``
+    flag.
+    """
+
+    name: str
+    module: str
+    run: Callable[[bool], dict]
+
+
+BENCHES: tuple[Bench, ...] = (
+    # paper §III-A (Theorem 1)
+    Bench("theorem1_sparsity", "theorem1", lambda q: theorem1.run()),
+    # paper Fig 4
+    Bench("manhattan_hypothesis_fit", "hypothesis_fit",
+          lambda q: hypothesis_fit.run(n_tiles=64 if q else 500)),
+    # paper Fig 5
+    Bench("nf_reduction", "nf_reduction", lambda q: nf_reduction.run()),
+    # paper Fig 6
+    Bench("accuracy_under_noise", "accuracy_noise",
+          lambda q: accuracy_noise.run(train_steps=60 if q else 250)),
+    # paper §IV "lightweight" claim
+    Bench("mdm_planning_cost", "planning_cost",
+          lambda q: planning_cost.run()),
+    # §Perf: solver scale-out matrix (seed lax.map vs batched vs
+    # sharded/mixed on the 8-way device simulation), both regimes:
+    # 64x64 paper-scale tiles (work-bound on small hosts) and
+    # 32x32 tiles (latency-bound; the sharded engine's >= 2x row).
+    Bench("solver_throughput", "solver_throughput",
+          lambda q: solver_throughput.run(
+              n_tiles=128 if q else 512, rows=32 if q else 64,
+              cols=32 if q else 64, seq_tiles=32 if q else 64)),
+    Bench("solver_throughput_32x32", "solver_throughput",
+          lambda q: solver_throughput.run(
+              n_tiles=128 if q else 512, rows=32, cols=32,
+              seq_tiles=32 if q else 64)),
+    # §Perf: fused CIM path vs materialised bit-planes
+    Bench("cim_traffic", "cim_traffic", lambda q: cim_traffic.run()),
+    # §Perf: whole-model deployment engine — fused vs per-layer
+    # planning, cache-hit redeploy, CIM serving tokens/s
+    Bench("deploy_throughput", "deploy_throughput",
+          lambda q: deploy_throughput.run(n_per_shape=1 if q else 3)),
+    # §Nonideal: stuck-fault x variation Monte-Carlo distributions,
+    # baseline vs MDM vs fault-aware vs significance-weighted MDM
+    Bench("fault_tolerance", "fault_tolerance",
+          lambda q: fault_tolerance.run(
+              n_rows=128 if q else 256, n_samples=3 if q else 6,
+              rates=(0.01, 0.05) if q else (0.002, 0.01, 0.05),
+              sigmas=(0.0,) if q else (0.0, 0.1))),
+    # §Mapping API: registered row x column strategy matrix (Eq-16
+    # NF on the standard 64x64 population)
+    Bench("mapping_matrix", "mapping_matrix",
+          lambda q: mapping_matrix.run(n_rows=128 if q else 512)),
+    # §Dry-run / §Roofline summary
+    Bench("roofline_table", "roofline_table",
+          lambda q: roofline_table.run()),
+)
+
+
+def registered_modules() -> frozenset[str]:
+    """Module names the registry covers (auditor entry point)."""
+    return frozenset(b.module for b in BENCHES)
+
+
+def resolve_only(token: str) -> list[Bench]:
+    """Benches selected by one ``--only`` token (name or module).
+
+    Raises ``KeyError`` on an unknown token — the silent-no-op
+    behaviour this replaced let a typo'd nightly entry skip its
+    benchmark while exiting 0.
+    """
+    hits = [b for b in BENCHES if token in (b.name, b.module)]
+    if not hits:
+        raise KeyError(
+            f"unknown benchmark {token!r}; known names: "
+            f"{[b.name for b in BENCHES]} (module names also accepted)")
+    return hits
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced tile counts / training steps")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="run one benchmark (registered name or module "
+                         "name); unknown names are an error")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
     args = ap.parse_args()
 
-    q = args.quick
-    benches = {
-        # paper §III-A (Theorem 1)
-        "theorem1_sparsity": lambda: theorem1.run(),
-        # paper Fig 4
-        "manhattan_hypothesis_fit": lambda: hypothesis_fit.run(
-            n_tiles=64 if q else 500),
-        # paper Fig 5
-        "nf_reduction": lambda: nf_reduction.run(),
-        # paper Fig 6
-        "accuracy_under_noise": lambda: accuracy_noise.run(
-            train_steps=60 if q else 250),
-        # paper §IV "lightweight" claim
-        "mdm_planning_cost": lambda: planning_cost.run(),
-        # §Perf: solver scale-out matrix (seed lax.map vs batched vs
-        # sharded/mixed on the 8-way device simulation), both regimes:
-        # 64x64 paper-scale tiles (work-bound on small hosts) and
-        # 32x32 tiles (latency-bound; the sharded engine's >= 2x row).
-        "solver_throughput": lambda: solver_throughput.run(
-            n_tiles=128 if q else 512, rows=32 if q else 64,
-            cols=32 if q else 64, seq_tiles=32 if q else 64),
-        "solver_throughput_32x32": lambda: solver_throughput.run(
-            n_tiles=128 if q else 512, rows=32, cols=32,
-            seq_tiles=32 if q else 64),
-        # §Perf: fused CIM path vs materialised bit-planes
-        "cim_traffic": lambda: cim_traffic.run(),
-        # §Perf: whole-model deployment engine — fused vs per-layer
-        # planning, cache-hit redeploy, CIM serving tokens/s
-        "deploy_throughput": lambda: deploy_throughput.run(
-            n_per_shape=1 if q else 3),
-        # §Nonideal: stuck-fault x variation Monte-Carlo distributions,
-        # baseline vs MDM vs fault-aware vs significance-weighted MDM
-        "fault_tolerance": lambda: fault_tolerance.run(
-            n_rows=128 if q else 256, n_samples=3 if q else 6,
-            rates=(0.01, 0.05) if q else (0.002, 0.01, 0.05),
-            sigmas=(0.0,) if q else (0.0, 0.1)),
-        # §Mapping API: registered row x column strategy matrix (Eq-16
-        # NF on the standard 64x64 population)
-        "mapping_matrix": lambda: mapping_matrix.run(
-            n_rows=128 if q else 512),
-        # §Dry-run / §Roofline summary
-        "roofline_table": lambda: roofline_table.run(),
-    }
+    if args.list:
+        for b in BENCHES:
+            print(f"{b.name} (benchmarks/{b.module}.py)")
+        return
+
+    if args.only:
+        try:
+            selected = resolve_only(args.only)
+        except KeyError as e:
+            ap.error(str(e))
+    else:
+        selected = list(BENCHES)
 
     results, csv_lines = {}, ["name,seconds,derived"]
-    for name, fn in benches.items():
-        if args.only and args.only != name:
-            continue
-        print(f"== {name} ==")
+    for bench in selected:
+        print(f"== {bench.name} ==")
         t0 = time.perf_counter()
         try:
-            res = fn()
+            res = bench.run(args.quick)
             dt = time.perf_counter() - t0
-            results[name] = {"ok": True, "seconds": dt, "result": res}
-            derived = _derive(name, res)
+            results[bench.name] = {"ok": True, "seconds": dt,
+                                   "result": res}
+            derived = _derive(bench.name, res)
         except Exception as e:  # pragma: no cover
             dt = time.perf_counter() - t0
-            results[name] = {"ok": False, "seconds": dt, "error": repr(e)}
+            results[bench.name] = {"ok": False, "seconds": dt,
+                                   "error": repr(e)}
             derived = f"ERROR:{e!r}"
-        csv_lines.append(f"{name},{dt:.3f},{derived}")
+        csv_lines.append(f"{bench.name},{dt:.3f},{derived}")
         print()
 
     print("\n".join(csv_lines))

@@ -16,10 +16,10 @@ from repro.core import theory
 
 
 def run(verbose: bool = True) -> dict:
-    key = jax.random.PRNGKey(0)
+    k_gauss, k_laplace = jax.random.split(jax.random.PRNGKey(0))
     ensembles = {
-        "gaussian(0.02)": jax.random.normal(key, (512, 512)) * 0.02,
-        "laplace(0.02)": jax.random.laplace(key, (512, 512)) * 0.02,
+        "gaussian(0.02)": jax.random.normal(k_gauss, (512, 512)) * 0.02,
+        "laplace(0.02)": jax.random.laplace(k_laplace, (512, 512)) * 0.02,
         "trained-lm": _trained_weights(),
     }
     out = {}

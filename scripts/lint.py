@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""reprolint entry point: ``python scripts/lint.py [paths...]``.
+
+Thin wrapper so the CLI works without PYTHONPATH gymnastics; all logic
+lives in ``repro.analysis`` (jax-free unless ``--audit`` is passed).
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# reprolint over the library tree (the CI contract gate).  Extra args
+# pass through: `scripts/lint.sh --json`, `scripts/lint.sh src tests`.
+# Exit 0 iff zero unsuppressed findings.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python scripts/lint.py "$@"

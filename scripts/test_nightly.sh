@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
-# Full (nightly) test profile: includes the @slow solver-oracle shapes,
-# full-batch equivalence sweeps and the heavy Monte-Carlo nonideality
-# shapes that the tier-1 default (`pytest.ini` addopts = -m "not slow")
-# skips, plus the whole-model deployment, fault-tolerance and
+# Full (nightly) test profile: reprolint (static rules + the semantic
+# registry audit), then the @slow solver-oracle shapes, full-batch
+# equivalence sweeps and the heavy Monte-Carlo nonideality shapes that
+# the tier-1 default (`pytest.ini` addopts = -m "not slow") skips, plus
+# the whole-model deployment, fault-tolerance and
 # mapping-strategy-matrix benchmarks (fused planning / plan-cache /
 # CIM serving / fault+variation distributions / row-x-column strategy
 # NF numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    ./scripts/lint.sh --audit src benchmarks scripts
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -m "slow or not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -1,0 +1,58 @@
+"""reprolint: repo-specific static analysis for the JAX/Pallas contracts.
+
+Five PRs of growth accreted engineering contracts that nothing
+enforced; this package enforces them:
+
+=======  ==========================  =====================================
+code     name                        contract
+=======  ==========================  =====================================
+RPL001   compat-routing              version-sensitive JAX APIs
+                                     (shard_map, AbstractMesh,
+                                     enable_x64, capability probes) only
+                                     through ``repro/compat.py``
+RPL002   tracer-escape               no float()/int()/bool()/.item()/
+                                     np.asarray inside jit/shard_map-
+                                     decorated functions
+RPL003   prng-key-discipline         no key reuse without split/fold_in;
+                                     no literal-seed PRNGKey in library
+                                     code
+RPL004   interpret-test-only         ``interpret=True`` / interpret-
+                                     default dispatch only under tests/
+RPL005   import-time-jnp             no module-level jax.numpy
+                                     computation
+=======  ==========================  =====================================
+
+Two tiers:
+
+* the **AST linter** (:mod:`repro.analysis.core` +
+  :mod:`repro.analysis.rules`, CLI in :mod:`repro.analysis.cli` /
+  ``scripts/lint.py``) never imports the linted code — whole-``src/``
+  runs are sub-second and jax-free;
+* the **semantic auditor** (:mod:`repro.analysis.audit`) imports the
+  live registries and checks what syntax can't see: every behavioral
+  field of every registered mapping pass must reach the pipeline
+  fingerprint *and* the plan-cache key (else the content-addressed
+  ``PlanCache`` silently serves stale plans), and the benchmark
+  registry must agree with the files on disk and with
+  ``scripts/test_nightly.sh``.
+
+``repro.analysis.audit`` is deliberately **not** imported here so that
+``from repro.analysis import run_paths`` (and the lint CLI) stays
+jax-free.
+
+Suppression syntax (same line as the finding, justification after
+``--``)::
+
+    key = jax.random.PRNGKey(0)  # reprolint: disable=RPL003 -- why
+
+See docs/lint.md for the full rule-by-rule rationale.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    all_rules,
+    classify_path,
+    format_human,
+    format_json,
+    run_paths,
+    run_source,
+)

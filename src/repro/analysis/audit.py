@@ -1,0 +1,321 @@
+"""Registry-level semantic auditor (the dynamic half of reprolint).
+
+The AST rules (:mod:`repro.analysis.rules`) check what the *source*
+says; this module imports the **live** registries and checks what the
+code actually *does* against the contracts the cache layer depends on:
+
+AUD001  a registered strategy's params are not fully covered by its
+        ``fingerprint()`` (or the strategy cannot be default-built /
+        a field cannot be auto-perturbed, so coverage is unverifiable);
+AUD002  a strategy param does not reach the *pipeline* fingerprint;
+AUD003  a strategy param does not reach the :func:`plan_key` cache
+        address — the stale-plan bug class: two semantically different
+        deployments would hit the same ``PlanCache`` entry;
+AUD004  cache-token integrity: two semantically distinct pipeline
+        combinations share a token, or a legacy mode string no longer
+        round-trips to its historical token (which would orphan every
+        pre-redesign cache entry);
+AUD005  a ``benchmarks/`` module exists with no entry in the
+        ``benchmarks.run`` registry (or the registry names a module
+        file that does not exist);
+AUD006  ``scripts/test_nightly.sh`` invokes a ``--only`` token the
+        registry cannot resolve — before the registry grew
+        :func:`benchmarks.run.resolve_only`, such a typo silently ran
+        *nothing* and exited 0.
+
+The audit is **mechanical**: it default-constructs every registered
+strategy, perturbs each dataclass field in place
+(``dataclasses.replace``) and asserts the three identity layers all
+move.  Strategies with no params (the current built-ins) are vacuously
+covered — the audit exists so the *next* parametrised pass cannot ship
+with a leaky fingerprint.  ``tests/test_analysis_audit.py`` proves the
+teeth by registering a deliberately leaky strategy and watching the
+audit catch it.
+
+Unlike the AST linter this module imports jax (via the mapping and
+benchmark registries) — it is reached only through ``--audit`` /
+``run_audit`` so plain lint runs stay sub-second.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+
+from repro.core.tiling import CrossbarSpec
+from repro.deploy.cache import plan_key
+from repro.mapping.base import KINDS, available, get_strategy
+from repro.mapping.columns import IdentityCols
+from repro.mapping.pipeline import (
+    LEGACY_MODES,
+    MappingPipeline,
+    resolve_pipeline,
+)
+from repro.mapping.rows import FaultAwareRows, MdmRows
+
+_W_FP = "0" * 64  # fixed weight fingerprint: only the token may vary
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFinding:
+    """One audited contract violation."""
+
+    code: str
+    subject: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.code} [{self.subject}] {self.message}"
+
+
+def _perturb(value):
+    """A value guaranteed != the original, same general type.
+
+    Returns None when the field type has no mechanical perturbation
+    (the audit then reports the field as unverifiable rather than
+    silently passing it).
+    """
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 1
+    if isinstance(value, float):
+        return value * 2.0 + 1.0
+    if isinstance(value, str):
+        return value + "_audit"
+    if isinstance(value, tuple):
+        return value + value[-1:] if value else (1,)
+    return None
+
+
+def _pipeline_for(kind: str, strategy) -> MappingPipeline:
+    return MappingPipeline(**{kind: strategy})
+
+
+def audit_fingerprint_coverage() -> list[AuditFinding]:
+    """Perturb every dataclass field of every registered strategy.
+
+    For each field of each registered pass, assert the perturbation is
+    visible in (1) the strategy fingerprint, (2) the pipeline
+    fingerprint, and — for ``rows``/``cols`` passes — (3) the
+    :func:`plan_key` cache address.  ``partition`` passes are exempt
+    from (3) by documented design: partitioning changes *which*
+    matrices exist, and each produced matrix is content-addressed
+    individually (see :meth:`MappingPipeline.cache_token`).
+    """
+    findings: list[AuditFinding] = []
+    spec = CrossbarSpec()
+    for kind in KINDS:
+        for name in available(kind):
+            subject = f"{kind}/{name}"
+            try:
+                base = get_strategy(kind, name)
+            except Exception as e:
+                findings.append(AuditFinding(
+                    "AUD001", subject,
+                    f"cannot default-construct registered strategy: "
+                    f"{e!r} — fingerprint coverage unverifiable"))
+                continue
+            for field in dataclasses.fields(base):
+                new = _perturb(getattr(base, field.name))
+                if new is None:
+                    findings.append(AuditFinding(
+                        "AUD001", subject,
+                        f"field {field.name!r} has unsupported type for "
+                        f"auto-perturbation; cannot verify it reaches "
+                        f"the fingerprint"))
+                    continue
+                try:
+                    mutated = dataclasses.replace(
+                        base, **{field.name: new})
+                except Exception as e:
+                    findings.append(AuditFinding(
+                        "AUD001", subject,
+                        f"field {field.name!r} rejects perturbed value "
+                        f"{new!r}: {e!r} — coverage unverifiable"))
+                    continue
+                if mutated.fingerprint() == base.fingerprint():
+                    findings.append(AuditFinding(
+                        "AUD001", subject,
+                        f"fingerprint() ignores field {field.name!r} "
+                        f"({base.fingerprint()!r} unchanged)"))
+                p0, p1 = (_pipeline_for(kind, s) for s in (base, mutated))
+                if p1.fingerprint() == p0.fingerprint():
+                    findings.append(AuditFinding(
+                        "AUD002", subject,
+                        f"pipeline fingerprint ignores field "
+                        f"{field.name!r}"))
+                if kind == "partition":
+                    continue
+                k0 = plan_key(_W_FP, spec, p0.cache_token())
+                k1 = plan_key(_W_FP, spec, p1.cache_token())
+                if k0 == k1:
+                    findings.append(AuditFinding(
+                        "AUD003", subject,
+                        f"plan_key ignores field {field.name!r}: "
+                        f"cache token {p0.cache_token()!r} does not "
+                        f"move — stale PlanCache hits"))
+    return findings
+
+
+def _rows_equiv(rows) -> str:
+    """Cache-equivalence class of a row pass.
+
+    ``FaultAwareRows()`` deliberately shares the MDM token: it reduces
+    exactly to :class:`MdmRows` without fault maps, and *with* maps the
+    fault fingerprint enters :func:`plan_key` separately.  Everything
+    else is its own class.
+    """
+    if rows == MdmRows() or rows == FaultAwareRows():
+        return "mdm"
+    return rows.fingerprint()
+
+
+def audit_cache_tokens() -> list[AuditFinding]:
+    """Token-collision + legacy-token stability audit (AUD004).
+
+    Enumerates every (dataflow, registered rows, registered cols)
+    combination, groups by ``cache_token()``, and requires each token
+    to map to exactly one cache-equivalence class.  Also pins the four
+    legacy mode strings to their historical tokens.
+    """
+    findings: list[AuditFinding] = []
+    token_owners: dict[str, dict[str, str]] = {}
+    for dataflow in ("conventional", "reversed"):
+        for rname in available("rows"):
+            for cname in available("cols"):
+                try:
+                    pipe = MappingPipeline(
+                        dataflow=dataflow,
+                        rows=get_strategy("rows", rname),
+                        cols=get_strategy("cols", cname))
+                except Exception:
+                    continue  # reported by audit_fingerprint_coverage
+                equiv = (f"df={dataflow};rows={_rows_equiv(pipe.rows)};"
+                         f"cols={pipe.cols.fingerprint()}")
+                label = f"df={dataflow},row={rname},col={cname}"
+                owners = token_owners.setdefault(pipe.cache_token(), {})
+                owners.setdefault(equiv, label)
+    for token, owners in token_owners.items():
+        if len(owners) > 1:
+            findings.append(AuditFinding(
+                "AUD004", "cache_token",
+                f"token {token!r} is shared by semantically distinct "
+                f"pipelines: {sorted(owners.values())}"))
+    for mode in LEGACY_MODES:
+        token = resolve_pipeline(mode).cache_token()
+        if token != mode:
+            findings.append(AuditFinding(
+                "AUD004", f"legacy/{mode}",
+                f"legacy mode {mode!r} now yields token {token!r}; "
+                f"pre-redesign PlanCache entries become unreachable"))
+    # The fault-aware shim upgrade must keep the legacy token too (its
+    # key is distinguished by the fault fingerprint, not the token).
+    up = resolve_pipeline("mdm", have_faults=True).cache_token()
+    if up != "mdm":
+        findings.append(AuditFinding(
+            "AUD004", "legacy/mdm+faults",
+            f"fault-upgraded 'mdm' yields token {up!r} (want 'mdm')"))
+    return findings
+
+
+_ONLY_RE = re.compile(r"--only[= ]+([\w.]+)")
+
+
+def _repo_root() -> str:
+    import repro
+
+    # repro is a namespace package (no __init__.py), so __file__ is
+    # None; __path__ still holds the src/repro directory.
+    pkg_dir = (os.path.dirname(os.path.abspath(repro.__file__))
+               if getattr(repro, "__file__", None)
+               else os.path.abspath(list(repro.__path__)[0]))
+    return os.path.dirname(os.path.dirname(pkg_dir))
+
+
+def _import_run():
+    try:
+        import benchmarks.run as run
+    except ImportError:
+        sys.path.insert(0, _repo_root())
+        import benchmarks.run as run
+    return run
+
+
+def audit_benchmark_registry(module_files=None, registry=None,
+                             nightly_text=None) -> list[AuditFinding]:
+    """Cross-check benchmark files x registry x nightly (AUD005/6).
+
+    The three override parameters exist for the tests: by default the
+    audit reads the real ``benchmarks/`` directory, the live
+    ``benchmarks.run.BENCHES`` registry, and the real
+    ``scripts/test_nightly.sh``.
+
+    ``module_files``: iterable of module names present on disk;
+    ``registry``: iterable of Bench-like objects with ``.name`` and
+    ``.module``; ``nightly_text``: the nightly script's source.
+    """
+    findings: list[AuditFinding] = []
+    root = _repo_root()
+    try:
+        run = _import_run()
+    except Exception as e:
+        return [AuditFinding(
+            "AUD005", "benchmarks.run",
+            f"cannot import the benchmark registry: {e!r}")]
+    if registry is None:
+        registry = run.BENCHES
+    if module_files is None:
+        bench_dir = os.path.join(root, "benchmarks")
+        module_files = sorted(
+            f[:-3] for f in os.listdir(bench_dir)
+            if f.endswith(".py") and not f.startswith("_")
+            and f != "run.py")
+    if nightly_text is None:
+        nightly = os.path.join(root, "scripts", "test_nightly.sh")
+        try:
+            with open(nightly) as f:
+                nightly_text = f.read()
+        except OSError as e:
+            findings.append(AuditFinding(
+                "AUD006", "scripts/test_nightly.sh",
+                f"cannot read nightly script: {e!r}"))
+            nightly_text = ""
+
+    registered = {b.module for b in registry}
+    by_token = {t for b in registry for t in (b.name, b.module)}
+    for mod in module_files:
+        if mod not in registered:
+            findings.append(AuditFinding(
+                "AUD005", f"benchmarks/{mod}.py",
+                "module exists but has no Bench entry in "
+                "benchmarks.run.BENCHES — it never runs"))
+    known_mods = set(module_files)
+    for b in registry:
+        if b.module not in known_mods:
+            findings.append(AuditFinding(
+                "AUD005", f"bench/{b.name}",
+                f"registry names module {b.module!r} but "
+                f"benchmarks/{b.module}.py does not exist"))
+
+    if nightly_text:
+        if "benchmarks.run" not in nightly_text:
+            findings.append(AuditFinding(
+                "AUD006", "scripts/test_nightly.sh",
+                "nightly script never invokes benchmarks.run"))
+        for token in _ONLY_RE.findall(nightly_text):
+            if token not in by_token:
+                findings.append(AuditFinding(
+                    "AUD006", "scripts/test_nightly.sh",
+                    f"--only {token!r} does not resolve to any "
+                    f"registered benchmark (known: "
+                    f"{sorted(b.name for b in registry)})"))
+    return findings
+
+
+def run_audit() -> list[AuditFinding]:
+    """Full semantic audit; empty list means every contract holds."""
+    return (audit_fingerprint_coverage()
+            + audit_cache_tokens()
+            + audit_benchmark_registry())

@@ -1,0 +1,71 @@
+"""reprolint command line: ``python scripts/lint.py [paths...]``.
+
+Kept deliberately jax-free (the AST rules never import the linted
+code), so a whole-``src/`` run costs well under a second including
+interpreter startup.  ``--audit`` additionally runs the registry-level
+semantic auditor (:mod:`repro.analysis.audit`), which *does* import
+the live mapping/benchmark registries — and therefore jax.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.core import (
+    all_rules,
+    format_human,
+    format_json,
+    run_paths,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="repo-specific static analysis for the JAX/Pallas "
+                    "contracts (RPL001-RPL005)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule codes to run "
+                         "(default: all)")
+    ap.add_argument("--rules", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--audit", action="store_true",
+                    help="also run the semantic registry auditor "
+                         "(imports the live code, needs jax)")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for code, rule in all_rules().items():
+            print(f"{code} {rule.name}: {rule.rationale}")
+        return 0
+
+    select = ({c.strip() for c in args.select.split(",") if c.strip()}
+              or None)
+    findings, files = run_paths(args.paths, select=select)
+    failed = any(not f.suppressed for f in findings)
+
+    audit_lines: list[str] = []
+    if args.audit:
+        from repro.analysis.audit import run_audit
+
+        audit_findings = run_audit()
+        audit_lines = [f.format() for f in audit_findings]
+        failed = failed or bool(audit_findings)
+
+    if args.json:
+        print(format_json(findings, files))
+        for line in audit_lines:
+            print(line, file=sys.stderr)
+    else:
+        print(format_human(findings, files))
+        for line in audit_lines:
+            print(line)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

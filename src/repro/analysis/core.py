@@ -1,0 +1,275 @@
+"""reprolint core: AST file model, rule registry, suppressions, runners.
+
+The linter is a plain ``ast`` walker — it never imports the code it
+checks, so ``scripts/lint.py`` stays jax-free and a whole-``src/`` run
+is a sub-second operation (the tier-1 gate in
+``tests/test_lint_clean.py`` budgets 5 s including interpreter
+startup).  Semantic checks that *do* need the live registries
+(fingerprint/cache-key coverage, benchmark registration) live in
+:mod:`repro.analysis.audit` instead.
+
+Vocabulary:
+
+* a **rule** is a subclass of :class:`Rule` registered under a stable
+  ``RPLxxx`` code (see :mod:`repro.analysis.rules`);
+* a **finding** is one rule violation at one source location;
+* an inline ``# reprolint: disable=RPL001`` (comma-separated codes,
+  optionally followed by ``-- justification``) on the *finding line*
+  marks it suppressed: it still appears in the output (and JSON) but
+  does not fail the run.
+
+File *roles* scope the rules: the key-discipline and interpret rules
+deliberately don't apply to tests, and the compat module is the one
+place allowed to touch the version-sensitive JAX APIs.  The role is
+derived from the path (:func:`classify_path`) and can be forced by
+callers (the fixture tests lint ``tests/fixtures/lint/*.py`` *as if*
+they were library code).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Iterable, Iterator
+
+# Role of a linted file; rules consult these to decide applicability.
+ROLE_LIBRARY = "library"      # shipping code under src/ (the contracts)
+ROLE_TOOLS = "tools"          # benchmarks / examples / scripts
+ROLE_TESTS = "tests"          # anything under tests/ or test_*.py
+ROLE_COMPAT = "compat"        # repro/compat.py: owns the wrapped APIs
+ROLES = (ROLE_LIBRARY, ROLE_TOOLS, ROLE_TESTS, ROLE_COMPAT)
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = "  [suppressed]" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code} {self.message}{tag}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule needs to check one parsed file."""
+
+    path: str
+    source: str
+    tree: ast.Module
+    role: str
+    # name -> fully dotted path for import aliases, e.g. jnp -> jax.numpy
+    aliases: dict[str, str]
+
+    @property
+    def is_tests(self) -> bool:
+        return self.role == ROLE_TESTS
+
+    @property
+    def is_compat(self) -> bool:
+        return self.role == ROLE_COMPAT
+
+    @property
+    def is_library(self) -> bool:
+        return self.role == ROLE_LIBRARY
+
+    def expand(self, node: ast.AST) -> str | None:
+        """Dotted path of a Name/Attribute with import aliases resolved.
+
+        ``jnp.int32`` -> ``jax.numpy.int32`` when the file did
+        ``import jax.numpy as jnp``; returns None for non-name
+        expressions (calls, subscripts, ...).
+        """
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        head = self.aliases.get(parts[0], parts[0])
+        return ".".join([head] + parts[1:])
+
+
+class Rule:
+    """One registered lint rule.  Subclasses set the class attributes
+    and implement :meth:`check` yielding ``(line, col, message)``."""
+
+    code: str = ""
+    name: str = ""
+    rationale: str = ""
+
+    def check(self, ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+        raise NotImplementedError
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def register_rule(cls: type[Rule]) -> type[Rule]:
+    """Class decorator: register a rule under its ``code``."""
+    if not re.fullmatch(r"RPL\d{3}", cls.code):
+        raise ValueError(f"bad rule code {cls.code!r} on {cls.__name__}")
+    if cls.code in _RULES:
+        raise ValueError(f"rule {cls.code} already registered "
+                         f"({type(_RULES[cls.code]).__name__})")
+    _RULES[cls.code] = cls()
+    return cls
+
+
+def all_rules() -> dict[str, Rule]:
+    """Registered rules by code (sorted) — importing :mod:`repro
+    .analysis.rules` populates the registry."""
+    from repro.analysis import rules  # noqa: F401  (registration side effect)
+
+    return dict(sorted(_RULES.items()))
+
+
+def classify_path(path: str) -> str:
+    """Derive a file's role from its path (overridable by callers)."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    base = parts[-1]
+    if base == "compat.py" and "repro" in parts:
+        return ROLE_COMPAT
+    if "tests" in parts or base.startswith("test_"):
+        return ROLE_TESTS
+    if {"benchmarks", "examples", "scripts"} & set(parts[:-1]):
+        return ROLE_TOOLS
+    return ROLE_LIBRARY
+
+
+def build_alias_map(tree: ast.Module) -> dict[str, str]:
+    """Import-alias table for the whole file.
+
+    Late rebindings shadow earlier ones file-wide — fine for lint
+    granularity (nobody re-aliases ``jnp`` mid-module).
+    """
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def suppressions(source: str) -> dict[int, set[str]]:
+    """Per-line suppressed codes from ``# reprolint: disable=...``."""
+    out: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",")}
+                out.setdefault(tok.start[0], set()).update(codes)
+    except tokenize.TokenError:  # partial file: best-effort comments
+        pass
+    return out
+
+
+def run_source(path: str, source: str, *, role: str | None = None,
+               select: Iterable[str] | None = None) -> list[Finding]:
+    """Lint one source blob; returns findings with suppression applied.
+
+    A syntactically invalid file yields a single RPL000 parse finding
+    (never an exception): the linter must not crash CI on a bad tree.
+    """
+    role = role or classify_path(path)
+    if role not in ROLES:
+        raise ValueError(f"role={role!r} not in {ROLES}")
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("RPL000", path, e.lineno or 1, e.offset or 0,
+                        f"file does not parse: {e.msg}")]
+    ctx = FileContext(path=path, source=source, tree=tree, role=role,
+                      aliases=build_alias_map(tree))
+    lines = suppressions(source)
+    findings: list[Finding] = []
+    seen: set[tuple[str, int, int]] = set()
+    for code, rule in all_rules().items():
+        if select is not None and code not in select:
+            continue
+        for line, col, message in rule.check(ctx):
+            if (code, line, col) in seen:
+                continue
+            seen.add((code, line, col))
+            findings.append(Finding(
+                code, path, line, col, message,
+                suppressed=code in lines.get(line, ())))
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return findings
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[str]:
+    """Expand files/directories into a sorted .py file list."""
+    out: set[str] = set()
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+                out.update(os.path.join(root, f) for f in files
+                           if f.endswith(".py"))
+        elif p.endswith(".py"):
+            out.add(p)
+    return iter(sorted(out))
+
+
+def run_paths(paths: Iterable[str], *, role: str | None = None,
+              select: Iterable[str] | None = None
+              ) -> tuple[list[Finding], int]:
+    """Lint files/dirs; returns (findings, files_checked)."""
+    findings: list[Finding] = []
+    n = 0
+    for f in iter_python_files(paths):
+        n += 1
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        findings.extend(run_source(f, src, role=role, select=select))
+    return findings, n
+
+
+def format_human(findings: list[Finding], files: int) -> str:
+    lines = [f.format() for f in findings]
+    unsup = sum(1 for f in findings if not f.suppressed)
+    lines.append(f"reprolint: {len(findings)} finding(s) "
+                 f"({unsup} unsuppressed) in {files} file(s)")
+    return "\n".join(lines)
+
+
+def format_json(findings: list[Finding], files: int) -> str:
+    return json.dumps({
+        "version": 1,
+        "files": files,
+        "unsuppressed": sum(1 for f in findings if not f.suppressed),
+        "findings": [f.to_json() for f in findings],
+    }, indent=1)

@@ -116,7 +116,7 @@ def calibrate_eta(spec: CrossbarSpec, key=None, n_tiles: int = 16,
     from repro.core import manhattan
     from repro.crossbar.batched import measured_nf_batched
 
-    key = key if key is not None else _jax.random.PRNGKey(0)
+    key = key if key is not None else _jax.random.PRNGKey(0)  # reprolint: disable=RPL003 -- documented deterministic calibration default; callers needing fresh tiles pass their own key
     masks = (_jax.random.uniform(
         key, (n_tiles, spec.rows, spec.cols)) < (1 - sparsity)
     ).astype(jnp.float32)

@@ -271,7 +271,7 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
         from repro.nonideal.inject import sample_deployment_cells
 
         if nonideal_key is None:
-            nonideal_key = jax.random.PRNGKey(0)
+            nonideal_key = jax.random.PRNGKey(0)  # reprolint: disable=RPL003 -- documented "default key 0" fallback; deployments meant to differ pass nonideal_key
         elif isinstance(nonideal_key, int):
             nonideal_key = jax.random.PRNGKey(nonideal_key)
         grids = {name: spec.grid(*w.shape) for name, w in mats.items()}

@@ -12,7 +12,7 @@ from repro.kernels.runtime import INTERPRET, round_up
 
 @partial(jax.jit, static_argnames=("n_bits", "reversed_df", "interpret"))
 def bitslice_pack(codes: jax.Array, n_bits: int, reversed_df: bool = False,
-                  interpret: bool = INTERPRET) -> jax.Array:
+                  interpret: bool = INTERPRET) -> jax.Array:  # reprolint: disable=RPL004 -- validation wrapper: INTERPRET is False on every backend with a native lowering; hot path uses the fused XLA bit-slice
     """Expand (I, N) integer codes into (I, N, n_bits) uint8 bit planes."""
     I, N = codes.shape
     bi = min(256, round_up(I, 8))

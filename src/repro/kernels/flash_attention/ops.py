@@ -12,11 +12,13 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.runtime import INTERPRET, round_up
 
-EMPTY_POS = jnp.int32(2 ** 30)
+# np, not jnp: module-level jnp would compute at import time (RPL005).
+EMPTY_POS = np.int32(2 ** 30)
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k",
@@ -25,7 +27,7 @@ def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         q_positions: jax.Array, k_positions: jax.Array,
                         window: int = 0, block_q: int = 128,
                         block_k: int = 128,
-                        interpret: bool = INTERPRET) -> jax.Array:
+                        interpret: bool = INTERPRET) -> jax.Array:  # reprolint: disable=RPL004 -- validation wrapper: INTERPRET is False on every backend with a native lowering; production serving dispatches via cim_mvm
     """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, H, Dh)."""
     B, Sq, H, Dh = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]

@@ -12,7 +12,7 @@ from repro.kernels.runtime import INTERPRET, round_up
 
 @partial(jax.jit, static_argnames=("nf_unit", "block_t", "interpret"))
 def manhattan_score(masks: jax.Array, nf_unit: float = 1.0,
-                    block_t: int = 8, interpret: bool = INTERPRET):
+                    block_t: int = 8, interpret: bool = INTERPRET):  # reprolint: disable=RPL004 -- validation wrapper: INTERPRET is False on every backend with a native lowering; planning uses the fused XLA scorer
     """Row scores, row counts and per-tile NF for tile masks.
 
     masks: (..., R, C) activity masks (any integer/float 0-1 dtype).

@@ -13,7 +13,7 @@ from repro.kernels.slstm_scan.kernel import slstm_scan_pallas
 @partial(jax.jit, static_argnames=("block_b", "chunk", "interpret"))
 def slstm_scan(gx: jax.Array, r_gates: jax.Array, h0: jax.Array,
                c0: jax.Array, block_b: int = 8, chunk: int = 128,
-               interpret: bool = INTERPRET):
+               interpret: bool = INTERPRET):  # reprolint: disable=RPL004 -- validation wrapper: INTERPRET is False on every backend with a native lowering; recurrent serving stays on the XLA scan
     """gx: (B, T, H, 4Dh); returns (hs (B,T,H,Dh) f32, hT, cT)."""
     B, T, H, Dh4 = gx.shape
     bb = min(block_b, B)

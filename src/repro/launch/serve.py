@@ -28,7 +28,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    params = init_params(cfg, jax.random.PRNGKey(0))
+    params = init_params(cfg, jax.random.PRNGKey(0))  # reprolint: disable=RPL003 -- serve smoke CLI: deterministic params make runs comparable
     eng = ServeEngine(cfg, params,
                       max_seq=args.prompt_len + args.gen + 1,
                       temperature=args.temperature)
@@ -37,7 +37,7 @@ def main():
     if cfg.frontend:
         from repro.models.frontend import synthetic_embeddings
         prompts = synthetic_embeddings(cfg, args.batch, args.prompt_len,
-                                       jax.random.PRNGKey(1))
+                                       jax.random.PRNGKey(1))  # reprolint: disable=RPL003 -- serve smoke CLI: deterministic synthetic embeddings
     t0 = time.perf_counter()
     out = eng.generate(prompts, args.gen)
     dt = time.perf_counter() - t0

@@ -98,6 +98,18 @@ def register(kind: str, name: str, override: bool = False):
     return deco
 
 
+def unregister(kind: str, name: str) -> None:
+    """Remove a registered strategy (test/tooling hook).
+
+    The semantic auditor's mutation tests register deliberately broken
+    strategies and must be able to take them back out; library code has
+    no business calling this.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind={kind!r} not in {KINDS}")
+    _REGISTRY[kind].pop(name, None)
+
+
 def available(kind: str) -> tuple[str, ...]:
     """Registered strategy names of one kind, sorted."""
     if kind not in KINDS:

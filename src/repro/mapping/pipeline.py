@@ -69,11 +69,21 @@ class MappingPipeline:
         and :class:`FaultAwareRows` reduces exactly to :class:`MdmRows`
         when no maps are supplied.  The partition pass never enters the
         token — produced matrices are content-addressed individually.
+
+        The collapse tests *exact equality* with the canonical
+        default-constructed strategies, not ``isinstance``: a subclass
+        (or a future parametrised variant) that carries behavioral
+        fields must fall through to the ``pipe:...`` token that
+        includes its fingerprint, or the :class:`PlanCache` would
+        silently serve the unparametrised plan for it.  The semantic
+        auditor (``repro.analysis.audit``) perturbs every registered
+        strategy field and asserts the key moves; the mutation test in
+        tests/test_analysis_audit.py pins this exact bug class.
         """
-        if isinstance(self.cols, IdentityCols):
-            if isinstance(self.rows, IdentityRows):
+        if self.cols == IdentityCols():
+            if self.rows == IdentityRows():
                 return "reverse" if self.reversed_dataflow else "baseline"
-            if isinstance(self.rows, (MdmRows, FaultAwareRows)):
+            if self.rows == MdmRows() or self.rows == FaultAwareRows():
                 return "mdm" if self.reversed_dataflow else "sort"
         return (f"pipe:df={self.dataflow};row={self.rows.fingerprint()};"
                 f"col={self.cols.fingerprint()}")

@@ -15,9 +15,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
-EMPTY_POS = jnp.int32(2 ** 30)
+# np, not jnp: a module-level jnp constant would initialise the backend
+# and transfer at import time (reprolint RPL005); jnp ops accept the
+# numpy scalar and it stays int32 under weak typing.
+EMPTY_POS = np.int32(2 ** 30)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:

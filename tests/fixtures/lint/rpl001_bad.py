@@ -1,0 +1,21 @@
+"""Fixture: RPL001 — version-sensitive JAX APIs touched outside compat."""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.experimental import enable_x64
+
+
+def make_mesh(axes):
+    return jax.sharding.AbstractMesh(axes)
+
+
+def run(f, mesh):
+    with enable_x64():
+        return shard_map(f, mesh=mesh, in_specs=None, out_specs=None)
+
+
+def probe():
+    try:
+        jax.lax.linalg.tridiagonal_solve(None, None, None, None)
+        return True
+    except Exception:
+        return False

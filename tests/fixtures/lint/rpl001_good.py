@@ -1,0 +1,16 @@
+"""Fixture: RPL001-clean — wrapped APIs come from repro.compat."""
+from repro.compat import (
+    enable_x64,
+    has_batched_tridiagonal_solve,
+    make_abstract_mesh,
+    shard_map,
+)
+
+
+def run(f, mesh):
+    with enable_x64():
+        return shard_map(f, mesh=mesh, in_specs=None, out_specs=None)
+
+
+def pick_solver():
+    return "batched" if has_batched_tridiagonal_solve() else "scan"

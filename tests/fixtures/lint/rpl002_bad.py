@@ -1,0 +1,17 @@
+"""Fixture: RPL002 — tracer escapes inside traced functions."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    scale = float(x.mean())
+    host = np.asarray(x)
+    return x * scale + host.sum()
+
+
+@jax.jit
+def g(x):
+    if bool(x.any()):
+        return x.sum().item()
+    return x

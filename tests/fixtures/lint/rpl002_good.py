@@ -1,0 +1,12 @@
+"""Fixture: RPL002-clean — host conversions stay outside tracing."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    return x * 2.0
+
+
+def host_summary(x):
+    return float(np.asarray(x).mean())

@@ -1,0 +1,19 @@
+"""Fixture: RPL003 — PRNG key reuse and literal library seeds."""
+import jax
+
+
+def sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a + b
+
+
+def loop(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.normal(key, (4,)))
+    return out
+
+
+def make():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,47 @@
+"""Fixture: RPL003-clean — split/fold_in discipline, scoped lambdas."""
+import jax
+
+
+def sample(key):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (4,))
+    b = jax.random.uniform(kb, (4,))
+    return a + b
+
+
+def branch(key, fast):
+    if fast:
+        return jax.random.normal(key, (4,))
+    return jax.random.uniform(key, (4,))
+
+
+def loop(key, n):
+    out = []
+    for i in range(n):
+        out.append(jax.random.normal(jax.random.fold_in(key, i), (4,)))
+    return out
+
+
+def counter_loop(key, n):
+    out, k = [], 0
+    for _ in range(n):
+        k += 1
+        out.append(jax.random.normal(jax.random.fold_in(key, k), (4,)))
+    return out
+
+
+SAMPLERS = {
+    "normal": lambda k: jax.random.normal(k, (4,)),
+    "uniform": lambda k: jax.random.uniform(k, (4,)),
+}
+
+
+def rebind(key):
+    a = jax.random.normal(key, (4,))
+    key = jax.random.fold_in(key, 1)
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def make(seed: int):
+    return jax.random.PRNGKey(seed)

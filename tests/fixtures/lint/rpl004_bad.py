@@ -1,0 +1,18 @@
+"""Fixture: RPL004 — interpret dispatch outside tests."""
+INTERPRET = True
+
+
+def op(pallas_call, kernel, x, interpret=INTERPRET):
+    return pallas_call(kernel, interpret=interpret)(x)
+
+
+def debug(pallas_call, kernel, x):
+    return pallas_call(kernel, interpret=True)(x)
+
+
+def serve(mvm, x):
+    return mvm(x, impl="interpret")
+
+
+def wrapper(x, *, interpret=None):
+    return x if interpret else -x

@@ -1,0 +1,9 @@
+"""Fixture: RPL004-clean — interpret is an explicit opt-in, default False."""
+
+
+def op(pallas_call, kernel, x, interpret: bool = False):
+    return pallas_call(kernel, interpret=interpret)(x)
+
+
+def serve(mvm, x):
+    return mvm(x, impl="xla")

@@ -1,0 +1,12 @@
+"""Fixture: RPL005 — jnp computation at import time."""
+import jax.numpy as jnp
+
+SCALE = jnp.float32(2.0)
+
+
+class Config:
+    TABLE = jnp.arange(8)
+
+
+def f(x, default=jnp.zeros(4)):
+    return x + default

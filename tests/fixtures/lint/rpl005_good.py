@@ -1,0 +1,10 @@
+"""Fixture: RPL005-clean — numpy constants, jnp deferred to call time."""
+import jax.numpy as jnp
+import numpy as np
+
+SCALE = np.float32(2.0)
+MAKE_TABLE = lambda: jnp.arange(8)  # noqa: E731 — deferred, not import-time
+
+
+def f(x):
+    return x + jnp.zeros(4)

@@ -1,0 +1,15 @@
+"""Fixture: real violations carrying inline justified suppressions."""
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(0)  # reprolint: disable=RPL005 -- fixture: intentional
+
+
+def make():
+    return jax.random.PRNGKey(0)  # reprolint: disable=RPL003 -- fixture: pinned seed
+
+
+def two(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # reprolint: disable=RPL001,RPL003 -- fixture: multi-code
+    return a + b

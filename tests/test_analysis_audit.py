@@ -1,0 +1,156 @@
+"""Tier-1 gate + mutation tests for the semantic registry auditor.
+
+The audit must (a) pass on the real registries — every registered
+strategy's params reach the fingerprint, pipeline and plan-cache
+layers, the cache tokens are collision-free, the legacy mode tokens
+are stable, and every benchmark module is registered and nightly-
+reachable — and (b) demonstrably *fail* when handed a broken registry:
+a leaky-fingerprint strategy, an unregistered benchmark module, a
+typo'd nightly ``--only``.  (b) is what makes (a) trustworthy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.analysis import audit
+from repro.core.tiling import CrossbarSpec
+from repro.deploy.cache import plan_key
+from repro.mapping.base import register, unregister
+from repro.mapping.pipeline import MappingPipeline, resolve_pipeline
+from repro.mapping.rows import MdmRows
+
+
+def test_live_registries_audit_clean():
+    assert [f.format() for f in audit.run_audit()] == []
+
+
+# ----------------------- fingerprint mutation test ------------------------
+
+
+@pytest.fixture
+def leaky_strategy():
+    """Register a parametrised row pass whose fingerprint drops params.
+
+    This is the exact bug class the audit exists for: ``alpha`` changes
+    planning behaviour but not the cache identity, so two different
+    deployments would share a PlanCache entry.
+    """
+
+    @register("rows", "_leaky_test")
+    @dataclasses.dataclass(frozen=True)
+    class LeakyRows(MdmRows):
+        alpha: float = 1.0
+
+        def fingerprint(self):  # drops alpha — deliberately broken
+            return self.name
+
+    try:
+        yield LeakyRows
+    finally:
+        unregister("rows", "_leaky_test")
+
+
+def test_audit_catches_leaky_fingerprint(leaky_strategy):
+    findings = audit.audit_fingerprint_coverage()
+    mine = [f for f in findings if f.subject == "rows/_leaky_test"]
+    assert {f.code for f in mine} == {"AUD001", "AUD002", "AUD003"}
+    assert any("alpha" in f.message for f in mine)
+    # the real registries must still be clean around the mutant
+    assert [f for f in findings if f.subject != "rows/_leaky_test"] == []
+
+
+def test_audit_passes_honest_parametrised_strategy():
+    """A field-carrying pass with the default fingerprint() is covered."""
+
+    @register("rows", "_honest_test")
+    @dataclasses.dataclass(frozen=True)
+    class HonestRows(MdmRows):
+        alpha: float = 1.0
+
+    try:
+        assert [f for f in audit.audit_fingerprint_coverage()
+                if f.subject == "rows/_honest_test"] == []
+        # and its two parametrisations get distinct cache addresses
+        spec = CrossbarSpec()
+        keys = {plan_key("0" * 64, spec,
+                         MappingPipeline(rows=HonestRows(alpha=a)
+                                         ).cache_token())
+                for a in (1.0, 2.0)}
+        assert len(keys) == 2
+    finally:
+        unregister("rows", "_honest_test")
+
+
+def test_subclass_with_fields_never_gets_legacy_token(leaky_strategy):
+    """cache_token collapses by exact equality, not isinstance: a
+    parametrised MdmRows subclass must NOT reuse the bare "mdm" token
+    (pinned here because the auditor's AUD003 depends on it)."""
+    token = MappingPipeline(rows=leaky_strategy()).cache_token()
+    assert token != "mdm"
+    assert token.startswith("pipe:")
+    assert MappingPipeline(rows=MdmRows()).cache_token() == "mdm"
+
+
+def test_legacy_tokens_pinned():
+    for mode in ("baseline", "reverse", "sort", "mdm"):
+        assert resolve_pipeline(mode).cache_token() == mode
+    assert resolve_pipeline("mdm", have_faults=True).cache_token() == "mdm"
+
+
+# ------------------------- benchmark-registry audit -----------------------
+
+
+def test_benchmark_audit_clean_on_real_repo():
+    assert [f.format() for f in audit.audit_benchmark_registry()] == []
+
+
+def test_benchmark_audit_flags_unregistered_module():
+    import benchmarks.run as run
+
+    files = sorted(run.registered_modules()) + ["shiny_new_bench"]
+    findings = audit.audit_benchmark_registry(module_files=files)
+    assert [f.code for f in findings] == ["AUD005"]
+    assert "shiny_new_bench" in findings[0].message \
+        or "shiny_new_bench" in findings[0].subject
+
+
+def test_benchmark_audit_flags_missing_module_file():
+    import benchmarks.run as run
+
+    files = sorted(run.registered_modules() - {"theorem1"})
+    findings = audit.audit_benchmark_registry(module_files=files)
+    assert {f.code for f in findings} == {"AUD005"}
+    assert any("theorem1" in f.message for f in findings)
+
+
+def test_benchmark_audit_flags_bad_nightly_token():
+    findings = audit.audit_benchmark_registry(
+        nightly_text="python -m benchmarks.run --only fault_tolerence\n")
+    assert [f.code for f in findings] == ["AUD006"]
+    assert "fault_tolerence" in findings[0].message
+
+
+def test_benchmark_audit_flags_nightly_without_benchmarks():
+    findings = audit.audit_benchmark_registry(
+        nightly_text="python -m pytest -q\n")
+    assert [f.code for f in findings] == ["AUD006"]
+    assert "never invokes" in findings[0].message
+
+
+# -------------------------- --only validation -----------------------------
+
+
+def test_resolve_only_by_name_module_and_error():
+    import benchmarks.run as run
+
+    assert [b.name for b in run.resolve_only("fault_tolerance")] \
+        == ["fault_tolerance"]
+    # module name fans out to every bench it backs
+    assert [b.name for b in run.resolve_only("solver_throughput")] \
+        == ["solver_throughput", "solver_throughput_32x32"]
+    assert [b.name for b in run.resolve_only("hypothesis_fit")] \
+        == ["manhattan_hypothesis_fit"]
+    with pytest.raises(KeyError, match="unknown benchmark"):
+        run.resolve_only("no_such_bench")

@@ -1,0 +1,135 @@
+"""Fixture tests for every reprolint rule (RPL001-RPL005).
+
+Each rule has a paired bad/good fixture under tests/fixtures/lint/;
+the bad file pins the exact (code, line) set the rule must report, the
+good file pins zero findings under *all* rules — the good fixtures
+deliberately exercise the rule's known near-miss patterns (terminating
+branches, per-iteration fold_in, lambda parameter scopes, deferred jnp)
+so false-positive regressions fail here, not in CI noise.
+
+Fixtures are linted with an explicit ``role`` override: on disk they
+live under tests/, where the key-discipline and interpret rules would
+not apply.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.analysis import run_source
+from repro.analysis.core import classify_path, suppressions
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures", "lint")
+
+
+def lint_fixture(name: str, role: str = "library", select=None):
+    path = os.path.join(FIXTURES, name)
+    with open(path) as f:
+        src = f.read()
+    return run_source(path, src, role=role, select=select)
+
+
+def codes_lines(findings, suppressed=False):
+    return {(f.code, f.line) for f in findings
+            if f.suppressed == suppressed}
+
+
+BAD_EXPECTED = {
+    # import bindings (3, 4), attribute uses (8, 12, 13), probe (18)
+    "rpl001_bad.py": {("RPL001", 3), ("RPL001", 4), ("RPL001", 8),
+                      ("RPL001", 12), ("RPL001", 13), ("RPL001", 18)},
+    # float() (8), np.asarray (9), bool() (15), .item() (16)
+    "rpl002_bad.py": {("RPL002", 8), ("RPL002", 9), ("RPL002", 15),
+                      ("RPL002", 16)},
+    # straight-line reuse (7), loop reuse (14), literal seed (19)
+    "rpl003_bad.py": {("RPL003", 7), ("RPL003", 14), ("RPL003", 19)},
+    # INTERPRET default (5), interpret=True (10), impl="interpret"
+    # (14), kw-only None default (17)
+    "rpl004_bad.py": {("RPL004", 5), ("RPL004", 10), ("RPL004", 14),
+                      ("RPL004", 17)},
+    # module constant (4), class body (8), function default (11)
+    "rpl005_bad.py": {("RPL005", 4), ("RPL005", 8), ("RPL005", 11)},
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECTED))
+def test_bad_fixture_detected(name):
+    findings = lint_fixture(name)
+    assert codes_lines(findings) == BAD_EXPECTED[name]
+    assert not codes_lines(findings, suppressed=True)
+
+
+@pytest.mark.parametrize("name", ["rpl001_good.py", "rpl002_good.py",
+                                  "rpl003_good.py", "rpl004_good.py",
+                                  "rpl005_good.py"])
+def test_good_fixture_clean(name):
+    assert lint_fixture(name) == []
+
+
+def test_select_isolates_rules():
+    findings = lint_fixture("rpl001_bad.py", select={"RPL002"})
+    assert findings == []
+
+
+# ------------------------------ suppression -------------------------------
+
+
+def test_suppressions_mark_but_keep_findings():
+    findings = lint_fixture("suppressed.py")
+    assert codes_lines(findings) == set()  # all suppressed
+    assert codes_lines(findings, suppressed=True) == {
+        ("RPL005", 5), ("RPL003", 9), ("RPL003", 14)}
+
+
+def test_suppression_comment_parsing():
+    src = ("x = 1  # reprolint: disable=RPL001\n"
+           "y = 2  # reprolint: disable=RPL003, RPL005 -- reason\n"
+           "z = 3  # unrelated comment\n")
+    assert suppressions(src) == {1: {"RPL001"},
+                                 2: {"RPL003", "RPL005"}}
+
+
+def test_suppression_only_covers_its_line():
+    src = ("import jax.numpy as jnp\n"
+           "A = jnp.zeros(3)  # reprolint: disable=RPL005\n"
+           "B = jnp.zeros(3)\n")
+    findings = run_source("x.py", src, role="library")
+    assert codes_lines(findings) == {("RPL005", 3)}
+    assert codes_lines(findings, suppressed=True) == {("RPL005", 2)}
+
+
+# ------------------------------- roles ------------------------------------
+
+
+def test_tests_role_skips_key_and_interpret_rules():
+    for name in ("rpl003_bad.py", "rpl004_bad.py"):
+        assert lint_fixture(name, role="tests") == []
+
+
+def test_compat_role_may_touch_wrapped_apis():
+    assert codes_lines(lint_fixture("rpl001_bad.py", role="compat"),
+                       ) == set()
+
+
+def test_tools_role_still_checks_key_reuse():
+    findings = lint_fixture("rpl003_bad.py", role="tools")
+    # reuse rules apply to tools; the literal-seed rule is library-only
+    assert codes_lines(findings) == {("RPL003", 7), ("RPL003", 14)}
+
+
+def test_classify_path():
+    assert classify_path("src/repro/compat.py") == "compat"
+    assert classify_path("src/repro/core/mdm.py") == "library"
+    assert classify_path("tests/test_mapping.py") == "tests"
+    assert classify_path("benchmarks/run.py") == "tools"
+    assert classify_path("scripts/lint.py") == "tools"
+
+
+# ------------------------------ robustness --------------------------------
+
+
+def test_syntax_error_yields_rpl000_not_exception():
+    findings = run_source("broken.py", "def f(:\n", role="library")
+    assert [f.code for f in findings] == ["RPL000"]
