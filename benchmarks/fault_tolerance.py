@@ -43,15 +43,20 @@ MAPPINGS: dict[str, tuple[MappingPipeline, bool]] = {
 }
 
 
-def _col_significance(spec: CrossbarSpec,
-                      pipe: MappingPipeline) -> np.ndarray:
-    """2^-(k+1) weight of each physical column's bit plane (identity
-    column strategies; column-permuting pipelines would need the
-    per-tile plan layout)."""
+def _col_significance(spec: CrossbarSpec, pipe: MappingPipeline,
+                      plan, n_tiles: int) -> np.ndarray:
+    """Per-tile 2^-(k+1) weight of each *physical* column's bit plane.
+
+    Column-permuting pipelines host a different bit plane per physical
+    bitline per tile (``plan.col_perm``), so the weighted-error metric
+    needs the (T, cols) grid; identity pipelines broadcast the fixed
+    layout."""
     from repro.core.mdm import physical_column_significance
 
+    col_perm = (None if plan.col_perm is None
+                else jnp.reshape(plan.col_perm, (n_tiles, spec.cols)))
     return np.asarray(physical_column_significance(
-        spec, pipe.reversed_dataflow))[0]
+        spec, pipe.reversed_dataflow, col_perm, n_tiles))
 
 
 def run(n_rows: int = 256, n_samples: int = 6,
@@ -87,7 +92,7 @@ def run(n_rows: int = 256, n_samples: int = 6,
                     model, n_samples, mc_key,
                     stuck=jnp.asarray(stuck).reshape(T, spec.rows,
                                                      spec.cols),
-                    col_weights=_col_significance(spec, pipe),
+                    col_weights=_col_significance(spec, pipe, plan, T),
                     precision="mixed")
                 entry[name] = {
                     "nf": summarize(res.nf_total),
@@ -130,5 +135,94 @@ def run(n_rows: int = 256, n_samples: int = 6,
     return out
 
 
+def run_line_open(n_rows: int = 256, n_samples: int = 2,
+                  rates=((0.02, 0.01), (0.05, 0.02), (0.08, 0.05)),
+                  verbose: bool = True) -> dict:
+    """Line-open-rate sweep: spare-line remapping vs the row-only sorts.
+
+    Sweeps (wordline, bitline) open-rate pairs — bitline opens are the
+    structurally hard case, since row-sorting pipelines cannot move
+    columns — over baseline / plain MDM / fault-aware MDM / the
+    ``spare_line`` pipeline (fault-aware rows *and* columns with the
+    ``open_penalty`` surcharge).  One physical open map per rate pair is
+    shared by every mapping (defects belong to the hardware), and two
+    headline metrics are recorded per mapping:
+
+    * the circuit-measured NF distribution (Monte-Carlo engine);
+    * ``bits_lost``: programmed active bits landing on severed lines —
+      the current the array physically cannot deliver (what drives the
+      deployment engine's ``degraded`` demotions).
+
+    Headline check: spare-line must cut both NF and bits_lost vs plain
+    fault-aware MDM at every swept rate (the ISSUE acceptance bar).
+    """
+    from repro.nonideal.models import OPEN, sample_line_open
+
+    spec = CrossbarSpec(rows=64, cols=64, n_bits=8)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.laplace(key, (n_rows, 64)) * 0.01
+    sliced = bitslice(w, spec.n_bits)
+    ti, tn = spec.grid(*w.shape)
+    T = ti * tn
+
+    mappings: dict[str, tuple[MappingPipeline, bool]] = {
+        "baseline": (_P["baseline"], False),
+        "mdm": (_P["mdm"], False),
+        "mdm_fault_aware": (_P["fault_aware"], True),
+        "spare_line": (_P["spare_line"], True),
+    }
+    out: dict = {"tiles": T, "n_samples": n_samples}
+    spare_wins = {}
+    for ri, (p_wl, p_bl) in enumerate(rates):
+        tag = f"wl={p_wl:g}|bl={p_bl:g}"
+        stuck = sample_line_open(jax.random.fold_in(key, 100 + ri),
+                                 (ti, tn, spec.rows, spec.cols),
+                                 p_wl, p_bl)
+        model = NonidealModel(p_open_wordline=p_wl, p_open_bitline=p_bl,
+                              sigma_program=0.05)
+        mc_key = jax.random.fold_in(key, 1000 + ri)
+        entry: dict = {}
+        for name, (pipe, aware) in mappings.items():
+            plan = plan_from_bits(sliced.bits, sliced.scale, spec,
+                                  pipe, stuck if aware else None)
+            placed = placed_masks(sliced.bits, plan, spec, masks=None)
+            flat = placed.reshape(T, spec.rows, spec.cols)
+            stuck_flat = jnp.asarray(stuck).reshape(T, spec.rows,
+                                                    spec.cols)
+            res = mc_nf(flat, spec, model, n_samples, mc_key,
+                        stuck=stuck_flat,
+                        col_weights=_col_significance(spec, pipe, plan,
+                                                      T),
+                        precision="mixed")
+            lost = int(jnp.sum((flat > 0)
+                               & (stuck_flat == OPEN)))
+            entry[name] = {
+                "nf": summarize(res.nf_total),
+                "weighted_err": summarize(res.weighted_err),
+                "bits_lost": lost,
+                "unconverged": int(res.unconverged),
+            }
+            if verbose:
+                e = entry[name]
+                print(f"  {tag:20s} {name:16s} "
+                      f"nf={e['nf']['mean']:.4f} "
+                      f"werr={e['weighted_err']['mean']:.5f} "
+                      f"bits_lost={lost}")
+        out[tag] = entry
+        spare_wins[tag] = bool(
+            entry["spare_line"]["nf"]["mean"]
+            < entry["mdm_fault_aware"]["nf"]["mean"]
+            and entry["spare_line"]["bits_lost"]
+            <= entry["mdm_fault_aware"]["bits_lost"])
+    out["spare_line_beats_fault_aware"] = spare_wins
+    out["spare_line_beats_fault_aware_all_rates"] = all(
+        spare_wins.values())
+    if verbose:
+        print("  spare-line beats fault-aware (nf & bits lost):",
+              spare_wins)
+    return out
+
+
 if __name__ == "__main__":
     run()
+    run_line_open()

@@ -104,6 +104,13 @@ BENCHES: tuple[Bench, ...] = (
               n_rows=128 if q else 256, n_samples=3 if q else 6,
               rates=(0.01, 0.05) if q else (0.002, 0.01, 0.05),
               sigmas=(0.0,) if q else (0.0, 0.1))),
+    # §Nonideal: line-open (wordline + bitline) rate sweep — spare-line
+    # row+column remapping vs the row-only sorts (structural faults)
+    Bench("fault_line_open", "fault_tolerance",
+          lambda q: fault_tolerance.run_line_open(
+              n_rows=128 if q else 256, n_samples=2,
+              rates=((0.05, 0.02),) if q
+              else ((0.02, 0.01), (0.05, 0.02), (0.08, 0.05)))),
     # §Mapping API: registered row x column strategy matrix (Eq-16
     # NF on the standard 64x64 population)
     Bench("mapping_matrix", "mapping_matrix",
@@ -122,11 +129,16 @@ def registered_modules() -> frozenset[str]:
 def resolve_only(token: str) -> list[Bench]:
     """Benches selected by one ``--only`` token (name or module).
 
-    Raises ``KeyError`` on an unknown token — the silent-no-op
-    behaviour this replaced let a typo'd nightly entry skip its
-    benchmark while exiting 0.
+    An exact registered-name match selects that one benchmark; only
+    otherwise does the token select every benchmark its module backs —
+    so a name that doubles as a module name (``fault_tolerance``) stays
+    addressable on its own.  Raises ``KeyError`` on an unknown token —
+    the silent-no-op behaviour this replaced let a typo'd nightly entry
+    skip its benchmark while exiting 0.
     """
-    hits = [b for b in BENCHES if token in (b.name, b.module)]
+    hits = [b for b in BENCHES if token == b.name]
+    if not hits:
+        hits = [b for b in BENCHES if token == b.module]
     if not hits:
         raise KeyError(
             f"unknown benchmark {token!r}; known names: "
@@ -194,6 +206,16 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(merged, f, indent=1, default=str)
 
+    failed = {k: v["error"] for k, v in results.items() if not v["ok"]}
+    if failed:
+        # A crashed benchmark must fail the harness (and the nightly
+        # lines driving it), not just leave an ERROR cell in the CSV.
+        print(f"\nFAILED {len(failed)}/{len(results)} benchmark(s):",
+              file=sys.stderr)
+        for name, err in failed.items():
+            print(f"  {name}: {err}", file=sys.stderr)
+        sys.exit(1)
+
 
 def _derive(name: str, res: dict) -> str:
     try:
@@ -242,6 +264,12 @@ def _derive(name: str, res: dict) -> str:
                     + ",".join(f"{k}:{v}" for k, v in wins.items())
                     + ";sig_ge_aware="
                     + str(res["sig_weighted_matches_fault_aware_all_rates"]))
+        if name == "fault_line_open":
+            wins = res["spare_line_beats_fault_aware"]
+            return ("spare_line_beats_fault_aware="
+                    + ",".join(f"{k}:{v}" for k, v in wins.items())
+                    + ";all_rates="
+                    + str(res["spare_line_beats_fault_aware_all_rates"]))
         if name == "mapping_matrix":
             return (f"best={res['best_cell']}@"
                     f"{res['best_reduction_pct']:.1f}%")

@@ -3,9 +3,10 @@
 # registry audit), then the @slow solver-oracle shapes, full-batch
 # equivalence sweeps and the heavy Monte-Carlo nonideality shapes that
 # the tier-1 default (`pytest.ini` addopts = -m "not slow") skips, plus
-# the whole-model deployment, fault-tolerance and
+# the whole-model deployment, fault-tolerance, line-open-sweep and
 # mapping-strategy-matrix benchmarks (fused planning / plan-cache /
-# CIM serving / fault+variation distributions / row-x-column strategy
+# CIM serving / fault+variation distributions / spare-line vs
+# fault-aware under structural line opens / row-x-column strategy
 # NF numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,5 +18,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only deploy_throughput
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only fault_tolerance
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only fault_line_open
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only mapping_matrix

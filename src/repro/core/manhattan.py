@@ -128,8 +128,8 @@ def optimal_col_order(active: jax.Array) -> jax.Array:
 
 def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
                           nf_unit: float | jax.Array,
-                          col_weights: jax.Array | None = None
-                          ) -> jax.Array:
+                          col_weights: jax.Array | None = None,
+                          open_penalty: float = 0.0) -> jax.Array:
     """Row permutation minimising Manhattan NF *plus* expected fault loss.
 
     ``active`` is the tile's (J, K) logical row masks in physical column
@@ -168,18 +168,32 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
     With no stuck cells ``phi_p`` is strictly increasing in ``p`` and
     the result equals :func:`optimal_row_order` exactly.  Single tile
     only; vmap for batches (``repro.core.mdm.plan_tile_population``).
+
+    Cells on OPEN lines (code 3, line-open faults) conduct nothing and
+    count as stuck-OFF in the penalty; ``open_penalty`` adds an extra
+    per-open-cell surcharge on top.  A fully-open wordline then carries
+    the maximum penalty, so the assignment naturally shunts it the
+    sparsest (ideally all-zero *spare*) logical row — the
+    ``spare_line`` mapping pass drives this.
     """
     J, K = active.shape[-2], active.shape[-1]
     row_rank = optimal_row_order(active)
+    # Codes per repro.nonideal.models: 1 = stuck-OFF, 2 = stuck-ON,
+    # 3 = OPEN (dead line — off-like, optionally surcharged).
+    off_like = (stuck == 1) | (stuck == 3)
     if col_weights is None:
-        n_off = jnp.sum((stuck == 1).astype(jnp.float32), axis=-1)
+        n_off = jnp.sum(off_like.astype(jnp.float32), axis=-1)
         n_on = jnp.sum((stuck == 2).astype(jnp.float32), axis=-1)
         pen = (n_off - n_on) / K
     else:
         w = jnp.asarray(col_weights, jnp.float32)
-        w_off = jnp.sum(w * (stuck == 1).astype(jnp.float32), axis=-1)
+        w_off = jnp.sum(w * off_like.astype(jnp.float32), axis=-1)
         w_on = jnp.sum(w * (stuck == 2).astype(jnp.float32), axis=-1)
         pen = (w_off - w_on) / jnp.maximum(jnp.sum(w), 1e-30)
+    if open_penalty:
+        pen = pen + (jnp.float32(open_penalty)
+                     * jnp.sum((stuck == 3).astype(jnp.float32), axis=-1)
+                     / K)
     phi = (jnp.asarray(nf_unit, jnp.float32)
            * jnp.arange(J, dtype=jnp.float32) + pen)
     pos_rank = jnp.argsort(phi, stable=True)
@@ -187,6 +201,28 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
     # densest row goes to the r-th cheapest position.
     return (jnp.zeros((J,), jnp.int32)
             .at[pos_rank].set(row_rank.astype(jnp.int32)))
+
+
+def fault_aware_col_order(active: jax.Array, stuck: jax.Array,
+                          nf_unit: float | jax.Array,
+                          open_penalty: float = 0.0) -> jax.Array:
+    """Column permutation steering logical columns off faulty bitlines.
+
+    The column twin of :func:`fault_aware_row_order` (the transpose
+    argument — column placement cost factors as ``m_c * phi_p`` exactly
+    like the row term): logical columns ranked by descending active
+    count are assigned to physical bitlines ranked by ascending
+    parasitic+fault penalty, so an OPEN bitline ends up hosting the
+    sparsest (ideally spare all-zero) logical column instead of a dense
+    low-order bit plane.  Any bitline order preserves the matmul —
+    columns are sensed independently (the X-CHANGR freedom).
+
+    Returns ``perm`` such that ``active[:, perm]`` is the remapped
+    tile.  Single tile only; vmap for batches.
+    """
+    return fault_aware_row_order(jnp.swapaxes(active, -1, -2),
+                                 jnp.swapaxes(stuck, -1, -2),
+                                 nf_unit, open_penalty=open_penalty)
 
 
 def antidiagonal_mirror(active: jax.Array) -> jax.Array:

@@ -124,7 +124,9 @@ def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
     nf_before = manhattan.nonideality_factor(masks, spec.r, spec.r_on)
 
     placed = reverse_dataflow(masks) if pipe.reversed_dataflow else masks
-    stuck = fault_maps if pipe.rows.uses_faults else None
+    stuck = (fault_maps
+             if (pipe.rows.uses_faults or pipe.cols.uses_faults)
+             else None)
 
     col_perm = pipe.cols.order_tiles(placed, stuck, spec)
     col_position = None

@@ -137,6 +137,25 @@ class BatchedSolveResult(NamedTuple):
     iterations: jax.Array  # ()      shared CG iterations until all done
 
 
+class SolverReport(NamedTuple):
+    """Convergence-watchdog verdict of a (possibly escalated) solve.
+
+    Produced by the ``*_checked`` front doors: a per-tile health mask a
+    caller can trust even when the PCG silently hit its iteration cap
+    or produced NaN/Inf iterates — a non-converged circuit must never
+    masquerade as a good NF number.
+    """
+
+    converged: jax.Array   # (...,) per-tile: finite AND residual <= tol
+    iterations: jax.Array  # ()     total shared iterations, all stages
+    escalations: int       #        escalation stages actually run
+    n_failed: jax.Array    # ()     tiles still unconverged at the end
+
+    @property
+    def all_converged(self) -> bool:
+        return bool(jnp.all(self.converged))
+
+
 # The stencil physics lives once, in the oracle (solver.py); the batched
 # matvec is its vmap over the leading tile axis: g (T,J,K), x (T,2,J,K).
 _stencil_matvec_batched = jax.vmap(_stencil_matvec, in_axes=(0, None, 0))
@@ -509,3 +528,176 @@ def measured_nf_batched(active: jax.Array, spec: CrossbarSpec,
                 *(f.reshape(batch_shape + f.shape[1:])
                   for f in res[:-1]), res.iterations)
         return res
+
+
+# ------------------------- convergence watchdog ---------------------------
+
+def tile_converged(res: BatchedSolveResult, tol: float) -> jax.Array:
+    """NaN/Inf-aware per-tile convergence mask.
+
+    The naive check ``residual > tol`` counts a NaN residual as
+    *converged* (NaN comparisons are False) — the exact masquerade the
+    watchdog exists to close.  The mask is therefore phrased
+    positively: a tile is healthy iff its residual is a finite number
+    ``<= tol`` AND every reported current (hence every NF it feeds) is
+    finite.
+    """
+    finite = (jnp.all(jnp.isfinite(res.currents), axis=-1)
+              & jnp.isfinite(res.residual) & jnp.isfinite(res.nf_total))
+    return finite & (res.residual <= tol)
+
+
+def _escalation_ladder(precision: SolverPrecision, chain_impl: str,
+                       maxiter: int) -> list:
+    """Bounded retry schedule for failed tiles, cheapest first.
+
+    f32/mixed solves first get the full-f64 rerun (same
+    preconditioner); whatever still fails gets a Jacobi-preconditioned
+    f64 rerun with a doubled budget — the line preconditioner's chain
+    solves are themselves a failure candidate on degenerate
+    (zero-conductance) tiles, the plain diagonal never is.
+    """
+    ladder = []
+    if not precision.is_f64:
+        ladder.append((F64, chain_impl, maxiter))
+    if not (precision.is_f64 and chain_impl == "jacobi"):
+        ladder.append((F64, "jacobi", 2 * maxiter))
+    else:
+        ladder.append((F64, "jacobi", 4 * maxiter))
+    return ladder
+
+
+def _escalate_failed(res: BatchedSolveResult, rerun,
+                     precision: SolverPrecision, chain_impl: str,
+                     maxiter: int, tol: float):
+    """Host-side watchdog: check, then rerun only the failed tiles.
+
+    ``res`` is the flat (T leading) first-pass result; ``rerun(idx,
+    precision, chain_impl, maxiter)`` solves just those tiles again.
+    Runs outside jit on concrete arrays — the failure set is data-
+    dependent, and re-solving a handful of tiles on the host beats
+    paying a masked full-batch rerun inside the jitted program.
+    Returns the patched result plus the :class:`SolverReport`.
+    """
+    converged = tile_converged(res, tol)
+    escalations = 0
+    for prec_e, chain_e, mi_e in _escalation_ladder(precision,
+                                                    chain_impl, maxiter):
+        if bool(jnp.all(converged)):
+            break
+        idx = jnp.nonzero(~converged)[0]
+        sub = rerun(idx, prec_e, chain_e, mi_e)
+        escalations += 1
+        res = BatchedSolveResult(
+            res.currents.at[idx].set(sub.currents),
+            res.ideal.at[idx].set(sub.ideal),
+            res.nf_cols.at[idx].set(sub.nf_cols),
+            res.nf_total.at[idx].set(sub.nf_total),
+            res.residual.at[idx].set(sub.residual),
+            res.iterations + sub.iterations)
+        converged = converged.at[idx].set(tile_converged(sub, tol))
+    report = SolverReport(converged, res.iterations, escalations,
+                          jnp.sum(~converged))
+    return res, report
+
+
+def _ref_subset(g_ref: jax.Array, g_shape: tuple, idx: jax.Array,
+                J: int, K: int) -> jax.Array:
+    """Rows of the broadcast clean reference for flat tile indices.
+
+    ``g_ref`` may carry fewer leading dims than ``g`` (one (T, J, K)
+    reference under an (S, T, J, K) ensemble); indexing it modulo its
+    own flat tile count avoids materialising the S-fold broadcast just
+    to escalate a handful of tiles.
+    """
+    if g_ref.shape == g_shape:
+        return g_ref.reshape(-1, J, K)[idx]
+    if g_ref.shape == g_shape[-g_ref.ndim:]:
+        n_ref = 1
+        for d in g_ref.shape[:-2]:
+            n_ref *= d
+        return g_ref.reshape(-1, J, K)[idx % max(n_ref, 1)]
+    return jnp.broadcast_to(g_ref, g_shape).reshape(-1, J, K)[idx]
+
+
+def measured_nf_conductances_checked(
+        g: jax.Array, spec: CrossbarSpec,
+        g_ref: jax.Array | None = None,
+        v_in: jax.Array | None = None, maxiter: int = 4000,
+        precision: SolverPrecision | str | None = None,
+        chain_impl: str = "lax", tol: float = 1e-12,
+        escalate: bool = True):
+    """:func:`measured_nf_conductances` + the convergence watchdog.
+
+    Returns ``(BatchedSolveResult, SolverReport)``: the result has the
+    escalated reruns patched in per tile, the report says which tiles
+    can be trusted.  ``escalate=False`` checks without retrying.
+    """
+    precision = resolve_precision(precision)
+    with enable_x64():
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off], jnp.float64)
+        if v_in is None:
+            v_in = jnp.full((g.shape[-2],), spec.v_read, jnp.float64)
+        J, K = g.shape[-2], g.shape[-1]
+        batch_shape = g.shape[:-2]
+        flat_v = v_in.reshape((-1, v_in.shape[-1])) if v_in.ndim > 1 else v_in
+        g_ref_eff = g if g_ref is None else g_ref
+        res = solve_conductances_batched(g, g_ref_eff, flat_v, spec_arr,
+                                         maxiter, tol,
+                                         precision=precision,
+                                         chain_impl=chain_impl)
+
+        g_flat = g.reshape(-1, J, K)
+
+        def rerun(idx, prec_e, chain_e, mi_e):
+            v_e = flat_v[idx] if flat_v.ndim > 1 else flat_v
+            return solve_conductances_batched(
+                g_flat[idx], _ref_subset(g_ref_eff, g.shape, idx, J, K),
+                v_e, spec_arr, mi_e, tol, precision=prec_e,
+                chain_impl=chain_e)
+
+        if escalate:
+            res, report = _escalate_failed(res, rerun, precision,
+                                           chain_impl, maxiter, tol)
+        else:
+            conv = tile_converged(res, tol)
+            report = SolverReport(conv, res.iterations, 0,
+                                  jnp.sum(~conv))
+        if len(batch_shape) != 1:
+            res = BatchedSolveResult(
+                *(f.reshape(batch_shape + f.shape[1:])
+                  for f in res[:-1]), res.iterations)
+            report = report._replace(
+                converged=report.converged.reshape(batch_shape))
+        return res, report
+
+
+def measured_nf_batched_checked(
+        active: jax.Array, spec: CrossbarSpec,
+        v_in: jax.Array | None = None, maxiter: int = 4000,
+        precision: SolverPrecision | str | None = None,
+        chain_impl: str = "lax", tol: float = 1e-12,
+        escalate: bool = True):
+    """:func:`measured_nf_batched` + the convergence watchdog.
+
+    Mask front door: builds the f64 conductance field exactly as
+    :func:`_solve_core` does (bit-identical solve) and routes through
+    the checked conductance entry.
+    """
+    with enable_x64():
+        active = jnp.asarray(active)
+        g = jnp.where(active > 0,
+                      jnp.float64(1.0 / spec.r_on),
+                      jnp.float64(1.0 / spec.r_off))
+        if g.ndim == 2:
+            g = g[None]
+            res, report = measured_nf_conductances_checked(
+                g, spec, g, v_in, maxiter, precision, chain_impl, tol,
+                escalate)
+            res = BatchedSolveResult(*(f[0] for f in res[:-1]),
+                                     res.iterations)
+            report = report._replace(converged=report.converged[0])
+            return res, report
+        return measured_nf_conductances_checked(
+            g, spec, g, v_in, maxiter, precision, chain_impl, tol,
+            escalate)

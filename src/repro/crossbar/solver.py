@@ -162,6 +162,28 @@ def measured_nf(active: jax.Array, spec: CrossbarSpec,
         return solve_crossbar(active, v_in, spec_arr, maxiter)
 
 
+def measured_nf_checked(active: jax.Array, spec: CrossbarSpec,
+                        v_in: jax.Array | None = None,
+                        maxiter: int = 4000, precision=None,
+                        tol: float = 1e-12, escalate: bool = True):
+    """:func:`measured_nf` + the convergence watchdog.
+
+    Routes every input shape through the checked batched engine
+    (:func:`repro.crossbar.batched.measured_nf_batched_checked`) and
+    returns ``(result, SolverReport)`` — a single (J, K) tile comes
+    back as a :class:`SolveResult` with a scalar ``converged``.
+    """
+    from repro.crossbar.batched import measured_nf_batched_checked
+    if active.ndim > 2:
+        return measured_nf_batched_checked(active, spec, v_in, maxiter,
+                                           precision, tol=tol,
+                                           escalate=escalate)
+    res, report = measured_nf_batched_checked(active, spec, v_in,
+                                              maxiter, precision,
+                                              tol=tol, escalate=escalate)
+    return SolveResult(*res[:5]), report
+
+
 def measured_nf_sequential(active: jax.Array, spec: CrossbarSpec,
                            v_in: jax.Array | None = None,
                            maxiter: int = 4000):

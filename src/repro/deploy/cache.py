@@ -210,8 +210,17 @@ class PlanCache:
             col_dt = cls._perm_dtype(cols)
             cperms = np.frombuffer(buf, col_dt, 2 * ti * tn * cols,
                                    offset=off)
+            off += cperms.size * cperms.itemsize
             cperms = cperms.astype(np.int32).reshape(2, ti, tn, cols)
             col_perm, col_position = cperms[0], cperms[1]
+        if off != len(buf):
+            # Exact-length contract: a short buffer already fails one of
+            # the frombuffer reads above, but an entry whose header
+            # promises more than its body holds (torn write on a
+            # non-atomic filesystem, manual corruption) — or one with
+            # trailing garbage — must be a miss, not a silent partial
+            # decode.
+            raise ValueError("plan entry length mismatch")
         perms = perms.astype(np.int32).reshape(2, ti, tn, rows)
         return MdmPlan(
             row_perm=perms[0], row_position=perms[1],
@@ -251,6 +260,13 @@ class PlanCache:
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(payload)
+                # Durability before visibility: rename-over without
+                # fsync can surface a zero-length/truncated entry after
+                # a power loss on journaled filesystems — exactly the
+                # corruption class ``_decode_plan``'s length check turns
+                # into a miss, but better never to publish it.
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         except OSError:
             # Cache is best-effort: a full/read-only disk must not fail

@@ -154,7 +154,9 @@ def collect_projection_matrices(params: dict, cfg: ModelConfig
 
 def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
                             eta: float, plan: MdmPlan,
-                            cells=None, nonideal=None) -> CimDeployment:
+                            cells=None, nonideal=None,
+                            noise_tag: int | None = None,
+                            stats: dict | None = None) -> CimDeployment:
     """Host mirror of ``repro.kernels.cim_mvm.ops.deploy`` packaging.
 
     Quantises and lays out one planned matrix entirely in numpy —
@@ -176,6 +178,14 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
     folded bit-exactly into the int16 codes, programming variation /
     drift into the per-weight ``gain`` field — generation then runs
     under the injected faults through the unchanged ``cim_mvm``.
+
+    When the fault map carries line opens, the pre-injection overlap of
+    programmed bits with OPEN cells is recorded on the deployment as
+    ``degraded`` (int32 count; > 0 = spares exhausted, the model layer
+    demotes to the digital fallback) and in ``stats["open_bits"]`` when
+    a ``stats`` dict is passed.  ``noise_tag`` (with
+    ``nonideal.sigma_read > 0``) arms the per-read noise hook — a
+    unique int per deployed matrix, folded into the serving read key.
     """
     del mode  # layout comes from the plan (kept for signature compat)
     I, N = w.shape
@@ -193,11 +203,12 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
     sign = np.pad(sign, ((0, i_pad - I), (0, n_pad - N)),
                   constant_values=1)
 
-    gain = None
+    gain = degraded = None
     if cells is not None and (cells.stuck is not None
                               or cells.gamma is not None):
         from repro.nonideal.inject import (
             gather_physical_host,
+            open_bit_overlap_host,
             perturb_codes_host,
             variation_gain_host,
         )
@@ -207,6 +218,11 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
         if cells.stuck is not None:
             stuck_log = gather_physical_host(cells.stuck, row_position,
                                              rev, spec, col_position)
+            open_bits = open_bit_overlap_host(codes, stuck_log,
+                                              spec.n_bits)
+            degraded = np.int32(open_bits)
+            if stats is not None:
+                stats["open_bits"] = open_bits
             codes = perturb_codes_host(codes, stuck_log, spec.n_bits)
         if cells.gamma is not None:
             gamma_log = gather_physical_host(cells.gamma, row_position,
@@ -214,6 +230,10 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
             drift = 1.0 if nonideal is None else nonideal.drift_factor
             gain = variation_gain_host(codes, stuck_log, gamma_log,
                                        spec.n_bits, drift)
+
+    sigma_read = 0.0 if nonideal is None else float(nonideal.sigma_read)
+    tag = (np.int32(noise_tag)
+           if noise_tag is not None and sigma_read > 0.0 else None)
 
     signed = (codes.astype(np.int32) * sign).astype(np.int16)
 
@@ -225,7 +245,8 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
         codes=signed, pos=pos, scale=np.float32(scale),
         n_bits=spec.n_bits, wpt=wpt, cols=spec.cols, eta=float(eta),
         reversed_df=rev, in_dim=I, out_dim=N, gain=gain,
-        col_pos=col_position)
+        col_pos=col_position, degraded=degraded, noise_tag=tag,
+        sigma_read=sigma_read)
 
 
 def deploy_model_params(params: dict, cfg: ModelConfig,
@@ -298,11 +319,21 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx,
                                   fault_maps=fault_maps)
 
+    # Per-matrix PRNG tags for the per-read noise hook: unique over the
+    # deterministic collection order, so one serving read key yields
+    # independent noise per deployed matrix (and per repeat/expert).
+    noise_tags = {name: t for t, name in enumerate(mats)}
+    degraded: dict[str, int] = {}
+
     def _package(name):
-        return package_deployment_host(
+        stats: dict = {}
+        dep = package_deployment_host(
             mats[name], spec, mode, eta, plans[name],
             cells=None if cells is None else cells[name],
-            nonideal=nonideal)
+            nonideal=nonideal, noise_tag=noise_tags[name], stats=stats)
+        if stats.get("open_bits"):
+            degraded[name] = stats["open_bits"]
+        return dep
 
     cim_tree: dict = {}
     for i, bt in enumerate(cfg.block_pattern):
@@ -355,11 +386,23 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
         report["stuck_cells"] = int(sum(
             (c.stuck != 0).sum() for c in cells.values()
             if c.stuck is not None))
+        # Graceful degradation accounting: matrices whose crossbars lose
+        # programmed bits to open lines even after the remap (spares
+        # exhausted) serve through the digital fallback; nothing is
+        # demoted silently.
+        report["degraded"] = {
+            name: (f"degraded: {n} programmed bit(s) on open lines "
+                   "after remap (spares exhausted); serving via "
+                   "digital fallback")
+            for name, n in sorted(degraded.items())}
+        report["n_degraded"] = len(degraded)
     if verbose:
         print(f"deployed {summary['n_deployed']} matrices, skipped "
               f"{summary['n_skipped']} parameters:")
         for name, reason in summary["skipped"].items():
             print(f"  skip {name:40s} {reason}")
+        for name, reason in report.get("degraded", {}).items():
+            print(f"  demote {name:38s} {reason}")
     return cim_tree, report
 
 

@@ -150,15 +150,15 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
     legacy "sort"/"mdm" strings auto-upgrade, matching the old
     side-channel semantics); the maps are fingerprinted into the cache
     keys so a changed fault map replans exactly like changed weights.
-    Pipelines whose row pass ignores faults drop the maps from both
-    planning and keys.
+    Pipelines whose row *and* column passes both ignore faults drop
+    the maps from both planning and keys.
     Returns ({name: MdmPlan}, report); the report records tile counts,
     cache hit/miss split (including whether the whole set resolved from
     one manifest read) and wall-clock of the fused planning pass.
     """
     t0 = time.perf_counter()
     pipe = resolve_pipeline(mode, fault_maps is not None)
-    if not pipe.rows.uses_faults:
+    if not (pipe.rows.uses_faults or pipe.cols.uses_faults):
         fault_maps = None
     token = pipe.cache_token()
     plans: dict[str, MdmPlan] = {}

@@ -53,9 +53,14 @@ from repro.compat import enable_x64, shard_map
 from repro.core.tiling import CrossbarSpec
 from repro.crossbar.batched import (
     SolverPrecision,
+    SolverReport,
+    _escalate_failed,
+    _ref_subset,
     _solve_core,
     _solve_core_g,
     resolve_precision,
+    solve_conductances_batched,
+    tile_converged,
 )
 from repro.distributed.sharding import ShardingCtx, logical_spec
 
@@ -131,8 +136,10 @@ def _sharded_solver(mesh: Mesh, axes: tuple[str, ...], maxiter: int,
         res = _solve_core(active, v_in, spec_arr, maxiter, tol, precision,
                           chain_impl)
         # Global convergence check — the solve's only communication.
+        # NaN/Inf-aware (tile_converged): ``residual > tol`` is False
+        # for NaN, which would count a diverged tile as converged.
         unconverged = jax.lax.psum(
-            jnp.sum((res.residual > tol).astype(jnp.int32)), axes)
+            jnp.sum((~tile_converged(res, tol)).astype(jnp.int32)), axes)
         iters = jax.lax.pmax(res.iterations, axes)
         return ShardedSolveResult(res.currents, res.ideal, res.nf_cols,
                                   res.nf_total, res.residual, iters,
@@ -167,7 +174,7 @@ def _sharded_solver_g(mesh: Mesh, axes: tuple[str, ...], maxiter: int,
         res = _solve_core_g(g, g_ref, v_in, spec_arr, maxiter, tol,
                             precision, chain_impl)
         unconverged = jax.lax.psum(
-            jnp.sum((res.residual > tol).astype(jnp.int32)), axes)
+            jnp.sum((~tile_converged(res, tol)).astype(jnp.int32)), axes)
         iters = jax.lax.pmax(res.iterations, axes)
         return ShardedSolveResult(res.currents, res.ideal, res.nf_cols,
                                   res.nf_total, res.residual, iters,
@@ -235,7 +242,7 @@ def measured_nf_sharded(active: jax.Array, spec: CrossbarSpec,
         res = measured_nf_batched(active, spec, v_in, maxiter, precision)
         return ShardedSolveResult(
             *res[:5], res.iterations,
-            jnp.sum((res.residual > tol).astype(jnp.int32)))
+            jnp.sum((~tile_converged(res, tol)).astype(jnp.int32)))
     n_shards = 1
     for a in axes:
         n_shards *= dict(mesh.shape)[a]
@@ -299,7 +306,7 @@ def measured_nf_conductances_sharded(
                                        precision, chain_impl)
         return ShardedSolveResult(
             *res[:5], res.iterations,
-            jnp.sum((res.residual > tol).astype(jnp.int32)))
+            jnp.sum((~tile_converged(res, tol)).astype(jnp.int32)))
     n_shards = 1
     for a in axes:
         n_shards *= dict(mesh.shape)[a]
@@ -343,3 +350,72 @@ def measured_nf_conductances_sharded(
                 *(f.reshape(batch_shape + f.shape[1:]) for f in res[:5]),
                 res.iterations, res.unconverged)
         return res
+
+
+def measured_nf_conductances_sharded_checked(
+        g: jax.Array, spec: CrossbarSpec,
+        g_ref: jax.Array | None = None,
+        v_in: jax.Array | None = None,
+        maxiter: int = 4000,
+        precision: SolverPrecision | str | None = None,
+        ctx: ShardingCtx | None = None,
+        tol: float = 1e-12,
+        chain_impl: str = "lax",
+        escalate: bool = True):
+    """:func:`measured_nf_conductances_sharded` + convergence watchdog.
+
+    The sharded solve runs as-is (its post-loop psum already counts
+    failures NaN-aware); any failed tiles are then escalated on the
+    host through the single-device batched engine — the failure set is
+    a handful of tiles by construction, so a sharded rerun would be all
+    dispatch overhead.  Returns ``(ShardedSolveResult, SolverReport)``
+    with escalated tiles patched in and the ``unconverged`` count
+    recomputed.
+    """
+    precision = resolve_precision(precision)
+    res = measured_nf_conductances_sharded(g, spec, g_ref, v_in, maxiter,
+                                           precision, ctx, tol,
+                                           chain_impl)
+    with enable_x64():
+        J, K = g.shape[-2], g.shape[-1]
+        batch_shape = g.shape[:-2]
+        flat = ShardedSolveResult(
+            *(jnp.reshape(f, (-1,) + f.shape[len(batch_shape):])
+              for f in res[:5]), res.iterations, res.unconverged)
+        base = flat[:5] + (flat.iterations,)
+        from repro.crossbar.batched import BatchedSolveResult
+        bres = BatchedSolveResult(*base)
+        if not escalate:
+            conv = tile_converged(bres, tol)
+            if len(batch_shape) != 1:
+                conv = conv.reshape(batch_shape)
+            return res, SolverReport(conv, res.iterations, 0,
+                                     jnp.sum(~conv))
+
+        spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off],
+                             jnp.float64)
+        if v_in is None:
+            v_in_eff = jnp.full((J,), spec.v_read, jnp.float64)
+        else:
+            v_in_eff = v_in
+        flat_v = (v_in_eff.reshape((-1, v_in_eff.shape[-1]))
+                  if v_in_eff.ndim > 1 else v_in_eff)
+        g_flat = g.reshape(-1, J, K).astype(jnp.float64)
+        g_ref_eff = g if g_ref is None else g_ref
+
+        def rerun(idx, prec_e, chain_e, mi_e):
+            v_e = flat_v[idx] if flat_v.ndim > 1 else flat_v
+            return solve_conductances_batched(
+                g_flat[idx], _ref_subset(g_ref_eff, g.shape, idx, J, K),
+                v_e, spec_arr, mi_e, tol, precision=prec_e,
+                chain_impl=chain_e)
+
+        bres, report = _escalate_failed(bres, rerun, precision,
+                                        chain_impl, maxiter, tol)
+        res = ShardedSolveResult(
+            *(f.reshape(batch_shape + f.shape[1:]) for f in bres[:5]),
+            bres.iterations, report.n_failed.astype(jnp.int32))
+        if len(batch_shape) != 1:
+            report = report._replace(
+                converged=report.converged.reshape(batch_shape))
+        return res, report

@@ -44,9 +44,10 @@ IMPLS = ("auto", "pallas", "xla", "interpret")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("codes", "pos", "scale", "gain", "col_pos"),
+         data_fields=("codes", "pos", "scale", "gain", "col_pos",
+                      "degraded", "noise_tag"),
          meta_fields=("n_bits", "wpt", "cols", "eta", "reversed_df",
-                      "in_dim", "out_dim"))
+                      "in_dim", "out_dim", "sigma_read"))
 @dataclasses.dataclass
 class CimDeployment:
     """A weight matrix deployed onto bit-sliced crossbars.
@@ -64,6 +65,20 @@ class CimDeployment:
            strategies — the pre-pipeline layout).  Produced by
            column-permuting mapping pipelines (e.g. the X-CHANGR-style
            bitline sort); consumed by the fused XLA path only.
+    degraded: () int32 count of programmed active bits landing on OPEN
+           (line-open) cells after the spare-line remap, or None (no
+           fault injection).  ``degraded > 0`` means spare capacity ran
+           out and this deployment's crossbar output is structurally
+           wrong — the model layer (``repro.models.model._cim_matmul``)
+           demotes such deployments to the digital matmul fallback.
+    noise_tag: () int32 per-deployment PRNG tag (unique per deployed
+           matrix), or None.  Folded into the caller-supplied read key
+           so every deployment draws independent per-read noise from
+           one shared key.
+    sigma_read: relative per-read conductance noise std (static meta;
+           the deployment-time :class:`repro.nonideal.models
+           .NonidealModel.sigma_read`).  Applied by the fused XLA path
+           only, and only when a read key is supplied to ``cim_mvm``.
 
     Registered as a pytree with the array fields as data, so stacked
     deployments (one per scanned model layer) thread through ``lax.scan``
@@ -83,6 +98,9 @@ class CimDeployment:
     out_dim: int
     gain: jax.Array | None = None
     col_pos: jax.Array | None = None
+    degraded: jax.Array | None = None
+    noise_tag: jax.Array | None = None
+    sigma_read: float = 0.0
 
 
 def deploy(w: jax.Array, spec: CrossbarSpec, mode="mdm",
@@ -158,7 +176,8 @@ def resolve_impl(impl: str = "auto") -> str:
 
 
 @partial(jax.jit, static_argnames=("impl", "blocks"))
-def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
+def cim_mvm(x: jax.Array, dep: CimDeployment,
+            read_key: jax.Array | None = None, impl: str = "auto",
             blocks: tuple[int, int, int] | None = None) -> jax.Array:
     """y = x @ W_effective for a CIM-deployed weight matrix.
 
@@ -168,21 +187,31 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
     ``blocks`` tunes the Pallas/interpret grid only — the XLA fallback
     is a single fused program with no block structure to tune, so the
     argument has no effect there.
+
+    ``read_key`` enables per-read conductance noise: when the
+    deployment carries ``sigma_read > 0`` and a ``noise_tag``, the tag
+    is folded into the key and fresh Gaussian weight noise is drawn for
+    *this* read (decode steps pass a fresh key per step).  ``None``
+    (the default) is bit-identical to the noiseless path.
     """
     requested = impl
     impl = resolve_impl(impl)
-    if (dep.gain is not None or dep.col_pos is not None) and impl != "xla":
-        # Per-weight nonideality gain and per-tile column permutations
-        # live in the fused XLA expansion only; the Pallas kernel has
-        # neither operand.  "auto" on TPU legitimately lands here —
-        # degrade to the XLA path rather than silently dropping the
-        # injected variation / bitline remap.  An *explicit*
-        # pallas/interpret request must not be silently rerouted (a TPU
-        # parity check would attribute XLA numbers to the kernel), so
-        # surface the conflict instead.
+    noisy = (read_key is not None and dep.sigma_read > 0.0
+             and dep.noise_tag is not None)
+    if (dep.gain is not None or dep.col_pos is not None or noisy) \
+            and impl != "xla":
+        # Per-weight nonideality gain, per-tile column permutations and
+        # per-read noise live in the fused XLA expansion only; the
+        # Pallas kernel has none of these operands.  "auto" on TPU
+        # legitimately lands here — degrade to the XLA path rather than
+        # silently dropping the injected variation / bitline remap /
+        # read noise.  An *explicit* pallas/interpret request must not
+        # be silently rerouted (a TPU parity check would attribute XLA
+        # numbers to the kernel), so surface the conflict instead.
         if requested != "auto":
             what = ("a deployment gain" if dep.gain is not None
-                    else "a column-permuted deployment")
+                    else "a column-permuted deployment"
+                    if dep.col_pos is not None else "per-read noise")
             raise ValueError(
                 f"impl={requested!r} cannot apply {what}; "
                 "use impl='xla' (or 'auto') for such deployments")
@@ -197,10 +226,13 @@ def cim_mvm(x: jax.Array, dep: CimDeployment, impl: str = "auto",
 
     if impl == "xla":
         x2 = jnp.pad(x2, ((0, 0), (0, i_pad - I)))
+        rk = (jax.random.fold_in(read_key, dep.noise_tag) if noisy
+              else None)
         y = cim_mvm_xla(x2, dep.codes, dep.pos, dep.scale,
                         n_bits=dep.n_bits, wpt=dep.wpt, cols=dep.cols,
                         eta=dep.eta, reversed_df=dep.reversed_df,
-                        gain=dep.gain, col_pos=dep.col_pos)
+                        gain=dep.gain, col_pos=dep.col_pos,
+                        read_key=rk, sigma_read=dep.sigma_read)
         return y[:, :dep.out_dim].reshape(*batch_shape, dep.out_dim)
 
     bm, bi, bn = blocks or _block_sizes(M, i_pad, n_pad, dep.wpt)

@@ -74,7 +74,9 @@ def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
                 scale: jax.Array, *, n_bits: int, wpt: int, cols: int,
                 eta: float, reversed_df: bool,
                 gain: jax.Array | None = None,
-                col_pos: jax.Array | None = None) -> jax.Array:
+                col_pos: jax.Array | None = None,
+                read_key: jax.Array | None = None,
+                sigma_read: float = 0.0) -> jax.Array:
     """y = x @ W' with on-the-fly code expansion; x: (M, I) f32.
 
     ``gain`` (optional, (I, N) f32 from ``repro.nonideal.inject``)
@@ -84,6 +86,14 @@ def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
     ``col_pos`` (optional, (Ti, Tn, cols) int32) applies a per-tile
     bitline permutation to the column-distance moment (X-CHANGR-style
     mapping pipelines).
+    ``read_key`` + ``sigma_read`` add fresh per-read weight noise: iid
+    per-cell conductance noise of relative std ``sigma_read`` carries a
+    per-bit value std of ``sigma_read * 2^-(k+1)``, which sums over the
+    K independent bit planes to a per-weight std of
+    ``scale * sigma_read * sqrt((1 - 4^-K) / 3)`` — the first-order
+    weight-level aggregate (the per-cell reference is the sampled
+    ``read`` field of :class:`repro.nonideal.models.CellSample`).  The
+    noise term fuses into the same elementwise pipeline as the gain.
     """
     w_eff = cim_effective_weights(codes, pos, scale, n_bits=n_bits,
                                   wpt=wpt, cols=cols, eta=eta,
@@ -91,6 +101,10 @@ def cim_mvm_xla(x: jax.Array, codes: jax.Array, pos: jax.Array,
                                   col_pos=col_pos)
     if gain is not None:
         w_eff = w_eff * gain
+    if read_key is not None and sigma_read > 0.0:
+        agg = float(((1.0 - 4.0 ** -n_bits) / 3.0) ** 0.5)
+        eps = jax.random.normal(read_key, w_eff.shape, jnp.float32)
+        w_eff = w_eff + (sigma_read * agg) * scale * eps
     return jax.lax.dot_general(
         x.astype(jnp.float32), w_eff, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

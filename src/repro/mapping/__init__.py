@@ -12,8 +12,10 @@ pass           strategies
 dataflow       ``"conventional"`` | ``"reversed"`` (low-order-side
                feeding, paper MDM step 1)
 rows           ``identity`` | ``mdm`` | ``fault_aware`` |
-               ``significance_weighted`` (:mod:`repro.mapping.rows`)
-cols           ``identity`` | ``xchangr`` (:mod:`repro.mapping.columns`)
+               ``significance_weighted`` | ``spare_line``
+               (:mod:`repro.mapping.rows`)
+cols           ``identity`` | ``xchangr`` | ``spare_line``
+               (:mod:`repro.mapping.columns`)
 partition      ``dense`` | ``expert`` ((E, I, N) MoE banks,
                :mod:`repro.mapping.partition`)
 =============  ==========================================================
@@ -54,7 +56,11 @@ from repro.mapping.base import (  # noqa: F401
     get_strategy,
     register,
 )
-from repro.mapping.columns import IdentityCols, XChangrCols  # noqa: F401
+from repro.mapping.columns import (  # noqa: F401
+    IdentityCols,
+    SpareLineCols,
+    XChangrCols,
+)
 from repro.mapping.partition import (  # noqa: F401
     DensePartition,
     ExpertPartition,
@@ -71,13 +77,15 @@ from repro.mapping.rows import (  # noqa: F401
     IdentityRows,
     MdmRows,
     SignificanceWeightedRows,
+    SpareLineRows,
 )
 
 __all__ = [
     "KINDS", "Strategy", "available", "get_strategy", "register",
-    "IdentityCols", "XChangrCols", "DensePartition", "ExpertPartition",
+    "IdentityCols", "SpareLineCols", "XChangrCols",
+    "DensePartition", "ExpertPartition",
     "LEGACY_MODES", "MappingPipeline", "named_pipelines",
     "register_pipeline", "resolve_pipeline",
     "FaultAwareRows", "IdentityRows", "MdmRows",
-    "SignificanceWeightedRows",
+    "SignificanceWeightedRows", "SpareLineRows",
 ]

@@ -57,6 +57,9 @@ class Strategy:
 
     kind: str = ""
     name: str = ""
+    # Fault-map consumption declaration (rows *and* cols passes): the
+    # planner only threads physical cell-state maps to passes that ask.
+    uses_faults: bool = False
 
     def fingerprint(self) -> str:
         """Stable registry name + params, e.g. ``"mdm"``.

@@ -21,6 +21,8 @@ from repro.mapping.base import Strategy, register
 class IdentityCols(Strategy):
     """Keep the (possibly dataflow-reversed) column order unchanged."""
 
+    uses_faults = False
+
     def order_tiles(self, placed, stuck, spec):
         return None
 
@@ -38,7 +40,42 @@ class XChangrCols(Strategy):
     low-order planes really are the dense ones.
     """
 
+    uses_faults = False
+
     def order_tiles(self, placed, stuck, spec):
         from repro.core import manhattan
 
         return jax.vmap(manhattan.optimal_col_order)(placed)
+
+
+@register("cols", "spare_line")
+@dataclasses.dataclass(frozen=True)
+class SpareLineCols(Strategy):
+    """Bitline sort steering logical columns off faulty/open bitlines.
+
+    The column half of the spare-line remap: an OPEN bitline (line-open
+    fault, ``repro.nonideal.models``) conducts nothing, so whichever
+    logical column lands on it is lost entirely.  Sorting physical
+    bitlines by fault penalty — with ``open_penalty`` surcharging open
+    cells so a severed bitline ranks behind every merely-parasitic
+    position — makes the dead line host the *sparsest* logical column.
+    When the tile carries spare capacity (all-zero bit columns from
+    padding or sparsity), the dead bitline absorbs a spare and costs
+    nothing; identity column order would have sacrificed a live bit
+    plane instead.  Reduces exactly to :class:`XChangrCols` when no
+    fault map is supplied.
+    """
+
+    open_penalty: float = 4.0
+
+    uses_faults = True
+
+    def order_tiles(self, placed, stuck, spec):
+        from repro.core import manhattan
+
+        if stuck is None:
+            return jax.vmap(manhattan.optimal_col_order)(placed)
+        return jax.vmap(
+            lambda a, s: manhattan.fault_aware_col_order(
+                a, s, spec.nf_unit, open_penalty=self.open_penalty)
+        )(placed, stuck)

@@ -22,13 +22,14 @@ from __future__ import annotations
 import dataclasses
 
 from repro.mapping.base import Strategy, available, get_strategy
-from repro.mapping.columns import IdentityCols, XChangrCols
+from repro.mapping.columns import IdentityCols, SpareLineCols, XChangrCols
 from repro.mapping.partition import DensePartition, ExpertPartition
 from repro.mapping.rows import (
     FaultAwareRows,
     IdentityRows,
     MdmRows,
     SignificanceWeightedRows,
+    SpareLineRows,
 )
 
 DATAFLOWS = ("conventional", "reversed")
@@ -162,6 +163,8 @@ register_pipeline("significance_weighted",
 register_pipeline("xchangr", MappingPipeline(cols=XChangrCols()))
 register_pipeline("xchangr_fault_aware", MappingPipeline(
     rows=FaultAwareRows(), cols=XChangrCols()))
+register_pipeline("spare_line", MappingPipeline(
+    rows=SpareLineRows(), cols=SpareLineCols()))
 register_pipeline("mdm_expert", MappingPipeline(
     partition=ExpertPartition()))
 

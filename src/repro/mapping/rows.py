@@ -65,6 +65,38 @@ class FaultAwareRows(Strategy):
                         in_axes=(0, 0, None))(placed, stuck, spec.nf_unit)
 
 
+@register("rows", "spare_line")
+@dataclasses.dataclass(frozen=True)
+class SpareLineRows(Strategy):
+    """Fault-aware MDM with a line-open surcharge (spare-row remap).
+
+    Identical objective to :class:`FaultAwareRows` except that cells on
+    OPEN lines (line-open faults, ``repro.nonideal.models``) carry an
+    extra ``open_penalty`` surcharge on top of their stuck-OFF-like
+    unit cost.  A fully-open wordline then outranks every healthy
+    position's penalty, so the assignment shunts it the sparsest
+    logical row — when the tile has spare capacity (all-zero rows from
+    ``pad_to_tiles`` padding or weight sparsity), the dead wordline
+    hosts a spare and the remap costs nothing.  Composes with
+    :class:`repro.mapping.columns.SpareLineCols` as the ``spare_line``
+    named pipeline.  Reduces exactly to :class:`MdmRows` with no fault
+    map.
+    """
+
+    open_penalty: float = 4.0
+
+    uses_faults = True
+    uses_col_significance = False
+
+    def order_tiles(self, placed, stuck, col_sig, spec):
+        if stuck is None:
+            return jax.vmap(_manhattan().optimal_row_order)(placed)
+        return jax.vmap(
+            lambda a, s: _manhattan().fault_aware_row_order(
+                a, s, spec.nf_unit, open_penalty=self.open_penalty)
+        )(placed, stuck)
+
+
 @register("rows", "significance_weighted")
 @dataclasses.dataclass(frozen=True)
 class SignificanceWeightedRows(Strategy):

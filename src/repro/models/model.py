@@ -51,32 +51,50 @@ def _silu(x):
     return x * jax.nn.sigmoid(x)
 
 
-def _cim_matmul(x: jax.Array, w: jax.Array, dep) -> jax.Array:
-    """x @ w, through the deployed crossbars when a CimDeployment exists."""
+def _cim_matmul(x: jax.Array, w: jax.Array, dep,
+                read_key: jax.Array | None = None) -> jax.Array:
+    """x @ w, through the deployed crossbars when a CimDeployment exists.
+
+    A deployment carrying ``degraded > 0`` (programmed bits lost to
+    line-open faults after the spare-line remap — spares exhausted) is
+    demoted to the digital matmul on the full-precision weight: the
+    crossbar output would be structurally wrong, and the deploy report
+    lists every demotion with its reason.  ``read_key`` threads
+    per-read conductance noise into ``cim_mvm`` (None = noiseless).
+    """
     if dep is None:
         return x @ w
     from repro.kernels.cim_mvm.ops import cim_mvm
-    return cim_mvm(x, dep).astype(x.dtype)
+    if dep.degraded is None:
+        return cim_mvm(x, dep, read_key=read_key).astype(x.dtype)
+    w2 = w.reshape(dep.in_dim, dep.out_dim)
+    return jax.lax.cond(
+        dep.degraded > 0,
+        lambda: (x @ w2).astype(x.dtype),
+        lambda: cim_mvm(x, dep, read_key=read_key).astype(x.dtype))
 
 
 def dense_mlp(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
-              prefix: str = "ffn_", cim: dict | None = None) -> jax.Array:
+              prefix: str = "ffn_", cim: dict | None = None,
+              read_key: jax.Array | None = None) -> jax.Array:
     g = lambda n: p[prefix + n]
     c = lambda n: None if cim is None else cim.get(prefix + n)
+    mm = lambda a, w, dep: _cim_matmul(a, w, dep, read_key=read_key)
     if cfg.mlp_type == "swiglu":
-        h = (_silu(_cim_matmul(x, g("w_gate"), c("w_gate")))
-             * _cim_matmul(x, g("w_up"), c("w_up")))
+        h = (_silu(mm(x, g("w_gate"), c("w_gate")))
+             * mm(x, g("w_up"), c("w_up")))
     else:
-        h = jax.nn.gelu(_cim_matmul(x, g("w_up"), c("w_up")))
+        h = jax.nn.gelu(mm(x, g("w_up"), c("w_up")))
     h = shard(h, ctx, "batch", "seq", "act_mlp")
-    return _cim_matmul(h, g("w_down"), c("w_down"))
+    return mm(h, g("w_down"), c("w_down"))
 
 
 # ----------------------------- attention ---------------------------------
 
 def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
                positions: jax.Array, cache: dict | None,
-               prefix: str = "", cim: dict | None = None):
+               prefix: str = "", cim: dict | None = None,
+               read_key: jax.Array | None = None):
     g = lambda n: p[prefix + n]
     c = lambda n: None if cim is None else cim.get(prefix + n)
     B, S, D = x.shape
@@ -85,7 +103,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
         w, dep = g(name), c(name)
         if dep is None:
             return jnp.einsum("bsd,dhk->bshk", x, w)
-        return _cim_matmul(x, w, dep).reshape(B, S, *w.shape[-2:])
+        return _cim_matmul(x, w, dep,
+                           read_key=read_key).reshape(B, S, *w.shape[-2:])
 
     q = qkv_proj("wq")
     k = qkv_proj("wk")
@@ -147,7 +166,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     if c("wo") is None:
         y = jnp.einsum("bshk,hkd->bsd", out, g("wo"))
     else:
-        y = _cim_matmul(out.reshape(B, S, -1), g("wo"), c("wo"))
+        y = _cim_matmul(out.reshape(B, S, -1), g("wo"), c("wo"),
+                        read_key=read_key)
     return y, new_cache
 
 
@@ -156,7 +176,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
                 ctx: ShardingCtx, positions: jax.Array,
                 state: dict | None, decode: bool,
-                cim: dict | None = None):
+                cim: dict | None = None,
+                read_key: jax.Array | None = None):
     """Apply one block. Returns (x, new_state_slice, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_state: dict = {}
@@ -164,14 +185,16 @@ def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
 
     if bt == "attn":
         y, cache = attn_apply(p, h, cfg, ctx, positions,
-                              None if state is None else state, cim=cim)
+                              None if state is None else state, cim=cim,
+                              read_key=read_key)
         if cache is not None:
             new_state = cache
     elif bt == "hybrid":
         cache_in = None if state is None else \
             {k: state[k] for k in ("k", "v", "kpos")}
         y_attn, cache = attn_apply(p, h, cfg, ctx, positions, cache_in,
-                                   prefix="attn_", cim=cim)
+                                   prefix="attn_", cim=cim,
+                                   read_key=read_key)
         ssm_in = None if state is None else (state["conv"], state["ssm"])
         if decode:
             y_ssm, (cs, hs) = mamba_decode(p, h, ssm_in, prefix="ssm_")
@@ -211,9 +234,9 @@ def block_apply(bt: str, p: dict, x: jax.Array, cfg: ModelConfig,
     if bt in ("attn", "hybrid") and cfg.mlp_type != "none":
         hf = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
         if cfg.n_experts:
-            yf, aux = moe_ffn(p, hf, cfg, ctx, cim=cim)
+            yf, aux = moe_ffn(p, hf, cfg, ctx, cim=cim, read_key=read_key)
         else:
-            yf = dense_mlp(p, hf, cfg, ctx, cim=cim)
+            yf = dense_mlp(p, hf, cfg, ctx, cim=cim, read_key=read_key)
         x = x + yf
         x = shard(x, ctx, "batch", "seq", "act_embed")
     return x, new_state, aux
@@ -236,11 +259,16 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
                 state: ModelState | None = None,
                 decode: bool = False,
                 return_hidden: bool = False,
-                cim: dict | None = None):
+                cim: dict | None = None,
+                read_key: jax.Array | None = None):
     """Returns (logits_or_hidden, new_state, aux_loss).
 
     ``cim``: optional per-slot CimDeployment tree (stacked over pattern
     repeats) routing projection matmuls through the crossbar path.
+    ``read_key``: optional PRNG key for per-read crossbar conductance
+    noise (one key per forward pass; each deployment decorrelates via
+    its stacked per-repeat ``noise_tag``, so the shared key is safe to
+    closure-capture across the layer scan).  None = noiseless serving.
     """
     if embeds is None:
         x = jnp.take(params["embed"], tokens, axis=0)
@@ -270,7 +298,8 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
             st = xs_t["state"][n] if state is not None else None
             ci = xs_t["cim"][n] if cim is not None else None
             x, ns, a = block_apply(bt, xs_t["params"][n], x, cfg, ctx,
-                                   positions, st, decode, cim=ci)
+                                   positions, st, decode, cim=ci,
+                                   read_key=read_key)
             new_states[n] = ns
             aux = aux + a
         return (x, aux), new_states

@@ -24,7 +24,8 @@ def _silu(x):
     return x * jax.nn.sigmoid(x)
 
 
-def _expert_mm(xe: jax.Array, w: jax.Array, dep, expert_axis: int):
+def _expert_mm(xe: jax.Array, w: jax.Array, dep, expert_axis: int,
+               read_key: jax.Array | None = None):
     """Per-expert matmul, through deployed crossbars when available.
 
     ``xe``: activations with the expert dim at ``expert_axis``; ``dep``
@@ -33,20 +34,36 @@ def _expert_mm(xe: jax.Array, w: jax.Array, dep, expert_axis: int):
     backend-dispatched ``cim_mvm`` over the expert axis keeps every
     expert on its own tile grid — the expert-partitioned deployment of
     ``repro.deploy`` (pipeline ``partition=expert``).
+
+    Experts whose deployment is ``degraded`` (line-open faults past the
+    spare-line budget) fall back to the digital matmul per expert —
+    ``jnp.where`` on the per-expert scalar, since under vmap a
+    ``lax.cond`` would lower to the same both-branches select.
+    ``read_key`` threads per-read conductance noise (per-expert
+    ``noise_tag``s keep the draws independent).
     """
     if dep is None:
         eq = ("ecd,edf->ecf" if expert_axis == 0 else "becd,edf->becf")
         return jnp.einsum(eq, xe, w)
     from repro.kernels.cim_mvm.ops import cim_mvm
 
-    y = jax.vmap(lambda a, d: cim_mvm(a, d),
-                 in_axes=(expert_axis, 0),
-                 out_axes=expert_axis)(xe, dep)
+    def one_expert(a, d, we):
+        y = cim_mvm(a, d, read_key=read_key)
+        if d.degraded is not None:
+            dig = (a.astype(jnp.float32)
+                   @ we.reshape(d.in_dim, d.out_dim).astype(jnp.float32))
+            y = jnp.where(d.degraded > 0, dig, y)
+        return y
+
+    y = jax.vmap(one_expert,
+                 in_axes=(expert_axis, 0, 0),
+                 out_axes=expert_axis)(xe, dep, w)
     return y.astype(xe.dtype)
 
 
 def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
-            prefix: str = "ffn_", cim: dict | None = None):
+            prefix: str = "ffn_", cim: dict | None = None,
+            read_key: jax.Array | None = None):
     """x: (B, S, D) -> (y (B, S, D), aux_loss scalar).
 
     ``cim``: optional per-slot CimDeployment dict; expert banks deploy
@@ -56,7 +73,8 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     Routing, gating and shared experts stay digital.
     """
     if cfg.moe_dispatch == "grouped":
-        return moe_ffn_grouped(p, x, cfg, ctx, prefix, cim=cim)
+        return moe_ffn_grouped(p, x, cfg, ctx, prefix, cim=cim,
+                               read_key=read_key)
     g = lambda n: p[prefix + n]
     c = lambda n: None if cim is None else cim.get(prefix + n)
     B, S, D = x.shape
@@ -93,10 +111,10 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     buf = buf.at[e_s, pos_safe].set(xt[tok_s])
     xe = shard(buf[:, :cap], ctx, "experts", "batch", "act_embed")
 
-    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 0))
-    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 0)
+    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 0, read_key))
+    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 0, read_key)
     h = shard(h, ctx, "experts", "batch", "act_mlp")
-    ye = _expert_mm(h, g("we_down"), c("we_down"), 0)
+    ye = _expert_mm(h, g("we_down"), c("we_down"), 0, read_key)
     ye = shard(ye, ctx, "experts", "batch", "act_embed")
 
     y_tok = ye[e_s, pos_safe] * (keep * w_s)[:, None].astype(ye.dtype)
@@ -113,7 +131,8 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
 
 def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig,
                     ctx: ShardingCtx, prefix: str = "ffn_",
-                    cim: dict | None = None):
+                    cim: dict | None = None,
+                    read_key: jax.Array | None = None):
     """Group-local sort-based dispatch (§Perf optimisation).
 
     The global variant sorts all B*S tokens in one index space, so every
@@ -167,10 +186,10 @@ def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig,
     buf = buf.at[jnp.arange(B)[:, None], e_s, pos_safe].set(x_tok)
     xe = shard(buf[:, :, :cap], ctx, "batch", "experts", None, "act_embed")
 
-    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 1))
-    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 1)
+    h = _silu(_expert_mm(xe, g("we_gate"), c("we_gate"), 1, read_key))
+    h = h * _expert_mm(xe, g("we_up"), c("we_up"), 1, read_key)
     h = shard(h, ctx, "batch", "experts", None, "act_mlp")
-    ye = _expert_mm(h, g("we_down"), c("we_down"), 1)
+    ye = _expert_mm(h, g("we_down"), c("we_down"), 1, read_key)
     ye = shard(ye, ctx, "batch", "experts", None, "act_embed")
 
     y_tok = ye[jnp.arange(B)[:, None], e_s, pos_safe] \

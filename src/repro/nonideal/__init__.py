@@ -2,9 +2,12 @@
 NF engine, and deployment-level fault injection.
 
 The paper's pitch is parasitic-resistance resilience; real crossbars
-additionally suffer stuck-at faults, programming variation, read noise
-and conductance drift (Bhattacharjee et al.; PRUNIX).  This package
-makes those scenarios first-class across every layer of the simulator:
+additionally suffer stuck-at faults, line-open (wordline/bitline)
+structural failures, programming variation — i.i.d. and spatially
+correlated — read noise and conductance drift (Bhattacharjee et al.;
+PRUNIX).  This package makes those scenarios first-class across every
+layer of the simulator (taxonomy and degradation semantics in
+``docs/nonideal.md``):
 
 ==========================  ============================================
 layer                       entry points
@@ -37,17 +40,22 @@ fault-aware planning        :func:`repro.core.manhattan
 of independent terms; every term defaults to "off" and any subset
 composes.  Application order is fixed by the physics and identical in
 all three consumers (conductances, cell values, deployment codes):
-drift scales the programmed ON-state, log-normal variation spreads it,
-stuck-at faults override everything (a pinned device never saw the
-programming pulse, so it carries no variation or drift), read noise
-perturbs the read-back value last.  Fault maps always live in
-**physical** tile coordinates ``(Ti, Tn, rows, cols)`` — defects belong
-to the hardware — and are mapped into logical weight-bit layout only
-through a deployment plan (row permutation + dataflow direction).
+drift scales the programmed ON-state, log-normal variation spreads it
+(the i.i.d. and spatially-correlated terms multiply — two independent
+Gaussian terms of ``ln g``), stuck-at faults override everything (a
+pinned device never saw the programming pulse, so it carries no
+variation or drift), read noise perturbs the read-back value last, and
+line-open faults sever their cells entirely (zero conduction — they
+override even stuck-at states and read noise on the same line).  Fault
+maps always live in **physical** tile coordinates ``(Ti, Tn, rows,
+cols)`` — defects belong to the hardware — and are mapped into logical
+weight-bit layout only through a deployment plan (row permutation +
+dataflow direction).
 
 **PRNG-key discipline.**  Every sampler takes an explicit key and
 derives one sub-key per term with fixed ``jax.random.fold_in`` tags
-(stuck = 0, programming = 1, read = 2).  Consequences callers may rely
+(stuck = 0, programming = 1, read = 2, line opens = 3, correlated
+variation = 4).  Consequences callers may rely
 on: (a) enabling or disabling one term never reshuffles another term's
 draws under the same key; (b) the Monte-Carlo engine's per-sample keys
 are ``jax.random.split(key, n_samples)``, so sample ``s`` of a vmapped
@@ -60,6 +68,7 @@ samples; derive, don't recycle.
 """
 from repro.nonideal.models import (
     HEALTHY,
+    OPEN,
     STUCK_OFF,
     STUCK_ON,
     CellSample,
@@ -68,6 +77,8 @@ from repro.nonideal.models import (
     cell_values,
     conductances_from_masks,
     sample_cell_state,
+    sample_corr_field,
+    sample_line_open,
     sample_stuck,
 )
 from repro.nonideal.montecarlo import (
@@ -84,10 +95,11 @@ from repro.nonideal.weights import (
 )
 
 __all__ = [
-    "HEALTHY", "STUCK_OFF", "STUCK_ON",
+    "HEALTHY", "OPEN", "STUCK_OFF", "STUCK_ON",
     "CellSample", "NonidealModel",
     "apply_to_conductances", "cell_values", "conductances_from_masks",
-    "sample_cell_state", "sample_stuck",
+    "sample_cell_state", "sample_corr_field", "sample_line_open",
+    "sample_stuck",
     "McNfResult", "mc_nf", "mc_nf_oracle", "mc_samples", "summarize",
     "gather_physical", "nonideal_magnitude", "nonideal_weights",
 ]

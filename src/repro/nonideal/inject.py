@@ -19,7 +19,13 @@ nothing extra at generation time:
   consumed by the fused XLA kernel
   (:mod:`repro.kernels.cim_mvm.xla`);
 * **read noise has no deployment-level analogue** (it is per-read) —
-  it is modelled by the Monte-Carlo engine only.
+  the Monte-Carlo engine samples it per cell; the serving path draws a
+  fresh weight-level aggregate per forward call through ``cim_mvm``'s
+  ``read_key`` hook (``CimDeployment.sigma_read`` / ``noise_tag``);
+* **line opens can exhaust the mapping's spare capacity** — when
+  programmed active bits survive on OPEN cells after the remap
+  (:func:`open_bit_overlap_host`), the deployment is marked
+  ``degraded`` and the model layer demotes it to the digital fallback.
 
 All functions mirror :func:`repro.nonideal.weights.gather_physical` in
 numpy: nonideality fields live in physical tile coordinates and are
@@ -35,6 +41,7 @@ import numpy as np
 from repro.core.tiling import CrossbarSpec
 from repro.nonideal.models import (
     HEALTHY,
+    OPEN,
     STUCK_OFF,
     STUCK_ON,
     NonidealModel,
@@ -68,8 +75,10 @@ def sample_deployment_cells(key: jax.Array,
     """
     total = sum(ti * tn for ti, tn in grids.values())
     sample = sample_cell_state(key, (total, spec.rows, spec.cols), model)
-    has_faults = model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0
-    has_gain = model.sigma_program > 0.0 or model.drift_factor != 1.0
+    has_faults = (model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0
+                  or model.has_line_opens)
+    has_gain = (model.sigma_program > 0.0 or model.drift_factor != 1.0
+                or model.sigma_corr > 0.0)
     stuck = np.asarray(sample.stuck) if has_faults else None
     gamma = np.asarray(sample.gamma) if has_gain else None
     out: dict[str, HostCells] = {}
@@ -121,14 +130,34 @@ def perturb_codes_host(codes: np.ndarray, stuck_log: np.ndarray,
 
     ``stuck_log``: (I_pad, N_pad, K) logical-layout cell codes.  Bit
     plane k is code bit ``n_bits - 1 - k`` (high-order first) — exact:
-    a stuck-ON cell reads as a programmed 1, a stuck-OFF cell as a 0.
+    a stuck-ON cell reads as a programmed 1, a stuck-OFF cell as a 0,
+    and a cell on an OPEN line contributes nothing (reads as 0 too).
     """
     shifts = np.uint32(n_bits - 1) - np.arange(n_bits, dtype=np.uint32)
     on = np.bitwise_or.reduce(
         (stuck_log == STUCK_ON).astype(np.uint32) << shifts, axis=-1)
     off = np.bitwise_or.reduce(
-        (stuck_log == STUCK_OFF).astype(np.uint32) << shifts, axis=-1)
+        ((stuck_log == STUCK_OFF) | (stuck_log == OPEN)
+         ).astype(np.uint32) << shifts, axis=-1)
     return (codes | on) & ~off
+
+
+def open_bit_overlap_host(codes: np.ndarray, stuck_log: np.ndarray,
+                          n_bits: int) -> int:
+    """Programmed active bits landing on OPEN (line-open) cells.
+
+    Counts, over the logical layout, magnitude bits that are 1 *and*
+    sit on a severed line — the current the crossbar physically cannot
+    deliver.  Zero means the mapping (e.g. the ``spare_line`` pipeline)
+    absorbed every open line with spare/zero rows and columns; a
+    positive count means spares ran out and the deployment engine
+    demotes the matrix to the digital fallback (``CimDeployment
+    .degraded``).  Evaluate *before* :func:`perturb_codes_host`, which
+    clears exactly these bits.
+    """
+    shifts = np.uint32(n_bits - 1) - np.arange(n_bits, dtype=np.uint32)
+    bits = ((codes[..., None] >> shifts) & 1).astype(bool)
+    return int((bits & (stuck_log == OPEN)).sum())
 
 
 def variation_gain_host(codes: np.ndarray, stuck_log: np.ndarray | None,

@@ -14,7 +14,16 @@ deployment code injector:
 * **read noise** — zero-mean additive conductance noise per read,
   ``g -> g + sigma_read * g_on * N(0, 1)``;
 * **conductance drift** — deterministic power-law decay of the ON-state
-  conductance, ``g_on -> g_on * drift_time ** -drift_nu``.
+  conductance, ``g_on -> g_on * drift_time ** -drift_nu``;
+* **line-open faults** — a whole wordline (row) or bitline (column) is
+  electrically disconnected; every cell on it conducts nothing
+  regardless of its programmed or stuck state (the structural
+  non-ideality the Yale sparse-DNN study finds dominates accuracy
+  loss — arXiv:2201.05229);
+* **correlated programming variation** — a spatially-smooth log-normal
+  gain field over each tile (Gaussian-blurred white noise, unit
+  marginal variance), modelling wafer-/array-level process gradients
+  that i.i.d. cell draws cannot express.
 
 All samplers are PRNG-keyed and fully vectorised over arbitrary leading
 batch dims; the key/composition contract is documented in
@@ -33,11 +42,15 @@ from repro.core.tiling import CrossbarSpec
 # Cell-state codes of a fault map (int8).  Fault maps live in *physical*
 # tile coordinates (ti, tn, row, col) — a property of the hardware,
 # independent of which logical weight the mapping lands on a cell.
-HEALTHY, STUCK_OFF, STUCK_ON = 0, 1, 2
+# OPEN marks a cell on an open (disconnected) wordline or bitline: it
+# conducts *nothing* — below even the HRS leakage a STUCK_OFF cell
+# keeps — and overrides any per-cell stuck state.
+HEALTHY, STUCK_OFF, STUCK_ON, OPEN = 0, 1, 2, 3
 
 # Fixed fold_in tags deriving the per-term sub-keys (see package
 # docstring: enabling one term must never reshuffle another's draws).
 _TAG_STUCK, _TAG_PROGRAM, _TAG_READ = 0, 1, 2
+_TAG_LINE, _TAG_CORR = 3, 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +67,20 @@ class NonidealModel:
     sigma_read: float = 0.0     # additive read noise, in units of g_on
     drift_nu: float = 0.0       # power-law ON-conductance drift exponent
     drift_time: float = 1.0     # read time / programming time t0
+    p_open_wordline: float = 0.0  # whole-row (wordline) open rate
+    p_open_bitline: float = 0.0   # whole-column (bitline) open rate
+    sigma_corr: float = 0.0     # correlated log-normal spread (of ln g)
+    corr_length: float = 4.0    # Gaussian correlation length, in cells
 
     def __post_init__(self):
         if self.p_stuck_off + self.p_stuck_on > 1.0:
             raise ValueError("p_stuck_off + p_stuck_on > 1")
+        for name in ("p_open_wordline", "p_open_bitline"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} not in [0, 1]")
+        if self.sigma_corr > 0.0 and self.corr_length <= 0.0:
+            raise ValueError("corr_length must be > 0 with sigma_corr")
 
     @property
     def drift_factor(self) -> float:
@@ -67,10 +90,15 @@ class NonidealModel:
         return float(self.drift_time ** -self.drift_nu)
 
     @property
+    def has_line_opens(self) -> bool:
+        return self.p_open_wordline > 0.0 or self.p_open_bitline > 0.0
+
+    @property
     def is_ideal(self) -> bool:
         return (self.p_stuck_off == 0.0 and self.p_stuck_on == 0.0
                 and self.sigma_program == 0.0 and self.sigma_read == 0.0
-                and self.drift_nu == 0.0)
+                and self.drift_nu == 0.0 and not self.has_line_opens
+                and self.sigma_corr == 0.0)
 
 
 class CellSample(NamedTuple):
@@ -97,6 +125,50 @@ def sample_stuck(key: jax.Array, shape: tuple[int, ...],
                   HEALTHY)).astype(jnp.int8)
 
 
+def sample_line_open(key: jax.Array, shape: tuple[int, ...],
+                     p_open_wordline: float,
+                     p_open_bitline: float) -> jax.Array:
+    """Line-granular OPEN codes for a (..., rows, cols) population.
+
+    One uniform per wordline (row) and one per bitline (column), drawn
+    per tile over the leading batch dims — every cell on an open line
+    gets OPEN.  The two draws use fixed sub-tags (0: wordlines, 1:
+    bitlines) off the term key, so enabling bitline opens never
+    reshuffles the wordline draw.
+    """
+    rows, cols = shape[-2], shape[-1]
+    wl = jax.random.uniform(jax.random.fold_in(key, 0),
+                            shape[:-1]) < p_open_wordline
+    bl = jax.random.uniform(jax.random.fold_in(key, 1),
+                            shape[:-2] + (cols,)) < p_open_bitline
+    open_ = wl[..., :, None] | bl[..., None, :]
+    return jnp.where(open_, OPEN, HEALTHY).astype(jnp.int8)
+
+
+def sample_corr_field(key: jax.Array, shape: tuple[int, ...],
+                      corr_length: float) -> jax.Array:
+    """Unit-variance Gaussian field, smooth over each tile's (J, K).
+
+    White noise filtered with a separable Gaussian of length-scale
+    ``corr_length`` cells along rows and columns; the filter matrices
+    are L2-row-normalised, so every output cell stays exactly N(0, 1)
+    marginally while neighbouring cells within ~``corr_length`` are
+    strongly correlated.  Leading batch dims (tiles, samples) get
+    independent fields.
+    """
+    rows, cols = shape[-2], shape[-1]
+    eps = jax.random.normal(key, shape)
+
+    def smooth_matrix(n: int) -> jax.Array:
+        d = jnp.arange(n, dtype=jnp.float32)
+        a = jnp.exp(-0.5 * ((d[:, None] - d[None, :])
+                            / jnp.float32(corr_length)) ** 2)
+        return a / jnp.sqrt(jnp.sum(a * a, axis=1, keepdims=True))
+
+    return jnp.einsum("Jj,...jk,Kk->...JK", smooth_matrix(rows), eps,
+                      smooth_matrix(cols))
+
+
 def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
                       model: NonidealModel,
                       stuck: jax.Array | None = None) -> CellSample:
@@ -107,7 +179,9 @@ def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
     composition contract).  Terms with zero rate/spread skip their draw
     and return the identity field.  Pass ``stuck`` to pin a *known*
     fault map (the fault-aware-planning scenario) while variation and
-    read noise remain sampled.
+    read noise remain sampled; a pinned map pins the *whole* structural
+    state — line opens are then the caller's responsibility (overlay
+    :func:`sample_line_open` codes before pinning), not re-drawn here.
     """
     if stuck is None:
         if model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0:
@@ -116,6 +190,13 @@ def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
                                  model.p_stuck_on)
         else:
             stuck = jnp.zeros(shape, jnp.int8)
+        if model.has_line_opens:
+            # Line opens sever the cell from the array: they override
+            # any per-cell stuck state on the same line.
+            line = sample_line_open(jax.random.fold_in(key, _TAG_LINE),
+                                    shape, model.p_open_wordline,
+                                    model.p_open_bitline)
+            stuck = jnp.where(line == OPEN, line, stuck)
     else:
         stuck = jnp.broadcast_to(jnp.asarray(stuck, jnp.int8), shape)
     if model.sigma_program > 0.0:
@@ -123,6 +204,13 @@ def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
             jax.random.fold_in(key, _TAG_PROGRAM), shape))
     else:
         gamma = jnp.ones(shape, jnp.float32)
+    if model.sigma_corr > 0.0:
+        # Correlated variation composes multiplicatively with the
+        # i.i.d. programming spread: ln g picks up two independent
+        # Gaussian terms, one white and one spatially smooth.
+        gamma = gamma * jnp.exp(model.sigma_corr * sample_corr_field(
+            jax.random.fold_in(key, _TAG_CORR), shape,
+            model.corr_length))
     if model.sigma_read > 0.0:
         read = jax.random.normal(jax.random.fold_in(key, _TAG_READ),
                                  shape)
@@ -161,7 +249,10 @@ def apply_to_conductances(active: jax.Array, sample: CellSample,
     g = jnp.where(sample.stuck == STUCK_OFF, g_off, g)
     if model.sigma_read > 0.0:
         g = g + jnp.float32(model.sigma_read) * g_on * sample.read
-    return jnp.maximum(g, 0.0)
+    g = jnp.maximum(g, 0.0)
+    # An OPEN cell sits on a severed line: no conduction path at all,
+    # not even HRS leakage or read noise.
+    return jnp.where(sample.stuck == OPEN, 0.0, g)
 
 
 def cell_values(bits: jax.Array, stuck: jax.Array, gamma: jax.Array,
@@ -170,11 +261,12 @@ def cell_values(bits: jax.Array, stuck: jax.Array, gamma: jax.Array,
 
     Maps programmed bits b in {0, 1} to the normalised conductance-level
     cell value the shift-add arithmetic sees: stuck-ON -> 1, stuck-OFF
-    -> 0, healthy -> ``drift * gamma * b``.  (Read noise has no
-    weight-level analogue — it is a per-read term, modelled only by the
-    circuit-level Monte-Carlo engine.)  All arguments broadcast.
+    and OPEN -> 0, healthy -> ``drift * gamma * b``.  (Read noise has
+    no weight-level analogue — it is a per-read term, modelled by the
+    circuit-level Monte-Carlo engine and the serving-path read-noise
+    hook.)  All arguments broadcast.
     """
     drift = 1.0 if model is None else model.drift_factor
     c = bits.astype(jnp.float32) * gamma * jnp.float32(drift)
     c = jnp.where(stuck == STUCK_ON, 1.0, c)
-    return jnp.where(stuck == STUCK_OFF, 0.0, c)
+    return jnp.where((stuck == STUCK_OFF) | (stuck == OPEN), 0.0, c)

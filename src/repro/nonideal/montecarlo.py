@@ -33,7 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiling import CrossbarSpec
-from repro.crossbar.batched import measured_nf_conductances
+from repro.crossbar.batched import (
+    measured_nf_conductances,
+    measured_nf_conductances_checked,
+)
 from repro.nonideal.models import (
     NonidealModel,
     apply_to_conductances,
@@ -53,8 +56,12 @@ class McNfResult(NamedTuple):
                   digital shift-add actually accumulates).
     residual:     (S, ...) final relative CG residual per tile.
     iterations:   () shared iteration count of the fused loop.
-    unconverged:  () tiles that missed tol (0 for the batched engine
-                  unless maxiter was hit).
+    unconverged:  () tiles that missed tol or produced non-finite
+                  output (NaN/Inf-aware — a diverged circuit counts as
+                  unconverged, never as a silent zero).
+    report:       the solver watchdog's :class:`repro.crossbar.batched
+                  .SolverReport` (converged mask, escalations), or None
+                  for the oracle path.
     """
 
     nf_total: jax.Array
@@ -62,6 +69,7 @@ class McNfResult(NamedTuple):
     residual: jax.Array
     iterations: jax.Array
     unconverged: jax.Array
+    report: object = None
 
 
 def summarize(x) -> dict:
@@ -76,6 +84,10 @@ def summarize(x) -> dict:
 
 
 def _weighted_err(currents, ideal, col_weights):
+    """Column-weighted error; ``col_weights`` may be one global
+    ``(cols,)`` vector or per-tile ``(..., cols)`` weights (the
+    ``physical_column_significance`` grid of a column-permuted plan —
+    it broadcasts against the ``(S, ..., cols)`` currents)."""
     di = jnp.abs(currents - ideal)
     if col_weights is not None:
         w = jnp.asarray(col_weights, di.dtype)
@@ -121,32 +133,45 @@ def mc_nf(masks: jax.Array, spec: CrossbarSpec, model: NonidealModel,
     logical "tiles" mesh when ``ctx`` is given (each device then solves
     its slice of the sample x tile ensemble).  Returns per-sample
     per-tile distributions; reduce with :func:`summarize`.
+
+    ``col_weights`` may be global ``(cols,)`` or per-tile ``(...,
+    cols)`` matching the mask batch dims (required for correctness
+    under column-permuted pipelines, where bit significance varies per
+    tile).  Every solve runs under the convergence watchdog: failed
+    tiles are escalated (f64 / Jacobi reruns) and the surviving
+    failures are reported in ``unconverged`` / ``report`` — a
+    non-converged circuit never masquerades as a good NF number.
     """
     batch_shape = masks.shape[:-2]
     flat = masks.reshape((-1,) + masks.shape[-2:])
     if stuck is not None:
         stuck = jnp.asarray(stuck, jnp.int8).reshape(flat.shape)
+    if col_weights is not None:
+        col_weights = jnp.asarray(col_weights)
+        if col_weights.ndim > 1:
+            col_weights = col_weights.reshape(
+                (-1, col_weights.shape[-1]))
     g, g_ref = mc_samples(key, flat, spec, model, n_samples, stuck)
 
     if ctx is not None:
         from repro.distributed.solver_shard import (
-            measured_nf_conductances_sharded,
+            measured_nf_conductances_sharded_checked,
         )
-        res = measured_nf_conductances_sharded(
+        res, report = measured_nf_conductances_sharded_checked(
             g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
             ctx=ctx, chain_impl=chain_impl)
         unconverged = res.unconverged
     else:
-        res = measured_nf_conductances(
+        res, report = measured_nf_conductances_checked(
             g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
             chain_impl=chain_impl)
-        unconverged = jnp.sum((res.residual > 1e-12).astype(jnp.int32))
+        unconverged = report.n_failed.astype(jnp.int32)
 
     werr = _weighted_err(res.currents, res.ideal, col_weights)
     shape = (n_samples,) + batch_shape
     return McNfResult(res.nf_total.reshape(shape), werr.reshape(shape),
                       res.residual.reshape(shape), res.iterations,
-                      unconverged)
+                      unconverged, report)
 
 
 def mc_nf_oracle(masks: jax.Array, spec: CrossbarSpec,
@@ -185,6 +210,8 @@ def mc_nf_oracle(masks: jax.Array, spec: CrossbarSpec,
     # outputs back to f32 outside the enable_x64 scope.
     shape = (n_samples,) + batch_shape
     resid = np.stack(resid).reshape(shape)
+    # ~(resid <= tol) instead of (resid > tol): NaN residuals must
+    # count as unconverged, not slip through a False comparison.
     return McNfResult(np.stack(nf).reshape(shape),
                       np.stack(werr).reshape(shape), resid,
-                      np.int64(iters), int((resid > 1e-12).sum()))
+                      np.int64(iters), int((~(resid <= 1e-12)).sum()))

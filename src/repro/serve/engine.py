@@ -15,7 +15,12 @@ ablation.  Passing ``nonideal`` (a :class:`repro.nonideal.models
 .NonidealModel`) additionally serves on *imperfect devices*: stuck-at
 faults and programming variation are sampled once per ``nonideal_seed``
 at deployment, folded into the deployment codes / per-weight gain, and
-(with ``fault_aware``) steered around by the MDM row sort.
+(with ``fault_aware``) steered around by the MDM row sort.  Line-open
+faults that outrun the mapping's spare capacity demote the affected
+matrices to the digital fallback (``CimDeployment.degraded``); the
+demotions and their reasons are listed in ``deploy_report["degraded"]``.
+A ``nonideal.sigma_read > 0`` additionally draws fresh per-read
+conductance noise on every prefill/decode forward pass.
 Both prefill and decode donate the decode state: prefill consumes the
 freshly initialised cache and decode consumes its predecessor's, so
 there is no full cache copy at the prefill->decode handoff.
@@ -40,12 +45,15 @@ def sample_tokens(logits: jax.Array, key: jax.Array,
 
 
 def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
-    """(params, state, tokens|embeds, key[, cim]) -> (first_token, state)."""
+    """(params, state, tokens|embeds, key[, cim, read_key]) ->
+    (first_token, state).  ``read_key`` draws fresh per-read crossbar
+    conductance noise for this forward pass (None = noiseless)."""
 
-    def prefill(params, state, inputs, key, cim=None):
+    def prefill(params, state, inputs, key, cim=None, read_key=None):
         kw = {"embeds": inputs} if cfg.frontend else {"tokens": inputs}
         logits, state, _ = apply_model(params, cfg, ctx, state=state,
-                                       decode=False, cim=cim, **kw)
+                                       decode=False, cim=cim,
+                                       read_key=read_key, **kw)
         tok = sample_tokens(logits[:, -1], key, temperature)
         return tok, state
 
@@ -54,12 +62,15 @@ def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
 
 def make_decode_step(cfg: ModelConfig, ctx: ShardingCtx,
                      temperature: float = 0.0):
-    """(params, state, token (B,), key[, cim]) -> (next_token, state)."""
+    """(params, state, token (B,), key[, cim, read_key]) ->
+    (next_token, state).  ``read_key`` draws fresh per-read crossbar
+    conductance noise for this step (None = noiseless)."""
 
-    def decode_step(params, state, token, key, cim=None):
+    def decode_step(params, state, token, key, cim=None, read_key=None):
         logits, state, _ = apply_model(params, cfg, ctx,
                                        tokens=token[:, None], state=state,
-                                       decode=True, cim=cim)
+                                       decode=True, cim=cim,
+                                       read_key=read_key)
         tok = sample_tokens(logits[:, 0], key, temperature)
         return tok, state
 
@@ -95,6 +106,12 @@ class ServeEngine:
                 params, cfg, cache=cache, ctx=self.ctx,
                 nonideal=nonideal, nonideal_key=nonideal_seed,
                 fault_aware=fault_aware, pipeline=pipeline)
+        # Per-read conductance noise: only drawn when the nonideal model
+        # asks for it — otherwise read_key stays None and both
+        # lowerables trace the bit-identical noiseless graph.
+        self._read_noise = bool(self.cim is not None
+                                and nonideal is not None
+                                and nonideal.sigma_read > 0.0)
         # Donate the state on both lowerables: prefill writes the whole
         # cache anyway, so aliasing the fresh buffers avoids one full
         # cache copy at the prefill->decode handoff.
@@ -107,15 +124,24 @@ class ServeEngine:
     def generate(self, prompts: jax.Array, n_tokens: int,
                  seed: int = 0) -> jax.Array:
         """prompts: (B, S) tokens (or (B, S, D) embeds for stub frontends).
-        Returns (B, n_tokens) generated ids."""
+        Returns (B, n_tokens) generated ids.
+
+        With per-read noise enabled (``nonideal.sigma_read > 0``) every
+        forward pass — the prefill and each decode step — draws fresh
+        crossbar read noise from a key forked off that step's sampling
+        key; generation stays deterministic per ``seed``.
+        """
         B = prompts.shape[0]
         state = init_decode_state(self.cfg, B, self.max_seq)
         key = jax.random.PRNGKey(seed)
+        rk = lambda k: jax.random.fold_in(k, 1) if self._read_noise else None
         key, k0 = jax.random.split(key)
-        tok, state = self._prefill(self.params, state, prompts, k0, self.cim)
+        tok, state = self._prefill(self.params, state, prompts, k0,
+                                   self.cim, rk(k0))
         out = [tok]
         for _ in range(n_tokens - 1):
             key, k = jax.random.split(key)
-            tok, state = self._decode(self.params, state, tok, k, self.cim)
+            tok, state = self._decode(self.params, state, tok, k,
+                                      self.cim, rk(k))
             out.append(tok)
         return jnp.stack(out, axis=1)

@@ -145,11 +145,15 @@ def test_benchmark_audit_flags_nightly_without_benchmarks():
 def test_resolve_only_by_name_module_and_error():
     import benchmarks.run as run
 
+    # An exact registered-name match wins even when the token is also
+    # a module name (fault_tolerance backs fault_line_open too; the
+    # nightly lines must not double-run the sweep) ...
     assert [b.name for b in run.resolve_only("fault_tolerance")] \
         == ["fault_tolerance"]
-    # module name fans out to every bench it backs
     assert [b.name for b in run.resolve_only("solver_throughput")] \
-        == ["solver_throughput", "solver_throughput_32x32"]
+        == ["solver_throughput"]
+    # ... and a pure module token still fans out to every bench it
+    # backs.
     assert [b.name for b in run.resolve_only("hypothesis_fit")] \
         == ["manhattan_hypothesis_fit"]
     with pytest.raises(KeyError, match="unknown benchmark"):

@@ -1,0 +1,603 @@
+"""Structural-fault resilience: line opens, correlated variation,
+spare-line remapping, graceful degradation, the solver convergence
+watchdog, per-read noise, and plan-cache corruption tolerance.
+
+The contracts under test: (a) line-open faults act at line granularity
+with the composition/PRNG discipline of the other nonideality terms,
+and OPEN is stronger than STUCK_OFF; (b) the ``spare_line`` pipeline
+steers dense logical lines off severed physical lines and reduces to
+the faultless xchangr+mdm plan when no map is supplied; (c) when spare
+capacity runs out the deployment is marked degraded and *served through
+the digital fallback* rather than producing structurally wrong crossbar
+output; (d) a non-converged or NaN solve can never masquerade as a good
+NF number — the watchdog flags it, escalates, and reports honestly;
+(e) per-read noise is keyed, per-deployment decorrelated, and
+bit-identical to the noiseless path when no key is supplied; (f) a
+truncated or corrupt plan-cache entry is a miss, not a crash.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import manhattan
+from repro.core.bitslice import bitslice
+from repro.core.mdm import placed_masks, plan_from_bits
+from repro.core.tiling import CrossbarSpec
+from repro.mapping import named_pipelines
+from repro.nonideal import (
+    OPEN,
+    STUCK_OFF,
+    STUCK_ON,
+    NonidealModel,
+    apply_to_conductances,
+    mc_nf,
+    sample_cell_state,
+    sample_corr_field,
+    sample_line_open,
+)
+from repro.nonideal.models import CellSample, cell_values
+
+SPEC = CrossbarSpec(rows=16, cols=16, n_bits=8)
+_P = named_pipelines()
+
+
+def rand_masks(key, t=3, j=16, k=16, p=0.25):
+    return (jax.random.uniform(key, (t, j, k)) < p).astype(jnp.float32)
+
+
+# --------------------------- line-open sampler ----------------------------
+
+def test_sample_line_open_is_line_granular():
+    """OPEN cells must decompose exactly into whole open wordlines and
+    whole open bitlines (per tile), at the requested rates."""
+    s = np.asarray(sample_line_open(jax.random.PRNGKey(0),
+                                    (400, 32, 32), 0.1, 0.05))
+    assert set(np.unique(s)) <= {0, OPEN}
+    is_open = s == OPEN
+    wl = is_open.all(axis=-1)          # (T, rows) fully-open wordlines
+    bl = is_open.all(axis=-2)          # (T, cols) fully-open bitlines
+    np.testing.assert_array_equal(
+        is_open, wl[:, :, None] | bl[:, None, :])
+    assert abs(wl.mean() - 0.1) < 0.02
+    assert abs(bl.mean() - 0.05) < 0.015
+
+
+def test_sample_line_open_subtag_independence():
+    """Enabling bitline opens must not reshuffle the wordline draw
+    (fixed sub-tags off the line-term key)."""
+    key = jax.random.PRNGKey(1)
+    a = np.asarray(sample_line_open(key, (100, 16, 16), 0.1, 0.0)) == OPEN
+    b = np.asarray(sample_line_open(key, (100, 16, 16), 0.1, 0.4)) == OPEN
+    # Every cell open in the wordline-only draw stays open, and the set
+    # of fully-open wordlines is unchanged by the bitline term.
+    assert b[a].all()
+    np.testing.assert_array_equal(a.all(axis=-1), b.all(axis=-1))
+
+
+def test_sample_cell_state_line_opens_override_stuck():
+    key = jax.random.PRNGKey(2)
+    shape = (50, 16, 16)
+    model = NonidealModel(p_stuck_on=0.5, p_open_wordline=0.2,
+                          sigma_program=0.1)
+    s = sample_cell_state(key, shape, model)
+    stuck = np.asarray(s.stuck)
+    open_rows = (stuck == OPEN).all(axis=-1)
+    assert open_rows.any()
+    # No stuck code survives on an open line.
+    assert (stuck[(stuck == OPEN)] == OPEN).all()
+    # Composition: the non-open cells carry exactly the draws of the
+    # opens-free model (fixed fold_in tags).
+    base = sample_cell_state(key, shape, NonidealModel(
+        p_stuck_on=0.5, sigma_program=0.1))
+    keep = stuck != OPEN
+    np.testing.assert_array_equal(stuck[keep],
+                                  np.asarray(base.stuck)[keep])
+    np.testing.assert_array_equal(np.asarray(s.gamma),
+                                  np.asarray(base.gamma))
+
+
+def test_open_cells_conduct_nothing():
+    """OPEN beats STUCK_OFF: zero conductance — no HRS leakage, no read
+    noise — and zero cell value in the Eq-17 evaluator."""
+    key = jax.random.PRNGKey(3)
+    masks = rand_masks(key, t=2)
+    model = NonidealModel(p_open_wordline=0.3, p_open_bitline=0.2,
+                          sigma_read=0.5, sigma_program=0.2)
+    s = sample_cell_state(key, masks.shape, model)
+    g = np.asarray(apply_to_conductances(masks, s, SPEC, model))
+    stuck = np.asarray(s.stuck)
+    assert (stuck == OPEN).any()
+    assert (g[stuck == OPEN] == 0.0).all()
+    # STUCK_OFF keeps the HRS leakage — strictly more than OPEN.
+    off = CellSample(jnp.full(masks.shape, STUCK_OFF, jnp.int8),
+                     jnp.ones(masks.shape, jnp.float32),
+                     jnp.zeros(masks.shape, jnp.float32))
+    g_off = np.asarray(apply_to_conductances(masks, off, SPEC,
+                                             NonidealModel()))
+    assert (g_off > 0).all()
+    cv = np.asarray(cell_values(masks, s.stuck, s.gamma, model))
+    assert (cv[stuck == OPEN] == 0.0).all()
+
+
+# ------------------------- correlated variation ---------------------------
+
+def test_corr_field_unit_marginal_and_smooth():
+    f = np.asarray(sample_corr_field(jax.random.PRNGKey(4),
+                                     (3000, 16, 16), 4.0))
+    assert abs(f.mean()) < 0.02
+    assert abs(f.var() - 1.0) < 0.05
+    # Neighbouring cells are strongly correlated, distant ones much
+    # less (Gaussian kernel, length 4): interior columns only, to stay
+    # clear of the normalisation edge effects.
+    near = (f[:, :, 4:-5] * f[:, :, 5:-4]).mean()
+    far = (f[:, :, :4] * f[:, :, 12:]).mean()
+    assert near > 0.9
+    assert far < 0.5
+    assert near - far > 0.3
+
+
+def test_corr_variation_composes_with_iid_spread():
+    key = jax.random.PRNGKey(5)
+    shape = (200, 16, 16)
+    a = sample_cell_state(key, shape, NonidealModel(
+        p_stuck_off=0.1, sigma_program=0.2))
+    b = sample_cell_state(key, shape, NonidealModel(
+        p_stuck_off=0.1, sigma_program=0.2, sigma_corr=0.3))
+    # Enabling the correlated term leaves the other draws untouched...
+    np.testing.assert_array_equal(np.asarray(a.stuck),
+                                  np.asarray(b.stuck))
+    # ...and multiplies gamma by exactly exp(sigma_corr * field) with
+    # the field drawn off the fixed _TAG_CORR sub-key.
+    from repro.nonideal.models import _TAG_CORR
+
+    z = np.log(np.asarray(b.gamma) / np.asarray(a.gamma)) / 0.3
+    field = np.asarray(sample_corr_field(
+        jax.random.fold_in(key, _TAG_CORR), shape, 4.0))
+    np.testing.assert_allclose(z, field, atol=1e-4)
+
+
+# ------------------------- spare-line remapping ---------------------------
+
+def test_spare_line_orders_reduce_to_plain_without_faults():
+    for seed in (0, 7):
+        m = rand_masks(jax.random.PRNGKey(seed), t=1)[0]
+        z = jnp.zeros(m.shape, jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(manhattan.optimal_row_order(m)),
+            np.asarray(manhattan.fault_aware_row_order(
+                m, z, SPEC.nf_unit, open_penalty=4.0)))
+        np.testing.assert_array_equal(
+            np.asarray(manhattan.optimal_col_order(m)),
+            np.asarray(manhattan.fault_aware_col_order(
+                m, z, SPEC.nf_unit, open_penalty=4.0)))
+
+
+def test_spare_line_col_order_steers_off_open_bitline():
+    m = rand_masks(jax.random.PRNGKey(1), t=1)[0]
+    cdens = np.asarray(m.sum(axis=0))
+    stuck = jnp.zeros(m.shape, jnp.int8).at[:, 0].set(OPEN)
+    perm = np.asarray(manhattan.fault_aware_col_order(
+        m, stuck, SPEC.nf_unit, open_penalty=4.0))
+    assert sorted(perm.tolist()) == list(range(m.shape[1]))
+    # The severed bitline (physical column 0) hosts the sparsest
+    # logical column; the densest takes the next position.
+    assert cdens[perm[0]] == cdens.min()
+    assert cdens[perm[1]] == cdens.max()
+
+
+def test_spare_line_plan_reduces_to_xchangr_without_faults():
+    w = jax.random.laplace(jax.random.PRNGKey(2), (64, 8)) * 0.01
+    sliced = bitslice(w, SPEC.n_bits)
+    a = plan_from_bits(sliced.bits, sliced.scale, SPEC, _P["spare_line"])
+    b = plan_from_bits(sliced.bits, sliced.scale, SPEC, _P["xchangr"])
+    np.testing.assert_array_equal(np.asarray(a.row_perm),
+                                  np.asarray(b.row_perm))
+    np.testing.assert_array_equal(np.asarray(a.col_perm),
+                                  np.asarray(b.col_perm))
+
+
+def test_spare_line_cache_token_carries_parameters():
+    """The open_penalty surcharge is behavioural: it must enter the
+    plan-cache key (a reparametrised strategy can never silently serve
+    another's cached plan)."""
+    from repro.mapping import SpareLineCols, SpareLineRows
+
+    tok = _P["spare_line"].cache_token()
+    assert tok.startswith("pipe:")
+    hot = _P["spare_line"].replace(rows=SpareLineRows(open_penalty=9.0))
+    assert hot.cache_token() != tok
+    hot = _P["spare_line"].replace(cols=SpareLineCols(open_penalty=9.0))
+    assert hot.cache_token() != tok
+
+
+def test_spare_line_beats_fault_aware_under_line_opens():
+    """Tier-1 version of the fault_line_open acceptance bar: under
+    known open lines, row+column spare-line remapping must cut both the
+    measured NF and the programmed bits lost to severed lines vs the
+    row-only fault-aware sort (which cannot move columns)."""
+    spec = CrossbarSpec(rows=32, cols=32, n_bits=8)
+    w = jax.random.laplace(jax.random.PRNGKey(0), (64, 16)) * 0.01
+    sliced = bitslice(w, spec.n_bits)
+    ti, tn = spec.grid(*w.shape)
+    T = ti * tn
+    stuck = sample_line_open(jax.random.PRNGKey(3),
+                             (ti, tn, spec.rows, spec.cols), 0.06, 0.06)
+    model = NonidealModel(p_open_wordline=0.06, p_open_bitline=0.06)
+    out = {}
+    for name in ("fault_aware", "spare_line"):
+        plan = plan_from_bits(sliced.bits, sliced.scale, spec,
+                              _P[name], stuck)
+        placed = placed_masks(sliced.bits, plan, spec)
+        flat = placed.reshape(T, spec.rows, spec.cols)
+        sflat = jnp.asarray(stuck).reshape(T, spec.rows, spec.cols)
+        res = mc_nf(flat, spec, model, 2, jax.random.PRNGKey(7),
+                    stuck=sflat, precision="f64")
+        out[name] = (float(np.mean(np.asarray(res.nf_total))),
+                     int(jnp.sum((flat > 0) & (sflat == OPEN))))
+    assert out["spare_line"][0] < out["fault_aware"][0]
+    assert out["spare_line"][1] < out["fault_aware"][1]
+
+
+# ------------------------- convergence watchdog ---------------------------
+
+def test_watchdog_all_converged_on_standard_population():
+    from repro.crossbar.batched import measured_nf_batched_checked
+
+    masks = rand_masks(jax.random.PRNGKey(0), t=6)
+    res, report = measured_nf_batched_checked(masks, SPEC,
+                                              precision="mixed")
+    assert report.all_converged
+    assert report.escalations == 0
+    assert int(report.n_failed) == 0
+    assert np.isfinite(np.asarray(res.nf_total)).all()
+
+
+def test_watchdog_flags_starved_budget_honestly():
+    """A deliberately tiny iteration budget must be *reported*, never
+    silently returned as a good NF."""
+    from repro.crossbar.batched import measured_nf_batched_checked
+
+    masks = rand_masks(jax.random.PRNGKey(1), t=4)
+    res, report = measured_nf_batched_checked(
+        masks, SPEC, maxiter=1, precision="f64", escalate=False)
+    assert not report.all_converged
+    assert int(report.n_failed) > 0
+    assert report.escalations == 0
+
+
+def test_watchdog_escalation_recovers_f32_tolerance_stall():
+    """float32 CG stalls near its epsilon and cannot reach tol=1e-12;
+    the ladder's f64 rerun must recover every tile and say so."""
+    from repro.crossbar.batched import measured_nf_batched_checked
+
+    masks = rand_masks(jax.random.PRNGKey(2), t=4)
+    _, unescalated = measured_nf_batched_checked(
+        masks, SPEC, precision="f32", escalate=False)
+    assert not unescalated.all_converged
+    res, report = measured_nf_batched_checked(masks, SPEC,
+                                              precision="f32")
+    assert report.all_converged
+    assert report.escalations >= 1
+    assert int(report.n_failed) == 0
+    # The patched-in rerun matches the straight f64 answer.
+    ref, _ = measured_nf_batched_checked(masks, SPEC, precision="f64")
+    np.testing.assert_allclose(np.asarray(res.nf_total),
+                               np.asarray(ref.nf_total), rtol=1e-9)
+
+
+def test_watchdog_degenerate_tiles_no_nan_masquerade():
+    """All-stuck-OFF, zero-drive and fully-severed (all-OPEN, zero
+    conductance) tiles: wherever the report claims convergence the NF
+    must be finite, and failures must be counted — never NaN passed
+    off as converged."""
+    from repro.crossbar.batched import measured_nf_conductances_checked
+
+    g_on, g_off = 1.0 / SPEC.r_on, 1.0 / SPEC.r_off
+    rng = np.random.default_rng(0)
+    normal = np.where(rng.random((16, 16)) < 0.3, g_on, g_off)
+    all_off = np.full((16, 16), g_off)     # every cell stuck at HRS
+    severed = np.zeros((16, 16))           # every line open
+    g = jnp.asarray(np.stack([normal, all_off, severed]), jnp.float32)
+    res, report = measured_nf_conductances_checked(g, SPEC)
+    conv = np.asarray(report.converged)
+    nf = np.asarray(res.nf_total)
+    assert conv.shape == (3,)
+    assert conv[0] and conv[1]
+    assert np.isfinite(nf[conv]).all()
+    assert int(report.n_failed) == int((~conv).sum())
+
+
+def test_watchdog_zero_drive_input_converges_finite():
+    from repro.crossbar.batched import measured_nf_batched_checked
+
+    masks = rand_masks(jax.random.PRNGKey(3), t=2)
+    res, report = measured_nf_batched_checked(
+        masks, SPEC, v_in=jnp.zeros((16,)))
+    assert report.all_converged
+    assert np.isfinite(np.asarray(res.nf_total)).all()
+
+
+def test_watchdog_nan_conductance_reported_honestly():
+    """A NaN tile can never converge; escalation runs, fails, and the
+    report says so — without contaminating the healthy tiles."""
+    from repro.crossbar.batched import measured_nf_conductances_checked
+
+    masks = np.asarray(rand_masks(jax.random.PRNGKey(4), t=3))
+    g = np.where(masks > 0, 1.0 / SPEC.r_on, 1.0 / SPEC.r_off)
+    g[1, 3, 3] = np.nan
+    res, report = measured_nf_conductances_checked(jnp.asarray(g), SPEC)
+    conv = np.asarray(report.converged)
+    np.testing.assert_array_equal(conv, [True, False, True])
+    assert report.escalations >= 1
+    assert int(report.n_failed) == 1
+    assert np.isfinite(np.asarray(res.nf_total)[conv]).all()
+
+
+def test_measured_nf_checked_single_tile_scalar_report():
+    from repro.crossbar.solver import measured_nf_checked
+
+    m = rand_masks(jax.random.PRNGKey(5), t=1)[0]
+    res, report = measured_nf_checked(m, SPEC)
+    assert np.asarray(report.converged).shape == ()
+    assert bool(report.converged)
+    assert np.asarray(res.nf_total).shape == ()
+
+
+def test_mc_nf_surfaces_solver_report():
+    masks = rand_masks(jax.random.PRNGKey(6))
+    res = mc_nf(masks, SPEC, NonidealModel(p_stuck_off=0.05), 2,
+                jax.random.PRNGKey(0), precision="mixed")
+    assert res.report is not None
+    assert res.report.all_converged
+    assert int(res.unconverged) == int(res.report.n_failed)
+
+
+# ------------------- graceful degradation + serving -----------------------
+
+def test_open_bit_overlap_host_counts_programmed_bits():
+    from repro.nonideal.inject import open_bit_overlap_host
+
+    codes = np.array([[0b1010]], np.uint32)        # planes 0,2 are 1
+    healthy = np.zeros((1, 1, 4), np.int8)
+    assert open_bit_overlap_host(codes, healthy, 4) == 0
+    on_one = healthy.copy()
+    on_one[0, 0, 0] = OPEN                         # plane 0: bit is 1
+    assert open_bit_overlap_host(codes, on_one, 4) == 1
+    on_zero = healthy.copy()
+    on_zero[0, 0, 1] = OPEN                        # plane 1: bit is 0
+    assert open_bit_overlap_host(codes, on_zero, 4) == 0
+    both = healthy.copy()
+    both[0, 0, :] = OPEN                           # all planes severed
+    assert open_bit_overlap_host(codes, both, 4) == 2
+
+
+def test_cim_matmul_demotes_degraded_deployment():
+    from repro.kernels.cim_mvm.ops import deploy
+    from repro.models.model import _cim_matmul
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 4)) * 0.2
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    dep, _ = deploy(w, SPEC, "mdm")
+    healthy = dataclasses.replace(dep, degraded=jnp.int32(0))
+    broken = dataclasses.replace(dep, degraded=jnp.int32(7))
+    np.testing.assert_array_equal(
+        np.asarray(_cim_matmul(x, w, healthy)),
+        np.asarray(_cim_matmul(x, w, dep)))
+    np.testing.assert_allclose(np.asarray(_cim_matmul(x, w, broken)),
+                               np.asarray(x @ w), rtol=1e-6)
+
+
+def test_expert_mm_demotes_only_degraded_expert():
+    from repro.kernels.cim_mvm.ops import cim_mvm, deploy
+    from repro.models.moe import _expert_mm
+
+    ws = [jax.random.normal(jax.random.PRNGKey(e), (32, 4)) * 0.2
+          for e in range(2)]
+    deps = []
+    for e, we in enumerate(ws):
+        d, _ = deploy(we, SPEC, "mdm")
+        deps.append(dataclasses.replace(
+            d, degraded=jnp.int32(5 if e == 0 else 0)))
+    dep = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *deps)
+    xe = jax.random.normal(jax.random.PRNGKey(9), (2, 3, 32))
+    w = jnp.stack(ws)
+    y = _expert_mm(xe, w, dep, 0)
+    np.testing.assert_allclose(np.asarray(y[0]),
+                               np.asarray(xe[0] @ ws[0]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y[1]),
+                               np.asarray(cim_mvm(xe[1], deps[1])),
+                               rtol=1e-6)
+
+
+def _serve_cfg(mode="spare_line"):
+    from repro.configs.base import CimConfig, ModelConfig
+
+    return ModelConfig(
+        name="cim-robustness-test", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, block_pattern=("attn",),
+        remat="none", dtype="float32", attn_chunk=32,
+        cim=CimConfig(enabled=True, mode=mode, rows=16, cols=16,
+                      n_bits=4))
+
+
+def test_serve_engine_degrades_gracefully_under_heavy_opens():
+    """Spares exhausted end-to-end: heavy line opens past what the
+    spare-line remap can absorb must mark deployments degraded, report
+    them, and still serve (digital fallback) — finite, deterministic
+    generation, with per-read noise armed on the surviving crossbars."""
+    from repro.deploy import PlanCache
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = _serve_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = NonidealModel(p_open_wordline=0.15, p_open_bitline=0.10,
+                          sigma_read=0.03)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    with tempfile.TemporaryDirectory() as d:
+        eng = ServeEngine(cfg, params, max_seq=64,
+                          plan_cache=PlanCache(d), nonideal=model,
+                          nonideal_seed=3)
+        assert eng.deploy_report["n_degraded"] > 0
+        for reason in eng.deploy_report["degraded"].values():
+            assert "digital fallback" in reason
+        out = np.asarray(eng.generate(prompts, 4))
+        assert out.shape == (2, 4)
+        assert (out >= 0).all() and (out < cfg.vocab_size).all()
+        # Same seed => same fault map, same read-noise keys: the run
+        # is reproducible across engines.
+        eng2 = ServeEngine(cfg, params, max_seq=64,
+                           plan_cache=PlanCache(d), nonideal=model,
+                           nonideal_seed=3)
+        np.testing.assert_array_equal(
+            out, np.asarray(eng2.generate(prompts, 4)))
+
+
+def test_serve_engine_no_opens_means_no_degradation():
+    from repro.models.model import init_params
+    from repro.serve import ServeEngine
+
+    cfg = _serve_cfg(mode="mdm")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    model = NonidealModel(p_stuck_off=0.02, sigma_program=0.05)
+    eng = ServeEngine(cfg, params, max_seq=64, nonideal=model,
+                      nonideal_seed=3)
+    assert eng.deploy_report["n_degraded"] == 0
+    assert eng.deploy_report["degraded"] == {}
+
+
+# ----------------------------- per-read noise -----------------------------
+
+def _noisy_dep(sigma=0.05, tag=0):
+    from repro.kernels.cim_mvm.ops import deploy
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 4)) * 0.2
+    dep, _ = deploy(w, SPEC, "mdm")
+    return dataclasses.replace(dep, sigma_read=sigma,
+                               noise_tag=jnp.int32(tag))
+
+
+def test_read_noise_keyed_deterministic_and_decorrelated():
+    from repro.kernels.cim_mvm.ops import cim_mvm
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    dep = _noisy_dep()
+    clean = dataclasses.replace(dep, sigma_read=0.0, noise_tag=None)
+    # No key: bit-identical to the noiseless deployment.
+    np.testing.assert_array_equal(np.asarray(cim_mvm(x, dep)),
+                                  np.asarray(cim_mvm(x, clean)))
+    k = jax.random.PRNGKey(7)
+    y1 = np.asarray(cim_mvm(x, dep, read_key=k))
+    assert not np.array_equal(y1, np.asarray(cim_mvm(x, clean)))
+    # Deterministic per key, fresh per key.
+    np.testing.assert_array_equal(y1, np.asarray(
+        cim_mvm(x, dep, read_key=k)))
+    assert not np.array_equal(y1, np.asarray(
+        cim_mvm(x, dep, read_key=jax.random.PRNGKey(8))))
+    # The per-deployment tag decorrelates matrices under one shared key.
+    other = dataclasses.replace(dep, noise_tag=jnp.int32(1))
+    assert not np.array_equal(y1, np.asarray(
+        cim_mvm(x, other, read_key=k)))
+    # The perturbation is noise, not corruption.
+    ref = np.asarray(cim_mvm(x, clean))
+    assert float(np.max(np.abs(y1 - ref))) < 0.5 * float(
+        np.max(np.abs(ref)) + 1e-9)
+
+
+def test_read_noise_refused_outside_xla_path():
+    from repro.kernels.cim_mvm.ops import cim_mvm
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    dep = _noisy_dep()
+    with pytest.raises(ValueError, match="read noise"):
+        cim_mvm(x, dep, read_key=jax.random.PRNGKey(0),
+                impl="interpret")
+
+
+# ------------------------ plan-cache robustness ---------------------------
+
+def _plan_and_cache(tmpdir, pipe):
+    from repro.deploy import PlanCache
+    from repro.deploy.cache import plan_key, weight_fingerprint
+
+    w = np.asarray(jax.random.laplace(jax.random.PRNGKey(0),
+                                      (64, 8)) * 0.01, np.float32)
+    sliced = bitslice(jnp.asarray(w), SPEC.n_bits)
+    plan = plan_from_bits(sliced.bits, sliced.scale, SPEC, pipe)
+    key = plan_key(weight_fingerprint(w), SPEC, pipe.cache_token())
+    cache = PlanCache(tmpdir)
+    cache.put(key, plan)
+    return cache, key, plan
+
+
+@pytest.mark.parametrize("pipe_name", ["mdm", "spare_line"])
+def test_plan_cache_truncated_entry_is_miss(pipe_name):
+    """fsynced writes are atomic, but a torn/truncated entry on disk
+    (power loss, partial copy) must read as a miss — never a crash,
+    never a garbage plan.  Covers both the legacy layout and the
+    column-block (flags&2) layout."""
+    with tempfile.TemporaryDirectory() as d:
+        cache, key, plan = _plan_and_cache(d, _P[pipe_name])
+        assert cache.get(key) is not None
+        path = cache._path(key)
+        with open(path, "rb") as f:
+            buf = f.read()
+        for corrupt in (buf[:-5], buf[:9], b"", buf + b"xx"):
+            with open(path, "wb") as f:
+                f.write(corrupt)
+            misses = cache.stats.misses
+            assert cache.get(key) is None
+            assert cache.stats.misses == misses + 1
+        # A fresh put repairs the entry.
+        cache.put(key, plan)
+        got = cache.get(key)
+        np.testing.assert_array_equal(np.asarray(got.row_perm),
+                                      np.asarray(plan.row_perm))
+
+
+def test_plan_cache_corrupt_manifest_falls_back():
+    import os
+
+    with tempfile.TemporaryDirectory() as d:
+        cache, key, plan = _plan_and_cache(d, _P["mdm"])
+        keys = {"m": key}
+        cache.put_manifest(keys, {"m": plan})
+        assert cache.get_manifest(keys) is not None
+        mdir = os.path.join(cache.root, "manifest")
+        for root, _, files in os.walk(mdir):
+            for name in files:
+                p = os.path.join(root, name)
+                with open(p, "rb") as f:
+                    buf = f.read()
+                with open(p, "wb") as f:
+                    f.write(buf[: len(buf) // 2])
+        assert cache.get_manifest(keys) is None
+        # Per-entry probes still serve the plan.
+        assert cache.get(key) is not None
+
+
+# ------------------------ benchmark harness guard -------------------------
+
+def test_bench_resolve_only_prefers_exact_name():
+    """`--only fault_tolerance` must select exactly that benchmark even
+    though fault_line_open shares its backing module (the nightly lines
+    would otherwise double-run the sweep)."""
+    from benchmarks.run import resolve_only
+
+    assert [b.name for b in resolve_only("fault_tolerance")] == [
+        "fault_tolerance"]
+    assert [b.name for b in resolve_only("fault_line_open")] == [
+        "fault_line_open"]
+    # An exact name that doubles as a module name stays addressable on
+    # its own; a pure module token still fans out to all its benches.
+    assert [b.name for b in resolve_only("solver_throughput")] == [
+        "solver_throughput"]
+    assert [b.name for b in resolve_only("theorem1")] == [
+        "theorem1_sparsity"]
+    with pytest.raises(KeyError):
+        resolve_only("no_such_bench")
