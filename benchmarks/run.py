@@ -45,6 +45,7 @@ from benchmarks import (  # noqa: E402
     nf_reduction,
     planning_cost,
     roofline_table,
+    serving_health,
     solver_throughput,
     theorem1,
 )
@@ -111,6 +112,11 @@ BENCHES: tuple[Bench, ...] = (
               n_rows=128 if q else 256, n_samples=2,
               rates=((0.05, 0.02),) if q
               else ((0.02, 0.01), (0.05, 0.02), (0.08, 0.05)))),
+    # §Nonideal: lifetime resilience — monitored (probe + remediation
+    # ladder) vs unmonitored twin engines through an aging sweep
+    Bench("serving_health", "serving_health",
+          lambda q: serving_health.run(
+              ages=(3e2, 1e4) if q else (3e2, 1e4, 3e5))),
     # §Mapping API: registered row x column strategy matrix (Eq-16
     # NF on the standard 64x64 population)
     Bench("mapping_matrix", "mapping_matrix",
@@ -270,6 +276,11 @@ def _derive(name: str, res: dict) -> str:
                     + ",".join(f"{k}:{v}" for k, v in wins.items())
                     + ";all_rates="
                     + str(res["spare_line_beats_fault_aware_all_rates"]))
+        if name == "serving_health":
+            return (f"fresh={res['fresh_err']:.3f};"
+                    f"unmon_worst={max(res['unmonitored_err']):.3f};"
+                    f"mon_worst={max(res['monitored_err']):.3f};"
+                    f"all_gates={res['all_gates']}")
         if name == "mapping_matrix":
             return (f"best={res['best_cell']}@"
                     f"{res['best_reduction_pct']:.1f}%")

@@ -3,22 +3,33 @@
 # registry audit), then the @slow solver-oracle shapes, full-batch
 # equivalence sweeps and the heavy Monte-Carlo nonideality shapes that
 # the tier-1 default (`pytest.ini` addopts = -m "not slow") skips, plus
-# the whole-model deployment, fault-tolerance, line-open-sweep and
-# mapping-strategy-matrix benchmarks (fused planning / plan-cache /
-# CIM serving / fault+variation distributions / spare-line vs
-# fault-aware under structural line opens / row-x-column strategy
-# NF numbers recorded into results/benchmarks.json).
+# the whole-model deployment, fault-tolerance, line-open-sweep,
+# serving-health and mapping-strategy-matrix benchmarks (fused
+# planning / plan-cache / CIM serving / fault+variation distributions
+# / spare-line vs fault-aware under structural line opens / monitored
+# vs unmonitored lifetime resilience / row-x-column strategy NF
+# numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     ./scripts/lint.sh --audit src benchmarks scripts
+# Fan the suite out across workers when pytest-xdist is available; the
+# suite is xdist-clean (per-test tempdirs, no shared module state), but
+# the dependency is optional — fall back to in-process serially.
+if python -c "import xdist" >/dev/null 2>&1; then
+    XDIST_ARGS=(-n auto)
+else
+    XDIST_ARGS=()
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -q -m "slow or not slow" "$@"
+    python -m pytest -q "${XDIST_ARGS[@]}" -m "slow or not slow" "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only deploy_throughput
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only fault_tolerance
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only fault_line_open
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only serving_health
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only mapping_matrix

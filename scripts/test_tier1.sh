@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 profile with optional process fan-out.  Semantically identical
+# to the canonical `PYTHONPATH=src python -m pytest -q` tier-1 run (the
+# `-m "not slow"` profile comes from pytest.ini either way); when the
+# *optional* pytest-xdist dependency is installed, the suite fans out
+# across worker processes (`-n auto`) — the cold-CI lever ROADMAP
+# names: tier-1 is compile-bound, and each xdist worker re-runs
+# tests/conftest.py, so every worker gets its own 8-way host-device
+# simulation and they all share the persistent jit cache in
+# .jax_cache/.  Without xdist this is exactly the serial run — the
+# dependency is never required.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+if python -c "import xdist" >/dev/null 2>&1; then
+    XDIST_ARGS=(-n auto)
+else
+    XDIST_ARGS=()
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q "${XDIST_ARGS[@]}" "$@"

@@ -129,7 +129,9 @@ def optimal_col_order(active: jax.Array) -> jax.Array:
 def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
                           nf_unit: float | jax.Array,
                           col_weights: jax.Array | None = None,
-                          open_penalty: float = 0.0) -> jax.Array:
+                          open_penalty: float = 0.0,
+                          line_weights: jax.Array | None = None,
+                          off_current: float = 0.0) -> jax.Array:
     """Row permutation minimising Manhattan NF *plus* expected fault loss.
 
     ``active`` is the tile's (J, K) logical row masks in physical column
@@ -165,6 +167,24 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
     analytically: ``(sum w off - sum w on) / sum w = (n_off - n_on) /
     K``).
 
+    ``line_weights`` (optional, (J,) f32) weights the *logical* lines
+    being placed: line j's placement importance becomes
+    ``w_j * (n_j + (K - n_j) * off_current)`` instead of the bare
+    active count — its total line current in active-cell units, scaled
+    by its significance.  ``off_current`` is the inactive-cell current
+    ratio ``g_off / g_on`` (= ``r_on / r_off``): a severed or
+    attenuated line loses its *whole* current, off-cells included, so
+    with a realistic on/off ratio a nearly-empty high-order bit plane
+    is *more* expensive to lose than a dense LSB plane (64 cells at
+    2^-8 < 6.4 off-cell units at 2^-1) — exactly the case the bare
+    ``w_j * n_j`` ranking gets backwards.  The product form is
+    preserved exactly — hosting line j at position p costs
+    ``w_j * I_j * phi_p`` with ``I_j`` the line current — so the
+    weighted sort is still the optimum of the weighted objective.
+    This is how :func:`fault_aware_col_order` folds per-bit-plane
+    significance into column steering.  ``None`` keeps the historical
+    density ranking (``optimal_row_order``), bit-exactly.
+
     With no stuck cells ``phi_p`` is strictly increasing in ``p`` and
     the result equals :func:`optimal_row_order` exactly.  Single tile
     only; vmap for batches (``repro.core.mdm.plan_tile_population``).
@@ -177,7 +197,20 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
     ``spare_line`` mapping pass drives this.
     """
     J, K = active.shape[-2], active.shape[-1]
-    row_rank = optimal_row_order(active)
+    if line_weights is None:
+        row_rank = optimal_row_order(active)
+    else:
+        # Weighted rank: significance x total line current descending,
+        # Manhattan score then index as tiebreaks (float keys force the
+        # lexsort path — the packed-int trick of optimal_row_order does
+        # not apply).
+        a = (active > 0).astype(jnp.float32)
+        n = jnp.sum(a, axis=-1)
+        s = jnp.sum(a * (1.0 + jnp.arange(K, dtype=jnp.float32)),
+                    axis=-1)
+        cur = n + (K - n) * jnp.float32(off_current)
+        wn = jnp.asarray(line_weights, jnp.float32) * cur
+        row_rank = jnp.lexsort((-s, -wn))
     # Codes per repro.nonideal.models: 1 = stuck-OFF, 2 = stuck-ON,
     # 3 = OPEN (dead line — off-like, optionally surcharged).
     off_like = (stuck == 1) | (stuck == 3)
@@ -205,7 +238,9 @@ def fault_aware_row_order(active: jax.Array, stuck: jax.Array,
 
 def fault_aware_col_order(active: jax.Array, stuck: jax.Array,
                           nf_unit: float | jax.Array,
-                          open_penalty: float = 0.0) -> jax.Array:
+                          col_weights: jax.Array | None = None,
+                          open_penalty: float = 0.0,
+                          off_current: float = 0.0) -> jax.Array:
     """Column permutation steering logical columns off faulty bitlines.
 
     The column twin of :func:`fault_aware_row_order` (the transpose
@@ -217,12 +252,26 @@ def fault_aware_col_order(active: jax.Array, stuck: jax.Array,
     low-order bit plane.  Any bitline order preserves the matmul —
     columns are sensed independently (the X-CHANGR freedom).
 
+    ``col_weights`` (optional, (K,) f32) is the *logical* columns' bit
+    significance (2^-(k+1) of the plane each dataflow-layout column
+    hosts): the ranking becomes significance-weighted — each column
+    ranked by significance x total column current, with ``off_current``
+    (the ``g_off / g_on`` ratio) pricing in the inactive cells a
+    severed bitline also silences — so the steering protects the
+    columns whose loss costs the most shift-added output error.  A
+    sparse MSB plane outranks a dense LSB plane once its off-current
+    floor is priced; the cheap sacrifice for a dead bitline is the
+    *lowest-significance* plane, not merely the emptiest one.  ``None``
+    keeps the historical density-only ranking bit-exactly.
+
     Returns ``perm`` such that ``active[:, perm]`` is the remapped
     tile.  Single tile only; vmap for batches.
     """
     return fault_aware_row_order(jnp.swapaxes(active, -1, -2),
                                  jnp.swapaxes(stuck, -1, -2),
-                                 nf_unit, open_penalty=open_penalty)
+                                 nf_unit, open_penalty=open_penalty,
+                                 line_weights=col_weights,
+                                 off_current=off_current)
 
 
 def antidiagonal_mirror(active: jax.Array) -> jax.Array:

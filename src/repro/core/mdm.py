@@ -128,7 +128,14 @@ def plan_tile_population(masks: jax.Array, spec: CrossbarSpec,
              if (pipe.rows.uses_faults or pipe.cols.uses_faults)
              else None)
 
-    col_perm = pipe.cols.order_tiles(placed, stuck, spec)
+    # Pre-permutation significance: which bit plane each dataflow-layout
+    # column *hosts* — the cols pass is choosing where those planes
+    # land, so its significance grid is keyed by identity column order.
+    pre_sig = None
+    if pipe.cols.uses_col_significance:
+        pre_sig = physical_column_significance(
+            spec, pipe.reversed_dataflow, None, T)
+    col_perm = pipe.cols.order_tiles(placed, stuck, pre_sig, spec)
     col_position = None
     if col_perm is not None:
         col_perm = col_perm.astype(jnp.int32)

@@ -17,6 +17,11 @@ from repro.deploy.cache import (  # noqa: F401
     plan_key,
     weight_fingerprint,
 )
+from repro.deploy.lifetime import (  # noqa: F401
+    DEMOTED_RUNTIME,
+    MatrixLifetime,
+    restack_group,
+)
 from repro.deploy.engine import (  # noqa: F401
     DEPLOYABLE,
     MOE_EXPERT_NAMES,

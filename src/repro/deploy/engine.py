@@ -156,7 +156,9 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
                             eta: float, plan: MdmPlan,
                             cells=None, nonideal=None,
                             noise_tag: int | None = None,
-                            stats: dict | None = None) -> CimDeployment:
+                            stats: dict | None = None,
+                            capture: dict | None = None
+                            ) -> CimDeployment:
     """Host mirror of ``repro.kernels.cim_mvm.ops.deploy`` packaging.
 
     Quantises and lays out one planned matrix entirely in numpy —
@@ -186,6 +188,15 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
     a ``stats`` dict is passed.  ``noise_tag`` (with
     ``nonideal.sigma_read > 0``) arms the per-read noise hook — a
     unique int per deployed matrix, folded into the serving read key.
+
+    ``capture`` (a dict, filled in place) stashes the lifetime-state
+    ingredients the health/remediation machinery needs to re-derive the
+    gain at a later runtime age without re-planning: the post-stuck
+    padded magnitude ``codes`` plus the gathered logical-layout
+    ``stuck_log`` / ``gamma_log`` / ``relax_log`` fields.  A captured
+    deployment also materialises ``gain`` (ones) and ``degraded`` (0)
+    unconditionally, so hot-swapping a refreshed deployment later never
+    changes the pytree structure the jitted serving graph traced.
     """
     del mode  # layout comes from the plan (kept for signature compat)
     I, N = w.shape
@@ -204,9 +215,12 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
                   constant_values=1)
 
     gain = degraded = None
+    stuck_log = gamma_log = relax_log = None
     if cells is not None and (cells.stuck is not None
-                              or cells.gamma is not None):
+                              or cells.gamma is not None
+                              or cells.relax is not None):
         from repro.nonideal.inject import (
+            aged_gain_host,
             gather_physical_host,
             open_bit_overlap_host,
             perturb_codes_host,
@@ -214,7 +228,6 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
         )
 
         row_position = np.asarray(plan.row_position)
-        stuck_log = None
         if cells.stuck is not None:
             stuck_log = gather_physical_host(cells.stuck, row_position,
                                              rev, spec, col_position)
@@ -224,12 +237,33 @@ def package_deployment_host(w: np.ndarray, spec: CrossbarSpec, mode,
             if stats is not None:
                 stats["open_bits"] = open_bits
             codes = perturb_codes_host(codes, stuck_log, spec.n_bits)
+        if cells.relax is not None:
+            relax_log = gather_physical_host(cells.relax, row_position,
+                                             rev, spec, col_position)
         if cells.gamma is not None:
             gamma_log = gather_physical_host(cells.gamma, row_position,
                                              rev, spec, col_position)
-            drift = 1.0 if nonideal is None else nonideal.drift_factor
-            gain = variation_gain_host(codes, stuck_log, gamma_log,
-                                       spec.n_bits, drift)
+        if gamma_log is not None or relax_log is not None:
+            if nonideal is None:
+                gain = variation_gain_host(codes, stuck_log, gamma_log,
+                                           spec.n_bits, 1.0)
+            else:
+                # Deploy-time gain = lifetime gain at the model's
+                # static drift_time (bit-identical to the legacy
+                # variation_gain_host path: relaxation is zero at
+                # age <= 1 and drift_factor_at(drift_time) ==
+                # drift_factor).
+                gain = aged_gain_host(codes, stuck_log, gamma_log,
+                                      relax_log, spec.n_bits, nonideal,
+                                      nonideal.drift_time)
+
+    if capture is not None:
+        if gain is None:
+            gain = np.ones_like(codes, np.float32)
+        if degraded is None:
+            degraded = np.int32(0)
+        capture.update(codes=codes, stuck_log=stuck_log,
+                       gamma_log=gamma_log, relax_log=relax_log)
 
     sigma_read = 0.0 if nonideal is None else float(nonideal.sigma_read)
     tag = (np.int32(noise_tag)
@@ -255,6 +289,7 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
                         nonideal=None, nonideal_key=None,
                         fault_aware: bool = True,
                         pipeline: MappingPipeline | str | None = None,
+                        lifetime: dict | None = None,
                         verbose: bool = False) -> tuple[dict, dict]:
     """Deploy every projection matrix of a model onto crossbars.
 
@@ -279,6 +314,13 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     fingerprinted into the plan-cache keys), and packaging folds the
     faults into the deployment codes / gain so generation runs under
     them end-to-end.
+
+    ``lifetime`` (a dict, filled in place) captures per-matrix
+    :class:`repro.deploy.lifetime.MatrixLifetime` state — the host-side
+    ingredients the health/remediation machinery
+    (:mod:`repro.health`) needs to age, recalibrate, reprogram and
+    hot-swap deployments at serving time.  Only meaningful together
+    with a non-ideal model.
     """
     t0 = time.perf_counter()
     spec = spec_from_config(cfg)
@@ -324,15 +366,41 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     # independent noise per deployed matrix (and per repeat/expert).
     noise_tags = {name: t for t, name in enumerate(mats)}
     degraded: dict[str, int] = {}
+    want_lifetime = lifetime is not None and cells is not None
 
     def _package(name):
         stats: dict = {}
+        cap: dict | None = {} if want_lifetime else None
         dep = package_deployment_host(
             mats[name], spec, mode, eta, plans[name],
             cells=None if cells is None else cells[name],
-            nonideal=nonideal, noise_tag=noise_tags[name], stats=stats)
+            nonideal=nonideal, noise_tag=noise_tags[name], stats=stats,
+            capture=cap)
         if stats.get("open_bits"):
             degraded[name] = stats["open_bits"]
+        if cap is not None:
+            from repro.deploy.lifetime import MatrixLifetime
+
+            plan = plans[name]
+            # Per-matrix reprogram key: a distinct fold_in branch (7 is
+            # outside the sampler's term-tag range) off the deployment
+            # key, then the matrix's unique tag — the n-th reprogram of
+            # matrix m is a deterministic function of (seed, m, n).
+            lifetime[name] = MatrixLifetime(
+                name=name, noise_tag=noise_tags[name], spec=spec,
+                model=nonideal, eta=eta, w=mats[name],
+                row_position=np.asarray(plan.row_position),
+                reversed_df=bool(plan.reversed_dataflow),
+                col_position=(None if plan.col_position is None else
+                              np.asarray(plan.col_position, np.int32)),
+                stuck_phys=cells[name].stuck,
+                codes=cap["codes"], stuck_log=cap["stuck_log"],
+                gamma_log=cap["gamma_log"], relax_log=cap["relax_log"],
+                dep=dep,
+                key=jax.random.fold_in(
+                    jax.random.fold_in(nonideal_key, 7),
+                    noise_tags[name]),
+                age=float(nonideal.drift_time))
         return dep
 
     cim_tree: dict = {}

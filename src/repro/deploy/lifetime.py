@@ -1,0 +1,219 @@
+"""Per-matrix lifetime state for serving-time aging and self-healing.
+
+A deployment packaged by :func:`repro.deploy.engine.deploy_model_params`
+is a snapshot of the device at programming time.  Real conductances keep
+moving while the chip serves — power-law drift and stochastic
+relaxation (:class:`repro.nonideal.models.NonidealModel`
+``drift_factor_at`` / ``relax_sigma_at``) — so a long-lived engine needs
+the *trajectory*, not the snapshot.  :class:`MatrixLifetime` keeps the
+host-resident ingredients that trajectory is a deterministic function
+of: the post-stuck codes, the gathered logical-layout variation /
+relaxation draws, and a per-matrix age clock, so the deployment's gain
+can be re-derived at any age (``repro.nonideal.inject.aged_gain_host``)
+without re-planning or re-sampling.
+
+The remediation ladder the health controller (:mod:`repro.health`)
+climbs is implemented here as three state transitions:
+
+* :meth:`MatrixLifetime.recalibrate` — fold a per-output-column gain
+  correction (estimated from probe residuals) into the deployment;
+* :meth:`MatrixLifetime.reprogram` — re-inject with a fresh
+  program-verify-style variation/relaxation draw (stuck cells are
+  hardware and stay pinned), reset the drift clock and drop the
+  recalibration;
+* :meth:`MatrixLifetime.demote` — mark the deployment ``degraded`` with
+  the runtime sentinel (-1) so the model layer serves the digital
+  fallback (PR-7's graceful-degradation machinery).
+
+Everything here is host numpy; the single device hand-off point is
+:func:`restack_group`, which rebuilds one ``(slot, pname)`` stacked
+deployment from its refreshed host deployments — callers swap the
+result into the serving tree atomically (fresh dict objects, never
+in-place mutation), so generation in flight keeps the snapshot it
+started with.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import CrossbarSpec
+from repro.kernels.cim_mvm.ops import CimDeployment
+from repro.nonideal.inject import (
+    HostCells,
+    aged_gain_host,
+    gather_physical_host,
+)
+from repro.nonideal.models import NonidealModel, sample_cell_state
+
+# Runtime-demotion sentinel for CimDeployment.degraded: negative so it
+# never collides with the positive open-bit counts deploy-time demotion
+# records (the model layer demotes on ``degraded != 0`` either way).
+DEMOTED_RUNTIME = -1
+
+
+@dataclasses.dataclass
+class MatrixLifetime:
+    """Host-side lifetime state of one deployed matrix.
+
+    ``dep`` always holds the *currently served* host deployment (numpy
+    leaves): :meth:`refresh` re-derives it from the captured draws at
+    the current ``age``, the ladder transitions update it in place.
+    ``age`` is time since (re)programming in units of the programming
+    time t0 (1.0 = fresh).
+    """
+
+    name: str
+    noise_tag: int
+    spec: CrossbarSpec
+    model: NonidealModel
+    eta: float
+    w: np.ndarray                      # (I, N) f32 source matrix
+    row_position: np.ndarray
+    reversed_df: bool
+    col_position: np.ndarray | None
+    stuck_phys: np.ndarray | None      # (Ti, Tn, rows, cols) int8
+    codes: np.ndarray                  # (I_pad, N_pad) post-stuck codes
+    stuck_log: np.ndarray | None
+    gamma_log: np.ndarray | None
+    relax_log: np.ndarray | None
+    dep: CimDeployment
+    key: jax.Array                     # per-matrix reprogram key base
+    age: float = 1.0
+    reprograms: int = 0
+    rung: int = 0                      # 0 = fresh, 1 = recalibrated
+    recal: np.ndarray | None = None    # (N_pad,) per-column correction
+    demoted: bool = False
+
+    # -- aging ---------------------------------------------------------
+
+    def advance(self, dt: float) -> None:
+        """Advance this matrix's age clock by ``dt`` (t0 units)."""
+        self.age += float(dt)
+
+    def refresh(self) -> CimDeployment:
+        """Re-derive the served deployment at the current age.
+
+        The gain is recomputed from the *fixed* captured draws with the
+        time-dependent terms on the age clock, then any standing
+        recalibration correction is re-applied on top — so a
+        recalibrated matrix keeps its correction as it continues to
+        age.  Demoted matrices are left untouched (the digital fallback
+        does not age).
+        """
+        if self.demoted:
+            return self.dep
+        gain = aged_gain_host(self.codes, self.stuck_log, self.gamma_log,
+                              self.relax_log, self.spec.n_bits,
+                              self.model, self.age)
+        if self.recal is not None:
+            gain = gain * self.recal[None, :]
+        self.dep = dataclasses.replace(self.dep, gain=gain)
+        return self.dep
+
+    # -- remediation ladder --------------------------------------------
+
+    def recalibrate(self, recal: np.ndarray) -> CimDeployment:
+        """Fold a per-output-column gain correction into the deployment.
+
+        ``recal`` is the (out_dim,) least-squares rescaling estimated
+        from probe residuals (``repro.health``); padding columns get
+        1.  The correction persists across subsequent :meth:`refresh`
+        calls until the next reprogram resets it.
+        """
+        n_pad = self.codes.shape[1]
+        full = np.ones(n_pad, np.float32)
+        full[:recal.shape[0]] = np.asarray(recal, np.float32)
+        self.recal = full
+        self.rung = 1
+        return self.refresh()
+
+    def reprogram(self) -> CimDeployment:
+        """Re-inject with a fresh program-verify-style draw.
+
+        Draws fresh variation/relaxation fields for this matrix only —
+        keyed by ``fold_in(key, reprograms)``, so the n-th reprogram of
+        a matrix is deterministic per deployment seed — while the stuck
+        map stays pinned (defects are hardware; a reprogram does not
+        heal them).  Resets the drift clock and the recalibration: the
+        device is fresh again.
+        """
+        self.reprograms += 1
+        ti, tn = self.stuck_phys.shape[:2] if self.stuck_phys is not None \
+            else self.row_position.shape[:2]
+        shape = (ti, tn, self.spec.rows, self.spec.cols)
+        sample = sample_cell_state(
+            jax.random.fold_in(self.key, self.reprograms), shape,
+            self.model, stuck=self.stuck_phys)
+        cells = HostCells(
+            stuck=self.stuck_phys,
+            gamma=np.asarray(sample.gamma),
+            relax=(None if sample.relax is None
+                   else np.asarray(sample.relax)))
+        if cells.gamma is not None:
+            self.gamma_log = gather_physical_host(
+                cells.gamma, self.row_position, self.reversed_df,
+                self.spec, self.col_position)
+        if cells.relax is not None:
+            self.relax_log = gather_physical_host(
+                cells.relax, self.row_position, self.reversed_df,
+                self.spec, self.col_position)
+        self.age = 1.0
+        self.recal = None
+        self.rung = 0
+        return self.refresh()
+
+    def demote(self) -> CimDeployment:
+        """Demote to the digital fallback (runtime ``degraded`` sentinel).
+
+        The model layer (``repro.models.model._cim_matmul``) serves
+        ``x @ w`` for any ``degraded != 0``; the negative sentinel
+        distinguishes a health-controller demotion from deploy-time
+        open-line counts in reports.
+        """
+        self.demoted = True
+        self.dep = dataclasses.replace(
+            self.dep, degraded=np.int32(DEMOTED_RUNTIME))
+        return self.dep
+
+
+def group_key(name: str) -> tuple[str, str]:
+    """(slot, pname) stacking group of a deployed-matrix name."""
+    parts = name.split("/")
+    return parts[0], parts[1]
+
+
+def restack_group(lifetimes: dict[str, MatrixLifetime], slot: str,
+                  pname: str) -> CimDeployment:
+    """Rebuild one (slot, pname) stacked device deployment.
+
+    Mirrors :func:`repro.deploy.engine.deploy_model_params`'s stacking
+    exactly: dense parameters stack their repeats into the leading
+    axis; expert-partitioned names (``slot/pname/r/e..``) stack experts
+    per repeat on host first.  Returns a fully-built device deployment
+    — the caller swaps it into a *fresh* serving dict in one
+    assignment, which is what makes the hot-swap atomic: a generation
+    loop that captured the previous dict never observes a half-updated
+    bank.
+    """
+    mine = {n: lt for n, lt in lifetimes.items()
+            if group_key(n) == (slot, pname)}
+    by_rep: dict[int, list[MatrixLifetime]] = {}
+    nested = False
+    for n, lt in mine.items():
+        parts = n.split("/")
+        by_rep.setdefault(int(parts[2]), []).append(lt)
+        nested = nested or len(parts) > 3
+    reps = []
+    for r in sorted(by_rep):
+        deps = [lt.dep for lt in by_rep[r]]
+        if nested:
+            reps.append(jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs), *deps))
+        else:
+            assert len(deps) == 1
+            reps.append(deps[0])
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *reps)

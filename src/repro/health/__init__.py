@@ -1,0 +1,53 @@
+"""Serving-lifetime health: monitoring, drift detection, self-healing.
+
+Memristive conductances keep moving while the chip serves (power-law
+drift, stochastic relaxation — :mod:`repro.nonideal.models`'s aging
+clock), so a long-lived :class:`repro.serve.engine.ServeEngine`
+silently degrades unless something watches the analog path in-band.
+This package completes the degradation -> detection -> recovery loop:
+
+==================  ===================================================
+piece               entry points
+==================  ===================================================
+drift detection     :mod:`repro.health.detector` —
+                    :class:`DriftDetector` (EWMA + CUSUM/z-score with
+                    hysteresis: separated trip/clear thresholds, so no
+                    flapping), :class:`DetectorConfig`
+calibration probes  :mod:`repro.health.monitor` — fixed per-matrix
+                    probe batches through the production ``cim_mvm``
+                    vs. the digital reference; :class:`HealthConfig`,
+                    :class:`HealthReport` (+ event log / counters)
+remediation ladder  :mod:`repro.health.controller` —
+                    :class:`HealthController`: on trip, recalibrate ->
+                    reprogram (endurance-bounded) -> demote, over the
+                    host lifetime state in
+                    :mod:`repro.deploy.lifetime`
+==================  ===================================================
+
+The serving integration lives in ``repro.serve.engine``: pass
+``health=HealthConfig(...)`` (with a ``nonideal`` model) to
+``ServeEngine``, then drive ``engine.advance(dt)`` /
+``engine.check_health()`` — deployments refresh by atomic hot-swap
+(fresh cim-tree dicts, never in-place mutation), so generation in
+flight keeps the bank it started with.
+"""
+from repro.health.controller import HealthController  # noqa: F401
+from repro.health.detector import (  # noqa: F401
+    DetectorConfig,
+    DriftDetector,
+)
+from repro.health.monitor import (  # noqa: F401
+    HealthConfig,
+    HealthReport,
+    MatrixMonitor,
+    estimate_recal,
+    probe_error,
+    probe_vectors,
+)
+
+__all__ = [
+    "DetectorConfig", "DriftDetector",
+    "HealthConfig", "HealthReport", "MatrixMonitor",
+    "HealthController",
+    "estimate_recal", "probe_error", "probe_vectors",
+]

@@ -1,0 +1,157 @@
+"""The health controller: probe rounds, the remediation ladder, and
+atomic hot-swap bookkeeping.
+
+One :class:`HealthController` owns the lifetime state of a deployed
+checkpoint (``repro.deploy.lifetime.MatrixLifetime`` per matrix) and
+drives the degradation -> detection -> recovery loop:
+
+* :meth:`advance` moves every matrix's age clock and re-derives the
+  served deployments at the new age (the *physics*: aging happens
+  whether or not anyone watches);
+* :meth:`probe` pushes each matrix's calibration probes through the
+  production ``cim_mvm``, feeds the residual to the per-matrix drift
+  detector, and — on a trip — climbs the remediation ladder:
+
+  1. **recalibrate**: fold the per-output-column least-squares gain
+     correction estimated from this round's probe residuals into the
+     deployment (cheap; fixes uniform/columnwise drift exactly);
+  2. **reprogram**: re-inject with a fresh program-verify-style draw
+     and reset the drift clock (bounded by the per-matrix endurance
+     budget ``max_reprograms`` — real cells wear out);
+  3. **demote**: the runtime ``degraded`` sentinel routes the matrix to
+     the digital fallback for good.
+
+Both methods return the set of ``(slot, pname)`` stacking groups whose
+served deployments changed; the serving engine restacks exactly those
+(:func:`repro.deploy.lifetime.restack_group`) and swaps them in by
+building a *fresh* cim tree dict — never mutating the old one — so a
+generation loop holding the previous tree keeps a consistent bank.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.deploy.lifetime import MatrixLifetime, group_key
+from repro.health.monitor import (
+    HealthConfig,
+    HealthReport,
+    MatrixMonitor,
+    estimate_recal,
+)
+
+
+class HealthController:
+    """Drives monitoring + self-healing over a deployed checkpoint."""
+
+    def __init__(self, lifetimes: dict[str, MatrixLifetime],
+                 cfg: HealthConfig | None = None):
+        self.cfg = cfg or HealthConfig()
+        self.lifetimes = lifetimes
+        self.monitors = {
+            name: MatrixMonitor(self.cfg, lt.noise_tag, lt.w)
+            for name, lt in lifetimes.items()}
+        self.rounds = 0
+        self.events: list[dict] = []
+        self.counters = {
+            "probes": 0, "trips": 0, "spontaneous_clears": 0,
+            "recalibrations": 0, "reprograms": 0, "demotions": 0}
+
+    # -- aging ---------------------------------------------------------
+
+    def advance(self, dt: float) -> set[tuple[str, str]]:
+        """Advance every live matrix's age; returns dirty swap groups."""
+        dirty: set[tuple[str, str]] = set()
+        for name, lt in self.lifetimes.items():
+            if lt.demoted:
+                continue
+            lt.advance(dt)
+            if lt.model.has_aging:
+                lt.refresh()
+                dirty.add(group_key(name))
+        return dirty
+
+    # -- probing + remediation -----------------------------------------
+
+    def probe(self, read_key: jax.Array | None = None
+              ) -> set[tuple[str, str]]:
+        """One probe round over every live matrix.
+
+        ``read_key`` threads per-read conductance noise into the probe
+        reads (the probes measure the same physical path generation
+        uses, noise included); the per-deployment ``noise_tag`` keeps
+        draws independent across matrices as usual.  Returns the dirty
+        swap groups of every matrix a remediation refreshed.
+        """
+        from repro.kernels.cim_mvm.ops import cim_mvm
+
+        self.rounds += 1
+        dirty: set[tuple[str, str]] = set()
+        for name, lt in self.lifetimes.items():
+            if lt.demoted:
+                continue
+            mon = self.monitors[name]
+            y = np.asarray(cim_mvm(mon.probes_dev, lt.dep,
+                                   read_key=read_key))
+            self.counters["probes"] += 1
+            det = mon.detector
+            clears_before = det.n_clears
+            tripped = mon.observe(y)
+            if det.n_clears > clears_before:
+                self.counters["spontaneous_clears"] += (
+                    det.n_clears - clears_before)
+                self._log(name, "clear", f"z={det.z:.2f}")
+            if tripped:
+                self.counters["trips"] += 1
+                self._log(name, "trip",
+                          f"err={mon.last_err:.4g} z={det.z:.2f} "
+                          f"cusum={det.cusum:.4g}")
+                self._remediate(name, lt, mon, y)
+                dirty.add(group_key(name))
+        return dirty
+
+    def _remediate(self, name: str, lt: MatrixLifetime,
+                   mon: MatrixMonitor, y_cim: np.ndarray) -> None:
+        if lt.rung == 0:
+            recal = estimate_recal(y_cim, mon.y_ref,
+                                   self.cfg.recal_limit)
+            lt.recalibrate(recal)
+            self.counters["recalibrations"] += 1
+            self._log(name, "recalibrate",
+                      f"median_alpha={float(np.median(recal)):.4f} "
+                      f"age={lt.age:.3g}")
+        elif lt.reprograms < self.cfg.max_reprograms:
+            lt.reprogram()
+            self.counters["reprograms"] += 1
+            self._log(name, "reprogram",
+                      f"epoch={lt.reprograms} clock_reset age=1")
+        else:
+            lt.demote()
+            self.counters["demotions"] += 1
+            self._log(name, "demote",
+                      f"endurance_exhausted reprograms={lt.reprograms}"
+                      f" -> digital fallback")
+        mon.detector.rearm()
+
+    def _log(self, matrix: str, event: str, detail: str) -> None:
+        self.events.append({"round": self.rounds, "matrix": matrix,
+                            "event": event, "detail": detail})
+
+    # -- reporting -----------------------------------------------------
+
+    def report(self) -> HealthReport:
+        matrices = {}
+        for name, lt in self.lifetimes.items():
+            mon = self.monitors[name]
+            matrices[name] = {
+                **mon.detector.state(),
+                "last_err": mon.last_err,
+                "age": lt.age,
+                "rung": lt.rung,
+                "reprograms": lt.reprograms,
+                "demoted": lt.demoted,
+            }
+        return HealthReport(rounds=self.rounds,
+                            counters=dict(self.counters),
+                            matrices=matrices,
+                            events=list(self.events))

@@ -17,10 +17,15 @@ name)`` pair.  Three kinds exist:
     ``uses_col_significance`` and must ignore the rest.
 
 ``cols``
-    Column-order passes.  ``order_tiles(placed, stuck, spec)`` maps the
-    dataflow-oriented mask batch to a ``(T, cols)`` permutation
-    (``perm[t, p]`` = dataflow-layout column hosted at physical bitline
-    ``p``) or ``None`` for the identity.
+    Column-order passes.  ``order_tiles(placed, stuck, col_sig, spec)``
+    maps the dataflow-oriented mask batch to a ``(T, cols)``
+    permutation (``perm[t, p]`` = dataflow-layout column hosted at
+    physical bitline ``p``) or ``None`` for the identity.  ``col_sig``
+    here is the *pre-permutation* per-logical-column bit significance
+    (the plane each dataflow-layout column hosts — the cols pass is
+    what decides where those columns land); the same
+    ``uses_faults`` / ``uses_col_significance`` declarations gate what
+    the planner threads in.
 
 ``partition``
     Host-side tensor partitioning.  ``split(name, w)`` maps one named
@@ -57,9 +62,11 @@ class Strategy:
 
     kind: str = ""
     name: str = ""
-    # Fault-map consumption declaration (rows *and* cols passes): the
-    # planner only threads physical cell-state maps to passes that ask.
+    # Consumption declarations (rows *and* cols passes): the planner
+    # only threads physical cell-state maps / column-significance grids
+    # to passes that ask for them.
     uses_faults: bool = False
+    uses_col_significance: bool = False
 
     def fingerprint(self) -> str:
         """Stable registry name + params, e.g. ``"mdm"``.

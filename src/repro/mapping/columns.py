@@ -23,7 +23,7 @@ class IdentityCols(Strategy):
 
     uses_faults = False
 
-    def order_tiles(self, placed, stuck, spec):
+    def order_tiles(self, placed, stuck, col_sig, spec):
         return None
 
 
@@ -42,7 +42,7 @@ class XChangrCols(Strategy):
 
     uses_faults = False
 
-    def order_tiles(self, placed, stuck, spec):
+    def order_tiles(self, placed, stuck, col_sig, spec):
         from repro.core import manhattan
 
         return jax.vmap(manhattan.optimal_col_order)(placed)
@@ -64,18 +64,37 @@ class SpareLineCols(Strategy):
     nothing; identity column order would have sacrificed a live bit
     plane instead.  Reduces exactly to :class:`XChangrCols` when no
     fault map is supplied.
+
+    The steering is **significance-weighted**: the planner threads the
+    pre-permutation per-logical-column bit significance (2^-(k+1) of
+    the plane each dataflow-layout column hosts) and the ranking key
+    becomes significance x total column current — active cells plus the
+    ``r_on / r_off`` off-current floor a severed bitline also silences
+    — so the cheap sacrifice for a dead bitline is the lowest
+    *significance-weighted current*, not merely the emptiest column.
+    The loss the sort minimises is the shift-added output error, not
+    raw cell count: a sparse MSB plane keeps its healthy bitline, a
+    dense LSB plane is expendable.
     """
 
     open_penalty: float = 4.0
 
     uses_faults = True
+    uses_col_significance = True
 
-    def order_tiles(self, placed, stuck, spec):
+    def order_tiles(self, placed, stuck, col_sig, spec):
         from repro.core import manhattan
 
         if stuck is None:
             return jax.vmap(manhattan.optimal_col_order)(placed)
+        if col_sig is None:
+            return jax.vmap(
+                lambda a, s: manhattan.fault_aware_col_order(
+                    a, s, spec.nf_unit, open_penalty=self.open_penalty)
+            )(placed, stuck)
         return jax.vmap(
-            lambda a, s: manhattan.fault_aware_col_order(
-                a, s, spec.nf_unit, open_penalty=self.open_penalty)
-        )(placed, stuck)
+            lambda a, s, w: manhattan.fault_aware_col_order(
+                a, s, spec.nf_unit, col_weights=w,
+                open_penalty=self.open_penalty,
+                off_current=spec.r_on / spec.r_off)
+        )(placed, stuck, col_sig)

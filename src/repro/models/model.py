@@ -55,11 +55,14 @@ def _cim_matmul(x: jax.Array, w: jax.Array, dep,
                 read_key: jax.Array | None = None) -> jax.Array:
     """x @ w, through the deployed crossbars when a CimDeployment exists.
 
-    A deployment carrying ``degraded > 0`` (programmed bits lost to
-    line-open faults after the spare-line remap — spares exhausted) is
-    demoted to the digital matmul on the full-precision weight: the
-    crossbar output would be structurally wrong, and the deploy report
-    lists every demotion with its reason.  ``read_key`` threads
+    A deployment carrying ``degraded != 0`` is demoted to the digital
+    matmul on the full-precision weight: positive counts are programmed
+    bits lost to line-open faults after the spare-line remap (spares
+    exhausted — the deploy report lists every demotion with its
+    reason); the negative sentinel is a *runtime* demotion by the
+    health controller (:mod:`repro.health`) after the remediation
+    ladder ran out of rungs.  Either way the crossbar output would be
+    wrong, so the full-precision fallback serves.  ``read_key`` threads
     per-read conductance noise into ``cim_mvm`` (None = noiseless).
     """
     if dep is None:
@@ -69,7 +72,7 @@ def _cim_matmul(x: jax.Array, w: jax.Array, dep,
         return cim_mvm(x, dep, read_key=read_key).astype(x.dtype)
     w2 = w.reshape(dep.in_dim, dep.out_dim)
     return jax.lax.cond(
-        dep.degraded > 0,
+        dep.degraded != 0,
         lambda: (x @ w2).astype(x.dtype),
         lambda: cim_mvm(x, dep, read_key=read_key).astype(x.dtype))
 

@@ -54,10 +54,14 @@ class HostCells(NamedTuple):
 
     stuck: (Ti, Tn, rows, cols) int8 cell codes, or None (no faults).
     gamma: (Ti, Tn, rows, cols) f32 programming gains, or None.
+    relax: (Ti, Tn, rows, cols) f32 unit-normal relaxation draws, or
+           None — the fixed per-cell draw the ``relax_sigma_at(age)``
+           envelope scales as the deployment ages.
     """
 
     stuck: np.ndarray | None
     gamma: np.ndarray | None
+    relax: np.ndarray | None = None
 
 
 def sample_deployment_cells(key: jax.Array,
@@ -78,9 +82,11 @@ def sample_deployment_cells(key: jax.Array,
     has_faults = (model.p_stuck_off > 0.0 or model.p_stuck_on > 0.0
                   or model.has_line_opens)
     has_gain = (model.sigma_program > 0.0 or model.drift_factor != 1.0
-                or model.sigma_corr > 0.0)
+                or model.sigma_corr > 0.0 or model.has_aging)
+    has_relax = model.sigma_relax > 0.0
     stuck = np.asarray(sample.stuck) if has_faults else None
     gamma = np.asarray(sample.gamma) if has_gain else None
+    relax = np.asarray(sample.relax) if has_relax else None
     out: dict[str, HostCells] = {}
     off = 0
     for name, (ti, tn) in grids.items():
@@ -88,7 +94,8 @@ def sample_deployment_cells(key: jax.Array,
         shape = (ti, tn, spec.rows, spec.cols)
         out[name] = HostCells(
             stuck[off:off + nt].reshape(shape) if has_faults else None,
-            gamma[off:off + nt].reshape(shape) if has_gain else None)
+            gamma[off:off + nt].reshape(shape) if has_gain else None,
+            relax[off:off + nt].reshape(shape) if has_relax else None)
         off += nt
     return out
 
@@ -182,3 +189,28 @@ def variation_gain_host(codes: np.ndarray, stuck_log: np.ndarray | None,
     m0p = (bits * g_eff * bw).sum(-1)
     return np.where(m0 > 0, m0p / np.maximum(m0, 1e-30),
                     np.float32(1.0)).astype(np.float32)
+
+
+def aged_gain_host(codes: np.ndarray, stuck_log: np.ndarray | None,
+                   gamma_log: np.ndarray | None,
+                   relax_log: np.ndarray | None, n_bits: int,
+                   model: NonidealModel, age: float) -> np.ndarray:
+    """Per-weight gain of a deployment evaluated at runtime ``age``.
+
+    Re-derives :func:`variation_gain_host` with the time-dependent
+    terms moved onto the age clock: power-law drift becomes
+    ``drift_factor_at(age)`` and the stochastic relaxation draw is
+    scaled by its deterministic ``relax_sigma_at(age)`` envelope before
+    folding into the per-cell gamma.  Because the relaxation draw is
+    fixed per cell, calling this twice with a larger ``age`` widens the
+    same trajectory — it never reshuffles which cells drifted — which
+    is exactly the fold_in-tag composition contract extended in time.
+    """
+    g = (np.ones(codes.shape + (n_bits,), np.float32)
+         if gamma_log is None else np.asarray(gamma_log, np.float32))
+    s_relax = model.relax_sigma_at(age)
+    if relax_log is not None and s_relax > 0.0:
+        g = g * np.exp(np.float32(s_relax)
+                       * np.asarray(relax_log, np.float32))
+    return variation_gain_host(codes, stuck_log, g, n_bits,
+                               model.drift_factor_at(age))

@@ -14,7 +14,17 @@ deployment code injector:
 * **read noise** — zero-mean additive conductance noise per read,
   ``g -> g + sigma_read * g_on * N(0, 1)``;
 * **conductance drift** — deterministic power-law decay of the ON-state
-  conductance, ``g_on -> g_on * drift_time ** -drift_nu``;
+  conductance, ``g_on -> g_on * drift_time ** -drift_nu``.  At serving
+  time the exponent is evaluated against a *runtime age clock* instead
+  of the static ``drift_time`` (``drift_factor_at``) — the lifetime
+  machinery in :mod:`repro.health` advances the clock as the engine
+  serves;
+* **stochastic relaxation** — a per-cell random walk of ln g whose
+  spread grows as ``sigma_relax * sqrt(ln t)`` (log-time diffusion, the
+  empirical retention-loss envelope of metal-oxide cells): each cell
+  carries one *fixed* unit-normal draw scaled by the deterministic
+  envelope, so re-evaluating the same deployment at a later age widens
+  the spread without reshuffling which cells drifted up or down;
 * **line-open faults** — a whole wordline (row) or bitline (column) is
   electrically disconnected; every cell on it conducts nothing
   regardless of its programmed or stuck state (the structural
@@ -32,6 +42,7 @@ batch dims; the key/composition contract is documented in
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple
 
 import jax
@@ -50,7 +61,7 @@ HEALTHY, STUCK_OFF, STUCK_ON, OPEN = 0, 1, 2, 3
 # Fixed fold_in tags deriving the per-term sub-keys (see package
 # docstring: enabling one term must never reshuffle another's draws).
 _TAG_STUCK, _TAG_PROGRAM, _TAG_READ = 0, 1, 2
-_TAG_LINE, _TAG_CORR = 3, 4
+_TAG_LINE, _TAG_CORR, _TAG_RELAX = 3, 4, 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,23 +82,71 @@ class NonidealModel:
     p_open_bitline: float = 0.0   # whole-column (bitline) open rate
     sigma_corr: float = 0.0     # correlated log-normal spread (of ln g)
     corr_length: float = 4.0    # Gaussian correlation length, in cells
+    sigma_relax: float = 0.0    # relaxation spread of ln g per sqrt(ln t)
 
     def __post_init__(self):
-        if self.p_stuck_off + self.p_stuck_on > 1.0:
-            raise ValueError("p_stuck_off + p_stuck_on > 1")
-        for name in ("p_open_wordline", "p_open_bitline"):
+        # Fail at construction with a named field, not as NaNs three
+        # layers down: a negative rate silently flips `uniform < p`
+        # comparisons and a non-positive drift_time makes the power law
+        # complex-valued.
+        for name in ("p_stuck_off", "p_stuck_on", "p_open_wordline",
+                     "p_open_bitline"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
-                raise ValueError(f"{name} not in [0, 1]")
-        if self.sigma_corr > 0.0 and self.corr_length <= 0.0:
-            raise ValueError("corr_length must be > 0 with sigma_corr")
+                raise ValueError(
+                    f"{name}={p!r} must be a probability in [0, 1]")
+        for name in ("sigma_program", "sigma_read", "sigma_corr",
+                     "sigma_relax", "drift_nu"):
+            s = getattr(self, name)
+            if not s >= 0.0:   # rejects negatives *and* NaN
+                raise ValueError(f"{name}={s!r} must be >= 0")
+        if self.p_stuck_off + self.p_stuck_on > 1.0:
+            raise ValueError("p_stuck_off + p_stuck_on > 1")
+        if not self.drift_time > 0.0:
+            raise ValueError(
+                f"drift_time={self.drift_time!r} must be > 0 "
+                "(time in units of the programming time t0)")
+        if self.corr_length < 1.0:
+            # Sub-cell correlation lengths collapse the Gaussian filter
+            # to (numerically) white noise while the normalisation
+            # divides by a vanishing row norm.
+            raise ValueError(
+                f"corr_length={self.corr_length!r} must be >= 1 cell")
 
     @property
     def drift_factor(self) -> float:
         """Multiplier on the ON-state conductance at ``drift_time``."""
+        return self.drift_factor_at(self.drift_time)
+
+    def drift_factor_at(self, age: float) -> float:
+        """Power-law ON-conductance multiplier at runtime ``age``.
+
+        ``age`` is the time since (re)programming in units of t0; ages
+        below 1 clamp to 1 — the power law describes decay *after* the
+        programming pulse settles, and a freshly reprogrammed cell must
+        restart from the undrifted conductance.
+        """
         if self.drift_nu == 0.0:
             return 1.0
-        return float(self.drift_time ** -self.drift_nu)
+        return float(max(float(age), 1.0) ** -self.drift_nu)
+
+    def relax_sigma_at(self, age: float) -> float:
+        """Spread of the relaxation term of ln g at runtime ``age``.
+
+        The log-time diffusion envelope ``sigma_relax * sqrt(ln age)``
+        (zero at age <= 1): scaling one fixed per-cell draw by this
+        deterministic factor ages a deployment in place — the draw
+        never reshuffles, only its amplitude grows.
+        """
+        if self.sigma_relax == 0.0:
+            return 0.0
+        return float(self.sigma_relax
+                     * math.sqrt(max(math.log(float(age)), 0.0)))
+
+    @property
+    def has_aging(self) -> bool:
+        """Does any term change as the runtime age clock advances?"""
+        return self.drift_nu > 0.0 or self.sigma_relax > 0.0
 
     @property
     def has_line_opens(self) -> bool:
@@ -98,7 +157,7 @@ class NonidealModel:
         return (self.p_stuck_off == 0.0 and self.p_stuck_on == 0.0
                 and self.sigma_program == 0.0 and self.sigma_read == 0.0
                 and self.drift_nu == 0.0 and not self.has_line_opens
-                and self.sigma_corr == 0.0)
+                and self.sigma_corr == 0.0 and self.sigma_relax == 0.0)
 
 
 class CellSample(NamedTuple):
@@ -108,11 +167,16 @@ class CellSample(NamedTuple):
     gamma: f32 multiplicative programming gain (1 where sigma = 0).
     read:  f32 standard-normal read-noise draw (0 where sigma = 0;
            scaled by ``sigma_read * g_on`` at application time).
+    relax: f32 standard-normal relaxation draw, or None when
+           ``sigma_relax = 0`` — scaled by the deterministic
+           ``relax_sigma_at(age)`` envelope at application time, so one
+           fixed draw serves every age.
     """
 
     stuck: jax.Array
     gamma: jax.Array
     read: jax.Array
+    relax: jax.Array | None = None
 
 
 def sample_stuck(key: jax.Array, shape: tuple[int, ...],
@@ -216,7 +280,12 @@ def sample_cell_state(key: jax.Array, shape: tuple[int, ...],
                                  shape)
     else:
         read = jnp.zeros(shape, jnp.float32)
-    return CellSample(stuck, gamma, read)
+    if model.sigma_relax > 0.0:
+        relax = jax.random.normal(jax.random.fold_in(key, _TAG_RELAX),
+                                  shape)
+    else:
+        relax = None
+    return CellSample(stuck, gamma, read, relax)
 
 
 def conductances_from_masks(active: jax.Array,
@@ -227,8 +296,8 @@ def conductances_from_masks(active: jax.Array,
 
 
 def apply_to_conductances(active: jax.Array, sample: CellSample,
-                          spec: CrossbarSpec,
-                          model: NonidealModel) -> jax.Array:
+                          spec: CrossbarSpec, model: NonidealModel,
+                          age: float | None = None) -> jax.Array:
     """Perturbed conductance field of a tile population.
 
     ``active`` (..., J, K) holds the clean activity masks; the sample's
@@ -239,12 +308,21 @@ def apply_to_conductances(active: jax.Array, sample: CellSample,
     its pinned state, so it carries no programming terms), read noise
     perturbs whatever is read back.  Conductances are clipped at 0 to
     keep the solver's operator positive semi-definite.
+
+    ``age`` evaluates the time-dependent terms (power-law drift and
+    stochastic relaxation) at a runtime clock instead of the model's
+    static ``drift_time`` — same sample, later point on its lifetime
+    trajectory.
     """
+    t = model.drift_time if age is None else age
     g_on = jnp.float32(1.0 / spec.r_on)
     g_off = jnp.float32(1.0 / spec.r_off)
-    g = jnp.where(active > 0, g_on * jnp.float32(model.drift_factor),
-                  g_off)
+    g = jnp.where(active > 0,
+                  g_on * jnp.float32(model.drift_factor_at(t)), g_off)
     g = g * sample.gamma
+    s_relax = model.relax_sigma_at(t)
+    if sample.relax is not None and s_relax > 0.0:
+        g = g * jnp.exp(jnp.float32(s_relax) * sample.relax)
     g = jnp.where(sample.stuck == STUCK_ON, g_on, g)
     g = jnp.where(sample.stuck == STUCK_OFF, g_off, g)
     if model.sigma_read > 0.0:
@@ -256,7 +334,8 @@ def apply_to_conductances(active: jax.Array, sample: CellSample,
 
 
 def cell_values(bits: jax.Array, stuck: jax.Array, gamma: jax.Array,
-                model: NonidealModel | None = None) -> jax.Array:
+                model: NonidealModel | None = None,
+                age: float | None = None) -> jax.Array:
     """Analog cell values for the Eq-17 effective-weight evaluator.
 
     Maps programmed bits b in {0, 1} to the normalised conductance-level
@@ -264,9 +343,14 @@ def cell_values(bits: jax.Array, stuck: jax.Array, gamma: jax.Array,
     and OPEN -> 0, healthy -> ``drift * gamma * b``.  (Read noise has
     no weight-level analogue — it is a per-read term, modelled by the
     circuit-level Monte-Carlo engine and the serving-path read-noise
-    hook.)  All arguments broadcast.
+    hook.)  All arguments broadcast.  ``age`` evaluates drift at a
+    runtime clock instead of the model's static ``drift_time``.
     """
-    drift = 1.0 if model is None else model.drift_factor
+    if model is None:
+        drift = 1.0
+    else:
+        drift = model.drift_factor_at(
+            model.drift_time if age is None else age)
     c = bits.astype(jnp.float32) * gamma * jnp.float32(drift)
     c = jnp.where(stuck == STUCK_ON, 1.0, c)
     return jnp.where((stuck == STUCK_OFF) | (stuck == OPEN), 0.0, c)

@@ -24,6 +24,20 @@ conductance noise on every prefill/decode forward pass.
 Both prefill and decode donate the decode state: prefill consumes the
 freshly initialised cache and decode consumes its predecessor's, so
 there is no full cache copy at the prefill->decode handoff.
+
+**Lifetime resilience** (``health=HealthConfig(...)``): the engine
+additionally captures per-matrix lifetime state at deployment
+(:mod:`repro.deploy.lifetime`) and owns a
+:class:`repro.health.HealthController`.  ``advance(dt)`` ages the
+deployed conductances on the runtime drift clock (power-law drift +
+stochastic relaxation re-evaluated against the clock; same draws, later
+point on the trajectory); ``check_health()`` runs one calibration-probe
+round and climbs the remediation ladder (recalibrate -> reprogram ->
+demote) on any matrix whose drift detector trips.  Refreshed
+deployments are **hot-swapped atomically**: the cim tree is replaced by
+fresh dicts, never mutated, and ``generate`` snapshots the tree once at
+entry — a generation in flight keeps the exact bank it started with,
+bit-deterministically.
 """
 from __future__ import annotations
 
@@ -83,13 +97,15 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx | None = None,
                  max_seq: int = 2048, temperature: float = 0.0,
                  plan_cache=None, nonideal=None, nonideal_seed: int = 0,
-                 fault_aware: bool = True, pipeline=None):
+                 fault_aware: bool = True, pipeline=None, health=None):
         self.cfg = cfg
         self.ctx = ctx or ShardingCtx()
         self.params = params
         self.max_seq = max_seq
         self.cim = None
         self.deploy_report = None
+        self.lifetime: dict = {}
+        self.health = None
         if cfg.cim.enabled:
             from repro.deploy import PlanCache, deploy_model_params
             cache = plan_cache if plan_cache is not None else PlanCache()
@@ -101,11 +117,19 @@ class ServeEngine:
             # imperfect devices: stuck faults / variation are sampled
             # once at deployment (keyed by nonideal_seed), folded into
             # the deployment codes/gain, and — with fault_aware —
-            # steered around by the MDM row sort.
+            # steered around by the MDM row sort.  ``health`` (a
+            # repro.health.HealthConfig) additionally captures lifetime
+            # state and arms the monitor/remediation controller.
+            want_health = (health is not None and nonideal is not None
+                           and not nonideal.is_ideal)
             self.cim, self.deploy_report = deploy_model_params(
                 params, cfg, cache=cache, ctx=self.ctx,
                 nonideal=nonideal, nonideal_key=nonideal_seed,
-                fault_aware=fault_aware, pipeline=pipeline)
+                fault_aware=fault_aware, pipeline=pipeline,
+                lifetime=self.lifetime if want_health else None)
+            if want_health:
+                from repro.health import HealthController
+                self.health = HealthController(self.lifetime, health)
         # Per-read conductance noise: only drawn when the nonideal model
         # asks for it — otherwise read_key stays None and both
         # lowerables trace the bit-identical noiseless graph.
@@ -120,6 +144,61 @@ class ServeEngine:
         self._decode = jax.jit(
             make_decode_step(cfg, self.ctx, temperature),
             donate_argnums=(1,))
+        self._probe_base = jax.random.PRNGKey(nonideal_seed)
+
+    # -- lifetime resilience -------------------------------------------
+
+    def _swap(self, dirty: set) -> None:
+        """Atomically swap refreshed deployments into the serving tree.
+
+        Builds a *fresh* dict tree containing the restacked groups and
+        replaces ``self.cim`` in one assignment — the old tree object
+        is never mutated, so any generation loop that snapshotted it
+        keeps serving a fully consistent bank (the hot-swap atomicity
+        contract, pinned in tests/test_health.py).
+        """
+        if not dirty:
+            return
+        from repro.deploy import restack_group
+        cim = {slot: dict(sub) for slot, sub in self.cim.items()}
+        for slot, pname in dirty:
+            cim[slot][pname] = restack_group(self.lifetime, slot, pname)
+        self.cim = cim
+
+    def advance(self, dt: float) -> None:
+        """Advance the serving drift clock by ``dt`` (t0 units).
+
+        Ages every live matrix (power-law drift + relaxation evaluated
+        against the new age — same draws, later point on the
+        trajectory) and hot-swaps the re-derived deployments.  This is
+        the physics, not a remediation: an unmonitored engine ages the
+        same way, it just never probes or heals.
+        """
+        if self.health is None:
+            return
+        self._swap(self.health.advance(dt))
+
+    def check_health(self, read_key: jax.Array | None = None):
+        """One probe round + remediation pass; returns a HealthReport.
+
+        Probes run through the production ``cim_mvm`` against the
+        currently-served (aged) deployments; with per-read noise armed,
+        each round derives a fresh probe read key off the deployment
+        seed (deterministic per engine seed and round count).
+        """
+        if self.health is None:
+            return None
+        if read_key is None and self._read_noise:
+            read_key = jax.random.fold_in(
+                jax.random.fold_in(self._probe_base, 9),
+                self.health.rounds)
+        self._swap(self.health.probe(read_key))
+        return self.health.report()
+
+    @property
+    def health_report(self):
+        """Current HealthReport, or None when health is not armed."""
+        return None if self.health is None else self.health.report()
 
     def generate(self, prompts: jax.Array, n_tokens: int,
                  seed: int = 0) -> jax.Array:
@@ -130,18 +209,29 @@ class ServeEngine:
         forward pass — the prefill and each decode step — draws fresh
         crossbar read noise from a key forked off that step's sampling
         key; generation stays deterministic per ``seed``.
+
+        The cim tree is snapshotted once at entry: a concurrent
+        ``advance``/``check_health`` hot-swap replaces ``self.cim``
+        with a fresh tree and never mutates the old one, so this
+        generation serves the exact bank it started with.  With
+        ``health.age_per_token > 0`` the served tokens advance the
+        drift clock (simulated reads) *after* the batch completes.
         """
+        cim = self.cim
         B = prompts.shape[0]
         state = init_decode_state(self.cfg, B, self.max_seq)
         key = jax.random.PRNGKey(seed)
         rk = lambda k: jax.random.fold_in(k, 1) if self._read_noise else None
         key, k0 = jax.random.split(key)
         tok, state = self._prefill(self.params, state, prompts, k0,
-                                   self.cim, rk(k0))
+                                   cim, rk(k0))
         out = [tok]
         for _ in range(n_tokens - 1):
             key, k = jax.random.split(key)
             tok, state = self._decode(self.params, state, tok, k,
-                                      self.cim, rk(k))
+                                      cim, rk(k))
             out.append(tok)
+        if (self.health is not None
+                and self.health.cfg.age_per_token > 0.0):
+            self.advance(n_tokens * self.health.cfg.age_per_token)
         return jnp.stack(out, axis=1)

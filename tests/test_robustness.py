@@ -216,9 +216,18 @@ def test_spare_line_cache_token_carries_parameters():
 
 def test_spare_line_beats_fault_aware_under_line_opens():
     """Tier-1 version of the fault_line_open acceptance bar: under
-    known open lines, row+column spare-line remapping must cut both the
-    measured NF and the programmed bits lost to severed lines vs the
-    row-only fault-aware sort (which cannot move columns)."""
+    known open lines, row+column spare-line remapping must beat the
+    row-only fault-aware sort (which cannot move columns) in the
+    *accuracy currency* — the significance-weighted output error of the
+    measured circuit, and the significance-weighted current severed
+    lines silence.  Since the column steering became
+    significance-weighted, raw NF / raw bits lost are no longer the
+    gate: the steering deliberately sacrifices dense *low-order* planes
+    (many cheap bits) to protect sparse high-order ones (few expensive
+    bits), so the weighted metrics are what must win."""
+    from repro.core.mdm import physical_column_significance
+    from repro.nonideal.models import OPEN
+
     spec = CrossbarSpec(rows=32, cols=32, n_bits=8)
     w = jax.random.laplace(jax.random.PRNGKey(0), (64, 16)) * 0.01
     sliced = bitslice(w, spec.n_bits)
@@ -227,17 +236,29 @@ def test_spare_line_beats_fault_aware_under_line_opens():
     stuck = sample_line_open(jax.random.PRNGKey(3),
                              (ti, tn, spec.rows, spec.cols), 0.06, 0.06)
     model = NonidealModel(p_open_wordline=0.06, p_open_bitline=0.06)
+    rho = spec.r_on / spec.r_off
     out = {}
     for name in ("fault_aware", "spare_line"):
+        pipe = _P[name]
         plan = plan_from_bits(sliced.bits, sliced.scale, spec,
-                              _P[name], stuck)
+                              pipe, stuck)
         placed = placed_masks(sliced.bits, plan, spec)
         flat = placed.reshape(T, spec.rows, spec.cols)
         sflat = jnp.asarray(stuck).reshape(T, spec.rows, spec.cols)
+        col_perm = (None if plan.col_perm is None
+                    else jnp.reshape(plan.col_perm, (T, spec.cols)))
+        cw = physical_column_significance(spec, pipe.reversed_dataflow,
+                                          col_perm, T)
         res = mc_nf(flat, spec, model, 2, jax.random.PRNGKey(7),
-                    stuck=sflat, precision="f64")
-        out[name] = (float(np.mean(np.asarray(res.nf_total))),
-                     int(jnp.sum((flat > 0) & (sflat == OPEN))))
+                    stuck=sflat, col_weights=cw, precision="f64")
+        # Significance-weighted severed current: every cell on an open
+        # line loses its whole current (off-cells included, at the
+        # r_on/r_off ratio), weighted by the hosted plane.
+        cell_cur = jnp.where(flat > 0, 1.0, rho)
+        wlost = float(jnp.sum(jnp.asarray(cw)[:, None, :] * cell_cur
+                              * (sflat == OPEN)))
+        out[name] = (float(np.mean(np.asarray(res.weighted_err))),
+                     wlost)
     assert out["spare_line"][0] < out["fault_aware"][0]
     assert out["spare_line"][1] < out["fault_aware"][1]
 
