@@ -22,10 +22,11 @@ import dataclasses
 import json
 import os
 import sys
-import time
 from typing import Callable
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import telemetry as tm  # noqa: E402  (stdlib-only, jax-free)
 
 # 8-way host-device simulation for the sharded-solver rows (must land
 # before the first jax import initialises the backend); append so an
@@ -161,6 +162,10 @@ def main() -> None:
                          "name); unknown names are an error")
     ap.add_argument("--list", action="store_true",
                     help="list registered benchmarks and exit")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a results/trace/<name>.jsonl span "
+                         "trace per benchmark (summarise with "
+                         "scripts/trace_report.py)")
     args = ap.parse_args()
 
     if args.list:
@@ -176,27 +181,47 @@ def main() -> None:
     else:
         selected = list(BENCHES)
 
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+
+    # The harness runs with telemetry on: every entry in
+    # results/benchmarks.json carries the metrics the instrumented
+    # library paths recorded during that benchmark (registry reset
+    # per bench, so counters are per-entry, not cumulative).
+    tm.enable()
     results, csv_lines = {}, ["name,seconds,derived"]
     for bench in selected:
         print(f"== {bench.name} ==")
-        t0 = time.perf_counter()
+        tm.registry().reset()
+        trace_rel = None
+        if args.trace:
+            trace_rel = os.path.join("trace", f"{bench.name}.jsonl")
+            tm.trace_to(os.path.join(out, trace_rel))
+        started_at = tm.wall_time()
+        t0 = tm.monotonic()
         try:
-            res = bench.run(args.quick)
-            dt = time.perf_counter() - t0
+            with tm.span(f"bench/{bench.name}", quick=args.quick):
+                res = bench.run(args.quick)
+            dt = tm.monotonic() - t0
             results[bench.name] = {"ok": True, "seconds": dt,
                                    "result": res}
             derived = _derive(bench.name, res)
         except Exception as e:  # pragma: no cover
-            dt = time.perf_counter() - t0
+            dt = tm.monotonic() - t0
             results[bench.name] = {"ok": False, "seconds": dt,
                                    "error": repr(e)}
             derived = f"ERROR:{e!r}"
+        if args.trace:
+            tm.trace_stop()
+        results[bench.name]["started_at"] = started_at
+        results[bench.name]["telemetry"] = {
+            "metrics": tm.registry().snapshot(),
+            "trace": trace_rel,
+        }
         csv_lines.append(f"{bench.name},{dt:.3f},{derived}")
         print()
 
     print("\n".join(csv_lines))
-    out = os.path.join(os.path.dirname(__file__), "..", "results")
-    os.makedirs(out, exist_ok=True)
     path = os.path.join(out, "benchmarks.json")
     # Merge into the existing record so `--only NAME` refreshes one
     # entry instead of clobbering the rest of the matrix.

@@ -23,13 +23,20 @@ else
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q "${XDIST_ARGS[@]}" -m "slow or not slow" "$@"
+# Benchmarks run with span tracing on: each leaves a JSONL trace in
+# results/trace/<bench>.jsonl (archived with the nightly results) and
+# the per-phase wall/self-time summary lands in
+# results/trace/summary.txt via scripts/trace_report.py.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only deploy_throughput
+    python -m benchmarks.run --trace --only deploy_throughput
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fault_tolerance
+    python -m benchmarks.run --trace --only fault_tolerance
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fault_line_open
+    python -m benchmarks.run --trace --only fault_line_open
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only serving_health
+    python -m benchmarks.run --trace --only serving_health
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only mapping_matrix
+    python -m benchmarks.run --trace --only mapping_matrix
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/trace_report.py results/trace/*.jsonl \
+    | tee results/trace/summary.txt

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Summarise telemetry trace files into per-phase time tables.
+
+    PYTHONPATH=src python scripts/trace_report.py results/trace/*.jsonl
+    PYTHONPATH=src python scripts/trace_report.py --json trace.jsonl
+
+For each JSONL trace (written by ``repro.telemetry.trace_to``) prints a
+table of per-phase wall time (total), self time (total minus direct
+children), counts and min/max, plus the coverage line: what fraction
+of the root spans' wall time the phase self-times account for.
+
+Deliberately jax-free (imports only ``repro.telemetry``): runnable on
+a box with no accelerator stack, same contract as ``scripts/lint.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.telemetry.report import aggregate, load_spans  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="trace_report",
+        description="per-phase wall/self-time summary of telemetry "
+                    "JSONL traces")
+    ap.add_argument("paths", nargs="+", help="trace .jsonl file(s)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    from repro.telemetry.report import format_table
+
+    out_json: dict = {}
+    status = 0
+    for path in args.paths:
+        try:
+            spans = load_spans(path)
+        except OSError as e:
+            print(f"{path}: cannot read trace: {e}", file=sys.stderr)
+            status = 1
+            continue
+        stats, wall = aggregate(spans)
+        if args.json:
+            out_json[path] = {"wall": wall, "spans": len(spans),
+                              "phases": stats}
+        else:
+            print(f"== {path} ({len(spans)} span(s)) ==")
+            if not spans:
+                print("(empty trace)")
+            else:
+                print(format_table(stats, wall))
+            print()
+    if args.json:
+        print(json.dumps(out_json, indent=1))
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """reprolint: repo-specific static analysis for the JAX/Pallas contracts.
 
-Five PRs of growth accreted engineering contracts that nothing
+Successive PRs of growth accreted engineering contracts that nothing
 enforced; this package enforces them:
 
 =======  ==========================  =====================================
@@ -20,6 +20,9 @@ RPL004   interpret-test-only         ``interpret=True`` / interpret-
                                      default dispatch only under tests/
 RPL005   import-time-jnp             no module-level jax.numpy
                                      computation
+RPL006   telemetry-clock             no raw time.time()/perf_counter()/
+                                     monotonic() in library code; route
+                                     through ``repro.telemetry``
 =======  ==========================  =====================================
 
 Two tiers:

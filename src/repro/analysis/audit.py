@@ -21,7 +21,14 @@ AUD005  a ``benchmarks/`` module exists with no entry in the
 AUD006  ``scripts/test_nightly.sh`` invokes a ``--only`` token the
         registry cannot resolve — before the registry grew
         :func:`benchmarks.run.resolve_only`, such a typo silently ran
-        *nothing* and exited 0.
+        *nothing* and exited 0;
+AUD007  telemetry metric declarations disagree with the live default
+        :class:`repro.telemetry.MetricsRegistry`: a metric declared
+        with a non-literal name (unauditable), declared twice, declared
+        but absent from the live registry, or live under the
+        ``repro_`` namespace with no module-level declaration in
+        ``src/repro`` — dashboards scrape names, so the set must be
+        statically enumerable and collision-free.
 
 The audit is **mechanical**: it default-constructs every registered
 strategy, perturbs each dataclass field in place
@@ -38,11 +45,14 @@ benchmark registries) — it is reached only through ``--audit`` /
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
+import importlib
 import os
 import re
 import sys
 
+from repro.analysis.core import FileContext, build_alias_map
 from repro.core.tiling import CrossbarSpec
 from repro.deploy.cache import plan_key
 from repro.mapping.base import KINDS, available, get_strategy
@@ -314,8 +324,124 @@ def audit_benchmark_registry(module_files=None, registry=None,
     return findings
 
 
+# Default-registry factory spellings the declaration scan recognises;
+# metrics built any other way (local registries, loops over computed
+# names) are invisible to dashboards and flagged below.
+_TM_FACTORIES = frozenset(
+    f"repro.telemetry.{tail}{kind}"
+    for tail in ("", "metrics.")
+    for kind in ("counter", "gauge", "histogram"))
+
+
+def _module_of(path: str) -> str | None:
+    """``.../src/repro/x/y.py`` -> ``repro.x.y`` (None off-tree)."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    if "repro" not in parts:
+        return None
+    rel = parts[parts.index("repro"):]
+    if rel[-1] == "__init__.py":
+        rel = rel[:-1]
+    elif rel[-1].endswith(".py"):
+        rel[-1] = rel[-1][:-3]
+    return ".".join(rel)
+
+
+def audit_metric_registry(src_files=None,
+                          live_names=None) -> list[AuditFinding]:
+    """Static metric declarations x live default registry (AUD007).
+
+    Scans ``src/repro`` for module-level ``tm.counter/gauge/histogram``
+    declarations (the only sanctioned idiom — a metric's name must be a
+    string literal so dashboards can be audited without running the
+    stack), then imports the declaring modules and compares against
+    ``repro.telemetry.registry().names()``.
+
+    Test overrides: ``src_files`` maps path -> source text;
+    ``live_names`` supplies the registry contents directly (both given
+    => no filesystem walk, no imports).
+    """
+    findings: list[AuditFinding] = []
+    if src_files is None:
+        src_files = {}
+        src_dir = os.path.join(_repo_root(), "src", "repro")
+        for dirpath, _, names in os.walk(src_dir):
+            for fn in sorted(names):
+                if fn.endswith(".py"):
+                    p = os.path.join(dirpath, fn)
+                    with open(p, encoding="utf-8") as f:
+                        src_files[p] = f.read()
+
+    declared: dict[str, str] = {}
+    declaring: set[str] = set()
+    for path in sorted(src_files):
+        source = src_files[path]
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            findings.append(AuditFinding(
+                "AUD007", path, f"unparseable source: {e!r}"))
+            continue
+        ctx = FileContext(path=path, source=source, tree=tree,
+                          role="library",
+                          aliases=build_alias_map(tree))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if (ctx.expand(node.func) or "") not in _TM_FACTORIES:
+                continue
+            subject = f"{os.path.basename(path)}:{node.lineno}"
+            arg = node.args[0] if node.args else None
+            if not (isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, str)):
+                findings.append(AuditFinding(
+                    "AUD007", subject,
+                    "telemetry metric declared with a non-literal "
+                    "name; the metric set must be statically "
+                    "enumerable"))
+                continue
+            if arg.value in declared:
+                findings.append(AuditFinding(
+                    "AUD007", subject,
+                    f"metric {arg.value!r} already declared in "
+                    f"{declared[arg.value]} — the default registry "
+                    f"rejects duplicates at import"))
+                continue
+            declared[arg.value] = subject
+            declaring.add(path)
+
+    if live_names is None:
+        for path in sorted(declaring):
+            mod = _module_of(path)
+            if mod is None:
+                continue
+            try:
+                importlib.import_module(mod)
+            except Exception as e:
+                findings.append(AuditFinding(
+                    "AUD007", mod,
+                    f"cannot import metric-declaring module: {e!r}"))
+        from repro import telemetry
+        live_names = telemetry.registry().names()
+
+    live = set(live_names)
+    for name in sorted(set(declared) - live):
+        findings.append(AuditFinding(
+            "AUD007", name,
+            f"declared at {declared[name]} but absent from the live "
+            f"default registry (conditional declaration?)"))
+    for name in sorted(live - set(declared)):
+        if name.startswith("repro_"):
+            findings.append(AuditFinding(
+                "AUD007", name,
+                "live registry holds a repro_* metric with no "
+                "module-level declaration under src/repro — "
+                "dashboards cannot discover it statically"))
+    return findings
+
+
 def run_audit() -> list[AuditFinding]:
     """Full semantic audit; empty list means every contract holds."""
     return (audit_fingerprint_coverage()
             + audit_cache_tokens()
-            + audit_benchmark_registry())
+            + audit_benchmark_registry()
+            + audit_metric_registry())

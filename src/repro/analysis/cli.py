@@ -23,7 +23,7 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="reprolint",
         description="repo-specific static analysis for the JAX/Pallas "
-                    "contracts (RPL001-RPL005)")
+                    "contracts (RPL001-RPL006)")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files or directories to lint (default: src)")
     ap.add_argument("--json", action="store_true",

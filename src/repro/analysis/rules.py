@@ -1,4 +1,4 @@
-"""reprolint rules RPL001-RPL005: this repo's JAX/Pallas contracts.
+"""reprolint rules RPL001-RPL006: this repo's JAX/Pallas contracts.
 
 Each rule machine-enforces a convention the ROADMAP records (and PRs
 1-5 paid for the hard way).  None of these misuses *crash* — they
@@ -10,6 +10,7 @@ for the rule-by-rule rationale and the suppression syntax.
 from __future__ import annotations
 
 import ast
+import os
 from typing import Iterator
 
 from repro.analysis.core import FileContext, Rule, register_rule
@@ -530,3 +531,42 @@ class ImportTimeJnp(Rule):
                            f"(backend init + possible compile); use "
                            f"numpy for constants or build lazily")
             stack.extend(ast.iter_child_nodes(node))
+
+
+# --------------------------------------------------------------------------
+# RPL006 — library code times through repro.telemetry, not time.*
+# --------------------------------------------------------------------------
+
+
+@register_rule
+class TelemetryClock(Rule):
+    code = "RPL006"
+    name = "telemetry-clock"
+    rationale = ("Ad-hoc time.time()/perf_counter() calls scattered "
+                 "through library code bypass the telemetry layer: their "
+                 "readings reach no metric, no trace, and no report "
+                 "schema.  repro.telemetry.monotonic/wall_time are the "
+                 "same clocks behind one instrumentable front door.")
+
+    BANNED = frozenset({
+        "time.time", "time.perf_counter", "time.monotonic",
+        "time.perf_counter_ns", "time.monotonic_ns",
+        "time.process_time", "time.process_time_ns",
+    })
+
+    def check(self, ctx: FileContext) -> Iterator[tuple[int, int, str]]:
+        if not ctx.is_library:
+            return
+        parts = os.path.normpath(os.path.abspath(ctx.path)).split(os.sep)
+        if "telemetry" in parts and "repro" in parts:
+            return  # the one module allowed to own the raw clocks
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = ctx.expand(node.func) or ""
+            if path in self.BANNED:
+                yield (node.lineno, node.col_offset,
+                       f"{path}() in library code; use repro.telemetry"
+                       f".monotonic() (durations) or .wall_time() "
+                       f"(timestamps) so readings feed the metrics/"
+                       f"trace layer")

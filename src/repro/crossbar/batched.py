@@ -56,6 +56,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.compat import enable_x64, has_batched_tridiagonal_solve
 from repro.core.tiling import CrossbarSpec
 from repro.crossbar.solver import _jacobi_diag, _stencil_matvec
@@ -154,6 +155,38 @@ class SolverReport(NamedTuple):
     @property
     def all_converged(self) -> bool:
         return bool(jnp.all(self.converged))
+
+
+_C_SOLVES = tm.counter(
+    "repro_solver_solves_total",
+    "Checked batched circuit solves (one per *_checked call).")
+_C_SOLVE_ITERS = tm.counter(
+    "repro_solver_iterations_total",
+    "Shared PCG iterations across all solve stages.")
+_C_SOLVE_ESC = tm.counter(
+    "repro_solver_escalations_total",
+    "Watchdog escalation rungs actually run.")
+_C_SOLVE_FAILED = tm.counter(
+    "repro_solver_failed_tiles_total",
+    "Tiles still unconverged after the full escalation ladder.")
+
+
+def record_solver_report(report: SolverReport) -> None:
+    """Fold one watchdog verdict into the solver counters.
+
+    Called only by the ``*_checked`` front doors (here and in
+    :mod:`repro.distributed.solver_shard`) — never by the inner stages,
+    so escalated reruns are not double-counted.  The ``int()``
+    coercions block on the device values, which is why the whole body
+    is gated on :func:`repro.telemetry.enabled`: with telemetry off the
+    solve stays fully async.
+    """
+    if not tm.enabled():
+        return
+    _C_SOLVES.inc()
+    _C_SOLVE_ITERS.inc(int(report.iterations))
+    _C_SOLVE_ESC.inc(int(report.escalations))
+    _C_SOLVE_FAILED.inc(int(report.n_failed))
 
 
 # The stencil physics lives once, in the oracle (solver.py); the batched
@@ -669,6 +702,7 @@ def measured_nf_conductances_checked(
                   for f in res[:-1]), res.iterations)
             report = report._replace(
                 converged=report.converged.reshape(batch_shape))
+        record_solver_report(report)
         return res, report
 
 

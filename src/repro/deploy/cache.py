@@ -43,8 +43,26 @@ import threading
 import jax
 import numpy as np
 
+from repro import telemetry as tm
 from repro.core.mdm import MdmPlan
 from repro.core.tiling import CrossbarSpec
+
+# Host-boundary cache telemetry (docs/observability.md): mirrors the
+# per-instance CacheStats onto the process-global registry so a serving
+# deployment's cache traffic is scrapeable without plumbing the stats
+# object out.  All record calls are no-ops while telemetry is disabled.
+_M_PROBES = tm.counter(
+    "repro_plan_cache_probes_total",
+    "Plan-cache entry probes by result (hit/miss).", labels=("result",))
+_M_MANIFEST_PROBES = tm.counter(
+    "repro_plan_cache_manifest_probes_total",
+    "Whole-checkpoint manifest probes by result (hit/miss).",
+    labels=("result",))
+_M_PUTS = tm.counter(
+    "repro_plan_cache_puts_total", "Plan entries written.")
+_M_READ_BYTES = tm.counter(
+    "repro_plan_cache_read_bytes_total",
+    "Bytes read by plan-cache hits (entries and manifests).")
 
 # Bump when the MdmPlan layout or planning semantics change: old
 # entries become unreachable (different keys) instead of wrongly hit.
@@ -238,9 +256,12 @@ class PlanCache:
         except (FileNotFoundError, ValueError, OSError):
             with self._lock:
                 self.stats.misses += 1
+            _M_PROBES.labels(result="miss").inc()
             return None
         with self._lock:
             self.stats.hits += 1
+        _M_PROBES.labels(result="hit").inc()
+        _M_READ_BYTES.inc(len(buf))
         return plan
 
     def put(self, key: str, plan: MdmPlan) -> None:
@@ -249,6 +270,7 @@ class PlanCache:
             return
         with self._lock:
             self.stats.puts += 1
+        _M_PUTS.inc()
 
     def _atomic_write(self, path: str, payload: bytes) -> bool:
         try:
@@ -318,9 +340,12 @@ class PlanCache:
         except (FileNotFoundError, ValueError, KeyError, OSError):
             with self._lock:
                 self.stats.manifest_misses += 1
+            _M_MANIFEST_PROBES.labels(result="miss").inc()
             return None
         with self._lock:
             self.stats.manifest_hits += 1
+        _M_MANIFEST_PROBES.labels(result="hit").inc()
+        _M_READ_BYTES.inc(len(buf))
         return plans
 
     def put_manifest(self, keys, plans) -> None:

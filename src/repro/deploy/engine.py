@@ -19,12 +19,11 @@ otherwise.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.configs.base import ModelConfig
 from repro.core.bitslice import magnitude_scale_host
 from repro.core.mdm import MdmPlan
@@ -44,6 +43,13 @@ DEPLOYABLE = _QKV_NAMES + _OUT_NAMES + _MLP_NAMES
 # MoE expert banks: (R, E, D, F) stacks, deployable per expert when the
 # pipeline partition is expert-axis-aware.
 MOE_EXPERT_NAMES = ("ffn_we_gate", "ffn_we_up", "ffn_we_down")
+
+_H_DEPLOY = tm.histogram(
+    "repro_deploy_seconds",
+    "End-to-end deploy_model_params wall time (collect+plan+package).")
+_C_DEPLOY = tm.counter(
+    "repro_deploy_matrices_total",
+    "Model matrices per deployment outcome.", labels=("status",))
 
 
 def _as_matrix(name: str, w) -> np.ndarray:
@@ -322,12 +328,13 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
     hot-swap deployments at serving time.  Only meaningful together
     with a non-ideal model.
     """
-    t0 = time.perf_counter()
+    t0 = tm.monotonic()
     spec = spec_from_config(cfg)
     eta = cfg.cim.eta
     mode = pipeline if pipeline is not None else cfg.cim.mode
 
-    mats, summary = collect_model_matrices(params, cfg, mode)
+    with tm.span("deploy/collect"):
+        mats, summary = collect_model_matrices(params, cfg, mode)
 
     cells = fault_maps = None
     if nonideal is not None and not nonideal.is_ideal:
@@ -358,8 +365,9 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
             pipe_eff = pipe_eff.replace(rows=FaultAwareRows())
         mode = pipe_eff
 
-    plans, report = plan_matrices(mats, spec, mode, cache=cache, ctx=ctx,
-                                  fault_maps=fault_maps)
+    with tm.span("deploy/plan", matrices=len(mats)):
+        plans, report = plan_matrices(mats, spec, mode, cache=cache,
+                                      ctx=ctx, fault_maps=fault_maps)
 
     # Per-matrix PRNG tags for the per-read noise hook: unique over the
     # deterministic collection order, so one serving read key yields
@@ -404,46 +412,52 @@ def deploy_model_params(params: dict, cfg: ModelConfig,
         return dep
 
     cim_tree: dict = {}
-    for i, bt in enumerate(cfg.block_pattern):
-        slot = f"slot{i}_{bt}"
-        slot_deps: dict = {}
-        for pname in DEPLOYABLE:
-            if pname not in params.get(slot, {}):
-                continue
-            reps = params[slot][pname].shape[0]
-            deps = [_package(f"{slot}/{pname}/{r}") for r in range(reps)]
-            # One upload per stacked field (codes/pos/scale), not per
-            # matrix: the stack is the device hand-off point.
-            slot_deps[pname] = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *deps)
-        for pname in MOE_EXPERT_NAMES:
-            if pname not in params.get(slot, {}):
-                continue
-            reps = params[slot][pname].shape[0]
-            # Sub-matrix names come from the partition pass's split()
-            # output (collection order), not from a hardcoded naming
-            # scheme — a custom partition strategy packages the same
-            # way it collects.  Inner per-repeat stack stays on host
-            # (numpy); the outer stack over repeats is the single
-            # device upload per field.
-            rows_ = []
-            for r in range(reps):
-                prefix = f"{slot}/{pname}/{r}/"
-                subs = [n for n in mats if n.startswith(prefix)]
-                if not subs:
-                    break
-                rows_.append(jax.tree_util.tree_map(
-                    lambda *xs: np.stack(xs),
-                    *[_package(n) for n in subs]))
-            if len(rows_) == reps:
+    with tm.span("deploy/package", matrices=len(mats)):
+        for i, bt in enumerate(cfg.block_pattern):
+            slot = f"slot{i}_{bt}"
+            slot_deps: dict = {}
+            for pname in DEPLOYABLE:
+                if pname not in params.get(slot, {}):
+                    continue
+                reps = params[slot][pname].shape[0]
+                deps = [_package(f"{slot}/{pname}/{r}")
+                        for r in range(reps)]
+                # One upload per stacked field (codes/pos/scale), not
+                # per matrix: the stack is the device hand-off point.
                 slot_deps[pname] = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *rows_)
-        cim_tree[slot] = slot_deps
+                    lambda *xs: jnp.stack(xs), *deps)
+            for pname in MOE_EXPERT_NAMES:
+                if pname not in params.get(slot, {}):
+                    continue
+                reps = params[slot][pname].shape[0]
+                # Sub-matrix names come from the partition pass's
+                # split() output (collection order), not from a
+                # hardcoded naming scheme — a custom partition strategy
+                # packages the same way it collects.  Inner per-repeat
+                # stack stays on host (numpy); the outer stack over
+                # repeats is the single device upload per field.
+                rows_ = []
+                for r in range(reps):
+                    prefix = f"{slot}/{pname}/{r}/"
+                    subs = [n for n in mats if n.startswith(prefix)]
+                    if not subs:
+                        break
+                    rows_.append(jax.tree_util.tree_map(
+                        lambda *xs: np.stack(xs),
+                        *[_package(n) for n in subs]))
+                if len(rows_) == reps:
+                    slot_deps[pname] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *rows_)
+            cim_tree[slot] = slot_deps
 
     report = dict(report)
     report["matrices"] = summary
-    report["deploy_seconds"] = time.perf_counter() - t0
+    report["deploy_seconds"] = tm.monotonic() - t0
     report["n_slots"] = len(cim_tree)
+    _H_DEPLOY.observe(report["deploy_seconds"])
+    _C_DEPLOY.labels(status="deployed").inc(summary["n_deployed"])
+    _C_DEPLOY.labels(status="skipped").inc(summary["n_skipped"])
+    _C_DEPLOY.labels(status="degraded").inc(len(degraded))
     if cells is not None:
         report["nonideal"] = True
         # True only when planning actually consumed the fault maps

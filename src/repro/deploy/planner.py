@@ -31,7 +31,6 @@ bit-identical — ``tests/test_deploy.py`` pins this.  A
 """
 from __future__ import annotations
 
-import time
 from functools import partial
 from typing import Mapping
 
@@ -40,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry as tm
 from repro.core.bitslice import magnitude_scale_host
 from repro.core.mdm import MdmPlan, plan_tile_population
 from repro.core.tiling import CrossbarSpec
@@ -51,6 +51,13 @@ from repro.deploy.cache import (
 )
 from repro.distributed.sharding import ShardingCtx, logical_spec
 from repro.mapping import resolve_pipeline
+
+_H_PLAN = tm.histogram(
+    "repro_plan_seconds",
+    "Wall time of one fused plan_matrices pass (lookup + planning).")
+_C_PLAN_TILES = tm.counter(
+    "repro_plan_tiles_total",
+    "Crossbar tiles planned by the fused jit (cache misses only).")
 
 
 def quantize_codes_host(w: np.ndarray, scale: np.float32,
@@ -156,7 +163,7 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
     cache hit/miss split (including whether the whole set resolved from
     one manifest read) and wall-clock of the fused planning pass.
     """
-    t0 = time.perf_counter()
+    t0 = tm.monotonic()
     pipe = resolve_pipeline(mode, fault_maps is not None)
     if not (pipe.rows.uses_faults or pipe.cols.uses_faults):
         fault_maps = None
@@ -175,33 +182,35 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
                                                   np.int8)))
         return plan_key(weight_fingerprint(mats[name]), spec, token, ffp)
 
-    if cache is None:
-        misses = list(mats)
-    else:
-        # Fingerprint + probe in a thread pool: blake2b and file reads
-        # release the GIL, and the lookup pass is the whole cost of a
-        # full cache hit.
-        import os
-        from concurrent.futures import ThreadPoolExecutor
+    with tm.span("deploy/plan_lookup", matrices=len(mats)):
+        if cache is None:
+            misses = list(mats)
+        else:
+            # Fingerprint + probe in a thread pool: blake2b and file
+            # reads release the GIL, and the lookup pass is the whole
+            # cost of a full cache hit.
+            import os
+            from concurrent.futures import ThreadPoolExecutor
 
-        workers = max(1, min(os.cpu_count() or 1, len(mats)))
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            keys = dict(zip(mats, ex.map(key_of, mats)))
-            # One manifest read resolves the whole checkpoint when it
-            # was deployed before; otherwise fall back to per-entry
-            # probes (covers partial hits after a few matrices changed).
-            hit_all = cache.get_manifest(keys)
-            if hit_all is not None:
-                plans = hit_all
-                manifest_hit = True
-            else:
-                for name, hit in zip(keys, ex.map(cache.get,
-                                                  keys.values())):
-                    if hit is not None:
-                        plans[name] = hit
-                    else:
-                        misses.append(name)
-    t_lookup = time.perf_counter() - t0
+            workers = max(1, min(os.cpu_count() or 1, len(mats)))
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                keys = dict(zip(mats, ex.map(key_of, mats)))
+                # One manifest read resolves the whole checkpoint when
+                # it was deployed before; otherwise fall back to
+                # per-entry probes (covers partial hits after a few
+                # matrices changed).
+                hit_all = cache.get_manifest(keys)
+                if hit_all is not None:
+                    plans = hit_all
+                    manifest_hit = True
+                else:
+                    for name, hit in zip(keys, ex.map(cache.get,
+                                                      keys.values())):
+                        if hit is not None:
+                            plans[name] = hit
+                        else:
+                            misses.append(name)
+    t_lookup = tm.monotonic() - t0
 
     total_tiles = 0
     if misses:
@@ -226,30 +235,33 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         order = misses
 
         # ...then one fused planning jit over the whole population.
-        flat = np.concatenate(flat_chunks, axis=0)
-        faults = (None if fault_chunks is None
-                  else np.concatenate(fault_chunks, axis=0))
-        total_tiles = flat.shape[0]
-        sharding, n_shards = _population_sharding(ctx, total_tiles)
-        pad = (-total_tiles) % n_shards
-        if pad:  # zero-drive tiles plan to identity perms; dropped below
-            flat = np.concatenate(
-                [flat, np.zeros((pad,) + flat.shape[1:], flat.dtype)])
+        with tm.span("deploy/plan_fused", matrices=len(misses)):
+            flat = np.concatenate(flat_chunks, axis=0)
+            faults = (None if fault_chunks is None
+                      else np.concatenate(fault_chunks, axis=0))
+            total_tiles = flat.shape[0]
+            sharding, n_shards = _population_sharding(ctx, total_tiles)
+            pad = (-total_tiles) % n_shards
+            if pad:  # zero-drive tiles plan to identity; dropped below
+                flat = np.concatenate(
+                    [flat,
+                     np.zeros((pad,) + flat.shape[1:], flat.dtype)])
+                if faults is not None:
+                    faults = np.concatenate(
+                        [faults, np.zeros((pad,) + faults.shape[1:],
+                                          faults.dtype)])
+            put = (jnp.asarray if sharding is None
+                   else partial(jax.device_put, device=sharding))
+            flat = put(flat)
             if faults is not None:
-                faults = np.concatenate(
-                    [faults,
-                     np.zeros((pad,) + faults.shape[1:], faults.dtype)])
-        put = (jnp.asarray if sharding is None
-               else partial(jax.device_put, device=sharding))
-        flat = put(flat)
-        if faults is not None:
-            faults = put(faults)
-        pop = plan_tile_population(flat, spec, pipe, faults)
-        # One transfer per field; slicing back per matrix is then pure
-        # host views (an on-device slice would cost one dispatch per
-        # matrix per field — most of the warm fused wall-clock).
-        perm, position, col_perm, col_position, nf_before, nf_after = (
-            None if a is None else np.asarray(a) for a in pop)
+                faults = put(faults)
+            pop = plan_tile_population(flat, spec, pipe, faults)
+            # One transfer per field; slicing back per matrix is then
+            # pure host views (an on-device slice would cost one
+            # dispatch per matrix per field — most of the warm fused
+            # wall-clock).
+            perm, position, col_perm, col_position, nf_before, nf_after = (
+                None if a is None else np.asarray(a) for a in pop)
 
         rev = np.bool_(pipe.reversed_dataflow)
         off = 0
@@ -285,8 +297,10 @@ def plan_matrices(mats: Mapping[str, jax.Array], spec: CrossbarSpec,
         "manifest_hit": manifest_hit,
         "tiles_planned": int(total_tiles),
         "lookup_seconds": t_lookup,
-        "total_seconds": time.perf_counter() - t0,
+        "total_seconds": tm.monotonic() - t0,
     }
+    _H_PLAN.observe(report["total_seconds"])
+    _C_PLAN_TILES.inc(total_tiles)
     return plans, report
 
 

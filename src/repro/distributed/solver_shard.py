@@ -58,6 +58,7 @@ from repro.crossbar.batched import (
     _ref_subset,
     _solve_core,
     _solve_core_g,
+    record_solver_report,
     resolve_precision,
     solve_conductances_batched,
     tile_converged,
@@ -389,8 +390,10 @@ def measured_nf_conductances_sharded_checked(
             conv = tile_converged(bres, tol)
             if len(batch_shape) != 1:
                 conv = conv.reshape(batch_shape)
-            return res, SolverReport(conv, res.iterations, 0,
-                                     jnp.sum(~conv))
+            report = SolverReport(conv, res.iterations, 0,
+                                  jnp.sum(~conv))
+            record_solver_report(report)
+            return res, report
 
         spec_arr = jnp.array([spec.r, spec.r_on, spec.r_off],
                              jnp.float64)
@@ -418,4 +421,5 @@ def measured_nf_conductances_sharded_checked(
         if len(batch_shape) != 1:
             report = report._replace(
                 converged=report.converged.reshape(batch_shape))
+        record_solver_report(report)
         return res, report

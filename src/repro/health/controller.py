@@ -30,8 +30,10 @@ generation loop holding the previous tree keeps a consistent bank.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.deploy.lifetime import MatrixLifetime, group_key
 from repro.health.monitor import (
     HealthConfig,
@@ -39,6 +41,16 @@ from repro.health.monitor import (
     MatrixMonitor,
     estimate_recal,
 )
+
+_H_PROBE_ROUND = tm.histogram(
+    "repro_health_probe_round_seconds",
+    "Wall time of one full probe round (all live matrices).")
+_C_PROBES = tm.counter(
+    "repro_health_probes_total", "Per-matrix calibration probe reads.")
+_C_EVENTS = tm.counter(
+    "repro_health_events_total",
+    "Health events by kind (trip/clear/recalibrate/reprogram/demote).",
+    labels=("event",))
 
 
 class HealthController:
@@ -83,32 +95,88 @@ class HealthController:
         draws independent across matrices as usual.  Returns the dirty
         swap groups of every matrix a remediation refreshed.
         """
+        t0 = tm.monotonic()
+        with tm.span("health/probe_round", round=self.rounds + 1):
+            self.rounds += 1
+            live = [(name, lt) for name, lt in self.lifetimes.items()
+                    if not lt.demoted]
+            results = self._probe_reads(live, read_key)
+            dirty: set[tuple[str, str]] = set()
+            for name, lt in live:
+                mon = self.monitors[name]
+                y = results[name]
+                self.counters["probes"] += 1
+                _C_PROBES.inc()
+                det = mon.detector
+                clears_before = det.n_clears
+                tripped = mon.observe(y)
+                if det.n_clears > clears_before:
+                    self.counters["spontaneous_clears"] += (
+                        det.n_clears - clears_before)
+                    _C_EVENTS.labels(event="clear").inc(
+                        det.n_clears - clears_before)
+                    self._log(name, "clear", f"z={det.z:.2f}")
+                if tripped:
+                    self.counters["trips"] += 1
+                    _C_EVENTS.labels(event="trip").inc()
+                    self._log(name, "trip",
+                              f"err={mon.last_err:.4g} z={det.z:.2f} "
+                              f"cusum={det.cusum:.4g}")
+                    self._remediate(name, lt, mon, y)
+                    dirty.add(group_key(name))
+        _H_PROBE_ROUND.observe(tm.monotonic() - t0)
+        return dirty
+
+    def _probe_reads(self, live: list, read_key: jax.Array | None
+                     ) -> dict[str, np.ndarray]:
+        """Probe currents for every live matrix, batched per swap group.
+
+        Matrices in one ``(slot, pname)`` stacking group share tile
+        geometry by construction, so their probe reads run as a single
+        vmapped ``cim_mvm`` over the tree_map-stacked deployments — one
+        dispatch per group instead of one per matrix (the per-read
+        noise stays per-matrix: ``noise_tag`` is a stacked data leaf).
+        Groups whose members disagree on shape (defensive; a custom
+        partition could produce ragged experts) fall back to the
+        sequential per-matrix path, as do singleton groups.
+        """
         from repro.kernels.cim_mvm.ops import cim_mvm
 
-        self.rounds += 1
-        dirty: set[tuple[str, str]] = set()
-        for name, lt in self.lifetimes.items():
-            if lt.demoted:
-                continue
-            mon = self.monitors[name]
-            y = np.asarray(cim_mvm(mon.probes_dev, lt.dep,
-                                   read_key=read_key))
-            self.counters["probes"] += 1
-            det = mon.detector
-            clears_before = det.n_clears
-            tripped = mon.observe(y)
-            if det.n_clears > clears_before:
-                self.counters["spontaneous_clears"] += (
-                    det.n_clears - clears_before)
-                self._log(name, "clear", f"z={det.z:.2f}")
-            if tripped:
-                self.counters["trips"] += 1
-                self._log(name, "trip",
-                          f"err={mon.last_err:.4g} z={det.z:.2f} "
-                          f"cusum={det.cusum:.4g}")
-                self._remediate(name, lt, mon, y)
-                dirty.add(group_key(name))
-        return dirty
+        groups: dict[tuple[str, str], list] = {}
+        for name, lt in live:
+            groups.setdefault(group_key(name), []).append((name, lt))
+        results: dict[str, np.ndarray] = {}
+        for members in groups.values():
+            if len(members) > 1 and self._stackable(members):
+                probes = jnp.stack(
+                    [self.monitors[n].probes_dev for n, _ in members])
+                deps = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[lt.dep for _, lt in members])
+                ys = np.asarray(jax.vmap(
+                    lambda p, d: cim_mvm(p, d, read_key=read_key)
+                )(probes, deps))
+                for (name, _), y in zip(members, ys):
+                    results[name] = y
+            else:
+                for name, lt in members:
+                    results[name] = np.asarray(
+                        cim_mvm(self.monitors[name].probes_dev, lt.dep,
+                                read_key=read_key))
+        return results
+
+    def _stackable(self, members: list) -> bool:
+        """All group members share probe shape + deployment tree shape."""
+        shapes = {np.shape(self.monitors[n].probes_dev)
+                  for n, _ in members}
+        if len(shapes) != 1:
+            return False
+        sigs = set()
+        for _, lt in members:
+            leaves, treedef = jax.tree_util.tree_flatten(lt.dep)
+            sigs.add((treedef,
+                      tuple(jnp.shape(leaf) for leaf in leaves)))
+        return len(sigs) == 1
 
     def _remediate(self, name: str, lt: MatrixLifetime,
                    mon: MatrixMonitor, y_cim: np.ndarray) -> None:
@@ -117,17 +185,20 @@ class HealthController:
                                    self.cfg.recal_limit)
             lt.recalibrate(recal)
             self.counters["recalibrations"] += 1
+            _C_EVENTS.labels(event="recalibrate").inc()
             self._log(name, "recalibrate",
                       f"median_alpha={float(np.median(recal)):.4f} "
                       f"age={lt.age:.3g}")
         elif lt.reprograms < self.cfg.max_reprograms:
             lt.reprogram()
             self.counters["reprograms"] += 1
+            _C_EVENTS.labels(event="reprogram").inc()
             self._log(name, "reprogram",
                       f"epoch={lt.reprograms} clock_reset age=1")
         else:
             lt.demote()
             self.counters["demotions"] += 1
+            _C_EVENTS.labels(event="demote").inc()
             self._log(name, "demote",
                       f"endurance_exhausted reprograms={lt.reprograms}"
                       f" -> digital fallback")

@@ -23,13 +23,13 @@ Results land in results/dryrun/<arch>__<shape>__<mesh>[__tag].json.
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry as tm
 from repro.configs import SHAPES, arch_shape_cells, get_config
 from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig, TrainConfig
 from repro.distributed.sharding import ShardingCtx, logical_spec
@@ -159,15 +159,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
            "kind": shape.kind, "rules": rules, "tag": tag,
            "overrides": {k: str(v) for k, v in (overrides or {}).items()},
            "chips": chips}
-    t0 = time.perf_counter()
+    t0 = tm.monotonic()
     try:
         fn, args, in_sh, donate = build_cell(cfg, shape, ctx, tcfg)
         with mesh:
             lowered = jax.jit(fn, in_shardings=in_sh,
                               donate_argnums=donate).lower(*args)
-            t_lower = time.perf_counter() - t0
+            t_lower = tm.monotonic() - t0
             compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0 - t_lower
+        t_compile = tm.monotonic() - t0 - t_lower
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
         hlo = compiled.as_text()
@@ -214,7 +214,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:  # a failing cell is a bug; record it loudly
         rec.update({"ok": False, "error": repr(e),
                     "traceback": traceback.format_exc()})
-    rec["wall_s"] = round(time.perf_counter() - t0, 2)
+    rec["wall_s"] = round(tm.monotonic() - t0, 2)
 
     os.makedirs(out_dir, exist_ok=True)
     fname = f"{arch}__{shape_name}__{mesh_name}" \

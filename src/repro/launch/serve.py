@@ -6,11 +6,11 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
+from repro import telemetry as tm
 from repro.configs import get_config
 from repro.data import SyntheticTokenDataset
 from repro.models.model import init_params
@@ -38,9 +38,9 @@ def main():
         from repro.models.frontend import synthetic_embeddings
         prompts = synthetic_embeddings(cfg, args.batch, args.prompt_len,
                                        jax.random.PRNGKey(1))  # reprolint: disable=RPL003 -- serve smoke CLI: deterministic synthetic embeddings
-    t0 = time.perf_counter()
+    t0 = tm.monotonic()
     out = eng.generate(prompts, args.gen)
-    dt = time.perf_counter() - t0
+    dt = tm.monotonic() - t0
     toks = args.batch * args.gen
     print(f"generated {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. compile)")

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.core.tiling import CrossbarSpec
 from repro.crossbar.batched import (
     measured_nf_conductances,
@@ -43,6 +44,19 @@ from repro.nonideal.models import (
     conductances_from_masks,
     sample_cell_state,
 )
+
+
+_H_MC_SWEEP = tm.histogram(
+    "repro_mc_sweep_seconds", "Wall time of one mc_nf ensemble solve.")
+_C_MC_SAMPLES = tm.counter(
+    "repro_mc_samples_total", "Monte-Carlo samples solved (S x tiles).")
+_C_MC_UNCONV = tm.counter(
+    "repro_mc_unconverged_total",
+    "Ensemble tiles unconverged after escalation.")
+_G_MC_NF_MEAN = tm.gauge(
+    "repro_mc_nf_mean", "Mean NF of the most recent mc_nf sweep.")
+_G_MC_NF_P95 = tm.gauge(
+    "repro_mc_nf_p95", "95th-percentile NF of the most recent sweep.")
 
 
 class McNfResult(NamedTuple):
@@ -142,36 +156,48 @@ def mc_nf(masks: jax.Array, spec: CrossbarSpec, model: NonidealModel,
     failures are reported in ``unconverged`` / ``report`` — a
     non-converged circuit never masquerades as a good NF number.
     """
-    batch_shape = masks.shape[:-2]
-    flat = masks.reshape((-1,) + masks.shape[-2:])
-    if stuck is not None:
-        stuck = jnp.asarray(stuck, jnp.int8).reshape(flat.shape)
-    if col_weights is not None:
-        col_weights = jnp.asarray(col_weights)
-        if col_weights.ndim > 1:
-            col_weights = col_weights.reshape(
-                (-1, col_weights.shape[-1]))
-    g, g_ref = mc_samples(key, flat, spec, model, n_samples, stuck)
+    t0 = tm.monotonic()
+    with tm.span("nonideal/mc_nf", samples=n_samples):
+        batch_shape = masks.shape[:-2]
+        flat = masks.reshape((-1,) + masks.shape[-2:])
+        if stuck is not None:
+            stuck = jnp.asarray(stuck, jnp.int8).reshape(flat.shape)
+        if col_weights is not None:
+            col_weights = jnp.asarray(col_weights)
+            if col_weights.ndim > 1:
+                col_weights = col_weights.reshape(
+                    (-1, col_weights.shape[-1]))
+        g, g_ref = mc_samples(key, flat, spec, model, n_samples, stuck)
 
-    if ctx is not None:
-        from repro.distributed.solver_shard import (
-            measured_nf_conductances_sharded_checked,
-        )
-        res, report = measured_nf_conductances_sharded_checked(
-            g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
-            ctx=ctx, chain_impl=chain_impl)
-        unconverged = res.unconverged
-    else:
-        res, report = measured_nf_conductances_checked(
-            g, spec, g_ref=g_ref, maxiter=maxiter, precision=precision,
-            chain_impl=chain_impl)
-        unconverged = report.n_failed.astype(jnp.int32)
+        if ctx is not None:
+            from repro.distributed.solver_shard import (
+                measured_nf_conductances_sharded_checked,
+            )
+            res, report = measured_nf_conductances_sharded_checked(
+                g, spec, g_ref=g_ref, maxiter=maxiter,
+                precision=precision, ctx=ctx, chain_impl=chain_impl)
+            unconverged = res.unconverged
+        else:
+            res, report = measured_nf_conductances_checked(
+                g, spec, g_ref=g_ref, maxiter=maxiter,
+                precision=precision, chain_impl=chain_impl)
+            unconverged = report.n_failed.astype(jnp.int32)
 
-    werr = _weighted_err(res.currents, res.ideal, col_weights)
-    shape = (n_samples,) + batch_shape
-    return McNfResult(res.nf_total.reshape(shape), werr.reshape(shape),
-                      res.residual.reshape(shape), res.iterations,
-                      unconverged, report)
+        werr = _weighted_err(res.currents, res.ideal, col_weights)
+        shape = (n_samples,) + batch_shape
+        out = McNfResult(res.nf_total.reshape(shape),
+                         werr.reshape(shape), res.residual.reshape(shape),
+                         res.iterations, unconverged, report)
+        if tm.enabled():
+            # np.asarray blocks on the device values — telemetry-only
+            # syncs; the computed numbers are untouched.
+            nf = np.asarray(out.nf_total, np.float64)
+            _C_MC_SAMPLES.inc(nf.size)
+            _C_MC_UNCONV.inc(int(unconverged))
+            _G_MC_NF_MEAN.set(float(nf.mean()))
+            _G_MC_NF_P95.set(float(np.percentile(nf, 95.0)))
+    _H_MC_SWEEP.observe(tm.monotonic() - t0)
+    return out
 
 
 def mc_nf_oracle(masks: jax.Array, spec: CrossbarSpec,

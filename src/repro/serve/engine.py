@@ -44,9 +44,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ShardingCtx
 from repro.models.model import apply_model, init_decode_state
+
+_H_PREFILL = tm.histogram(
+    "repro_serve_prefill_seconds",
+    "Prefill wall time per generate() call (synced when telemetry on).")
+_H_DECODE = tm.histogram(
+    "repro_serve_decode_step_seconds",
+    "Per-step decode wall time (synced when telemetry on).")
+_C_REQUESTS = tm.counter(
+    "repro_serve_requests_total", "generate() calls served.")
+_C_TOKENS = tm.counter(
+    "repro_serve_tokens_total", "Tokens generated (batch x steps).")
+_C_SWAPS = tm.counter(
+    "repro_serve_hot_swaps_total",
+    "Deployment groups hot-swapped into the serving tree.")
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array,
@@ -164,6 +179,7 @@ class ServeEngine:
         for slot, pname in dirty:
             cim[slot][pname] = restack_group(self.lifetime, slot, pname)
         self.cim = cim
+        _C_SWAPS.inc(len(dirty))
 
     def advance(self, dt: float) -> None:
         """Advance the serving drift clock by ``dt`` (t0 units).
@@ -222,16 +238,43 @@ class ServeEngine:
         state = init_decode_state(self.cfg, B, self.max_seq)
         key = jax.random.PRNGKey(seed)
         rk = lambda k: jax.random.fold_in(k, 1) if self._read_noise else None
-        key, k0 = jax.random.split(key)
-        tok, state = self._prefill(self.params, state, prompts, k0,
-                                   cim, rk(k0))
-        out = [tok]
-        for _ in range(n_tokens - 1):
-            key, k = jax.random.split(key)
-            tok, state = self._decode(self.params, state, tok, k,
-                                      cim, rk(k))
-            out.append(tok)
-        if (self.health is not None
-                and self.health.cfg.age_per_token > 0.0):
-            self.advance(n_tokens * self.health.cfg.age_per_token)
+        # Telemetry adds block_until_ready syncs so the latency
+        # histograms measure real step time; the values computed are
+        # identical either way (syncing never changes a result), and
+        # with telemetry off this is exactly the bare async loop.
+        t_on = tm.enabled()
+        with tm.span("serve/generate", batch=B, n_tokens=n_tokens):
+            key, k0 = jax.random.split(key)
+            if t_on:
+                t0 = tm.monotonic()
+                with tm.span("serve/prefill", batch=B):
+                    tok, state = self._prefill(self.params, state,
+                                               prompts, k0, cim, rk(k0))
+                    jax.block_until_ready(tok)
+                _H_PREFILL.observe(tm.monotonic() - t0)
+            else:
+                tok, state = self._prefill(self.params, state, prompts,
+                                           k0, cim, rk(k0))
+            out = [tok]
+            if t_on:
+                with tm.span("serve/decode", steps=n_tokens - 1):
+                    for _ in range(n_tokens - 1):
+                        key, k = jax.random.split(key)
+                        t0 = tm.monotonic()
+                        tok, state = self._decode(self.params, state,
+                                                  tok, k, cim, rk(k))
+                        jax.block_until_ready(tok)
+                        _H_DECODE.observe(tm.monotonic() - t0)
+                        out.append(tok)
+            else:
+                for _ in range(n_tokens - 1):
+                    key, k = jax.random.split(key)
+                    tok, state = self._decode(self.params, state, tok, k,
+                                              cim, rk(k))
+                    out.append(tok)
+            _C_REQUESTS.inc()
+            _C_TOKENS.inc(B * n_tokens)
+            if (self.health is not None
+                    and self.health.cfg.age_per_token > 0.0):
+                self.advance(n_tokens * self.health.cfg.age_per_token)
         return jnp.stack(out, axis=1)

@@ -1,0 +1,45 @@
+"""repro.telemetry — dependency-free observability for the CIM stack.
+
+One lightweight layer carries all three observability signals across
+the deploy -> solve -> serve -> heal pipeline (docs/observability.md):
+
+* **metrics** — a process-global :class:`MetricsRegistry` of counters,
+  gauges and histograms with label support and Prometheus-text / JSON
+  exposition (:mod:`repro.telemetry.metrics`);
+* **traces** — nested :func:`span` context managers emitted as JSONL,
+  summarised by ``scripts/trace_report.py``
+  (:mod:`repro.telemetry.trace` / :mod:`repro.telemetry.report`);
+* **clocks** — :func:`monotonic` (durations) and :func:`wall_time`
+  (timestamps), the only sanctioned time sources for library code
+  (reprolint RPL006 bans direct ``time.*`` calls under ``src/repro``
+  outside this package).
+
+Collection is **off by default** and costs nothing while off: set
+``REPRO_TELEMETRY=1`` (or call :func:`enable`) to collect, and
+``REPRO_TRACE=path.jsonl`` (or :func:`trace_to`) to additionally
+record spans.  Instrumented library code records only at host-side
+boundaries — never inside jit-traced functions — and never touches a
+PRNG, so enabling telemetry cannot change a single computed value.
+"""
+from repro.telemetry.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    counter,
+    disable,
+    enable,
+    enabled,
+    gauge,
+    histogram,
+    monotonic,
+    registry,
+    wall_time,
+)
+from repro.telemetry.trace import (  # noqa: F401
+    span,
+    trace_path,
+    trace_stop,
+    trace_to,
+    tracing,
+)

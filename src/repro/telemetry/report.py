@@ -1,0 +1,99 @@
+"""Trace aggregation: JSONL spans -> per-phase wall/self-time table.
+
+The model is the classic profiler decomposition: a span's **total**
+time is its own duration; its **self** time is the duration minus the
+durations of its *direct* children.  Self-times telescope — summed over
+every span in a properly nested trace they equal the root spans' total
+wall time exactly — so the coverage figure below reads as "how much of
+the run the named phases account for" (the ISSUE's >= 95% acceptance
+gate holds by construction whenever a root span wraps the run).
+
+Stdlib-only on purpose: ``scripts/trace_report.py`` fronts this module
+and must stay importable without jax (same contract as the lint CLI).
+"""
+from __future__ import annotations
+
+import json
+
+
+def load_spans(path: str) -> list[dict]:
+    """Parse one JSONL trace file into span records.
+
+    Non-JSON and non-span lines are skipped (the format is append-only
+    and a crashed run may leave a torn final line).
+    """
+    spans: list[dict] = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue
+            if isinstance(rec, dict) and "name" in rec and "dur" in rec:
+                spans.append(rec)
+    return spans
+
+
+def aggregate(spans: list[dict]) -> tuple[dict[str, dict], float]:
+    """Per-phase stats + root wall time.
+
+    Returns ``({name: {count, total, self, min, max}}, wall)`` where
+    ``wall`` is the summed duration of parentless (root) spans.
+    """
+    child_dur: dict[int, float] = {}
+    for s in spans:
+        p = s.get("parent")
+        if p is not None:
+            child_dur[p] = child_dur.get(p, 0.0) + s["dur"]
+    stats: dict[str, dict] = {}
+    wall = 0.0
+    for s in spans:
+        st = stats.setdefault(s["name"], {
+            "count": 0, "total": 0.0, "self": 0.0,
+            "min": float("inf"), "max": 0.0})
+        dur = float(s["dur"])
+        st["count"] += 1
+        st["total"] += dur
+        st["self"] += dur - child_dur.get(s.get("id"), 0.0)
+        st["min"] = min(st["min"], dur)
+        st["max"] = max(st["max"], dur)
+        if s.get("parent") is None:
+            wall += dur
+    return stats, wall
+
+
+def coverage(spans: list[dict]) -> float:
+    """Fraction of root wall time the per-phase self-times account for."""
+    stats, wall = aggregate(spans)
+    if wall <= 0.0:
+        return 0.0
+    return sum(st["self"] for st in stats.values()) / wall
+
+
+def format_table(stats: dict[str, dict], wall: float) -> str:
+    """Human per-phase table, widest self-time first."""
+    rows = sorted(stats.items(), key=lambda kv: -kv[1]["self"])
+    name_w = max([len("phase")] + [len(n) for n in stats])
+    head = (f"{'phase':<{name_w}}  {'count':>5}  {'total_s':>9}  "
+            f"{'self_s':>9}  {'self_%':>6}  {'min_s':>9}  {'max_s':>9}")
+    lines = [head, "-" * len(head)]
+    for name, st in rows:
+        pct = 100.0 * st["self"] / wall if wall > 0 else 0.0
+        lines.append(
+            f"{name:<{name_w}}  {st['count']:>5}  {st['total']:>9.4f}  "
+            f"{st['self']:>9.4f}  {pct:>6.1f}  {st['min']:>9.4f}  "
+            f"{st['max']:>9.4f}")
+    covered = sum(st["self"] for st in stats.values())
+    pct = 100.0 * covered / wall if wall > 0 else 0.0
+    lines.append(f"wall {wall:.4f}s; phase self-times cover "
+                 f"{covered:.4f}s ({pct:.1f}%)")
+    return "\n".join(lines)
+
+
+def report(path: str) -> str:
+    """One-call convenience: load, aggregate, format."""
+    stats, wall = aggregate(load_spans(path))
+    return format_table(stats, wall)

@@ -16,11 +16,10 @@ Fault-tolerance model (single-controller JAX):
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
+from repro import telemetry as tm
 from repro.checkpoint.ckpt import CheckpointManager, latest_step, load_checkpoint
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.distributed.sharding import ShardingCtx
@@ -102,7 +101,7 @@ class Trainer:
         retries = 0
         while self.step < n_steps:
             try:
-                t0 = time.perf_counter()
+                t0 = tm.monotonic()
                 batch = self._device_batch(self.step)
                 if fail_at and self.step in fail_at:
                     fail_at = set(fail_at) - {self.step}
@@ -110,7 +109,7 @@ class Trainer:
                 self.params, self.opt_state, metrics = self._step(
                     self.params, self.opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
-                dt = time.perf_counter() - t0
+                dt = tm.monotonic() - t0
                 self.watchdog.observe(self.step, dt)
                 self.step += 1
                 if self.step % self.tcfg.log_every == 0 or \

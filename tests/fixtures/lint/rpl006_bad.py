@@ -1,0 +1,11 @@
+"""RPL006 bad: raw time.* clock calls in library code."""
+import time
+from time import perf_counter
+
+
+def slow_path():
+    t0 = time.perf_counter()
+    started = time.time()
+    m = time.monotonic()
+    n = perf_counter()
+    return t0, started, m, n

@@ -1,0 +1,20 @@
+"""RPL006 good: clocks route through the telemetry front door.
+
+Near-misses exercised: the telemetry re-exports of the same clocks
+(allowed — that *is* the front door) and non-clock ``time`` helpers
+(``strftime`` formats, it does not read a timing-relevant clock).
+"""
+from repro import telemetry as tm
+from repro.telemetry import monotonic, wall_time
+
+
+def timed_path():
+    t0 = monotonic()
+    started = wall_time()
+    return started, tm.monotonic() - t0
+
+
+def formats_are_fine():
+    import time
+
+    return time.strftime("%Y-%m-%d")

@@ -3,10 +3,12 @@
 The audit must (a) pass on the real registries — every registered
 strategy's params reach the fingerprint, pipeline and plan-cache
 layers, the cache tokens are collision-free, the legacy mode tokens
-are stable, and every benchmark module is registered and nightly-
-reachable — and (b) demonstrably *fail* when handed a broken registry:
-a leaky-fingerprint strategy, an unregistered benchmark module, a
-typo'd nightly ``--only``.  (b) is what makes (a) trustworthy.
+are stable, every benchmark module is registered and nightly-
+reachable, and the telemetry metric declarations match the live
+default registry — and (b) demonstrably *fail* when handed a broken
+registry: a leaky-fingerprint strategy, an unregistered benchmark
+module, a typo'd nightly ``--only``, a dynamic/duplicated/dead metric
+name.  (b) is what makes (a) trustworthy.
 """
 from __future__ import annotations
 
@@ -158,3 +160,55 @@ def test_resolve_only_by_name_module_and_error():
         == ["manhattan_hypothesis_fit"]
     with pytest.raises(KeyError, match="unknown benchmark"):
         run.resolve_only("no_such_bench")
+
+
+# -------------------------- metric-registry audit -------------------------
+
+
+_DECL = ('from repro import telemetry as tm\n'
+         'C = tm.counter("repro_widget_total", "Widgets.")\n')
+
+
+def test_metric_audit_clean_on_real_repo():
+    assert [f.format() for f in audit.audit_metric_registry()] == []
+
+
+def test_metric_audit_accepts_matching_declaration():
+    findings = audit.audit_metric_registry(
+        src_files={"a.py": _DECL}, live_names=["repro_widget_total"])
+    assert findings == []
+
+
+def test_metric_audit_flags_non_literal_name():
+    src = ('from repro import telemetry as tm\n'
+           'NAME = "repro_dynamic_total"\n'
+           'C = tm.counter(NAME)\n')
+    findings = audit.audit_metric_registry(src_files={"a.py": src},
+                                           live_names=[])
+    assert [f.code for f in findings] == ["AUD007"]
+    assert "non-literal" in findings[0].message
+
+
+def test_metric_audit_flags_duplicate_declaration():
+    findings = audit.audit_metric_registry(
+        src_files={"a.py": _DECL, "b.py": _DECL},
+        live_names=["repro_widget_total"])
+    assert [f.code for f in findings] == ["AUD007"]
+    assert "already declared" in findings[0].message
+
+
+def test_metric_audit_flags_declared_but_not_live():
+    findings = audit.audit_metric_registry(src_files={"a.py": _DECL},
+                                           live_names=[])
+    assert [f.code for f in findings] == ["AUD007"]
+    assert "absent from the live" in findings[0].message
+
+
+def test_metric_audit_flags_live_undeclared_repro_metric():
+    findings = audit.audit_metric_registry(
+        src_files={}, live_names=["repro_ghost_total"])
+    assert [f.code for f in findings] == ["AUD007"]
+    assert "no module-level declaration" in findings[0].message
+    # foreign namespaces are not ours to police
+    assert audit.audit_metric_registry(src_files={},
+                                       live_names=["python_info"]) == []

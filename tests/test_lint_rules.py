@@ -1,4 +1,4 @@
-"""Fixture tests for every reprolint rule (RPL001-RPL005).
+"""Fixture tests for every reprolint rule (RPL001-RPL006).
 
 Each rule has a paired bad/good fixture under tests/fixtures/lint/;
 the bad file pins the exact (code, line) set the rule must report, the
@@ -51,6 +51,10 @@ BAD_EXPECTED = {
                       ("RPL004", 17)},
     # module constant (4), class body (8), function default (11)
     "rpl005_bad.py": {("RPL005", 4), ("RPL005", 8), ("RPL005", 11)},
+    # time.perf_counter (7), time.time (8), time.monotonic (9),
+    # from-imported perf_counter (10)
+    "rpl006_bad.py": {("RPL006", 7), ("RPL006", 8), ("RPL006", 9),
+                      ("RPL006", 10)},
 }
 
 
@@ -63,7 +67,7 @@ def test_bad_fixture_detected(name):
 
 @pytest.mark.parametrize("name", ["rpl001_good.py", "rpl002_good.py",
                                   "rpl003_good.py", "rpl004_good.py",
-                                  "rpl005_good.py"])
+                                  "rpl005_good.py", "rpl006_good.py"])
 def test_good_fixture_clean(name):
     assert lint_fixture(name) == []
 
