@@ -47,6 +47,7 @@ from benchmarks import (  # noqa: E402
     planning_cost,
     roofline_table,
     serving_health,
+    serving_load,
     solver_throughput,
     theorem1,
 )
@@ -59,12 +60,15 @@ class Bench:
     ``name`` is the historical results/benchmarks.json key (stable —
     changing it orphans recorded history); ``module`` is the backing
     ``benchmarks/<module>.py`` file; ``run`` takes the ``--quick``
-    flag.
+    flag.  ``seed`` is the registered workload seed for stochastic
+    open-loop benchmarks (recorded into the results entry so a run is
+    replayable from its record alone); None for deterministic ones.
     """
 
     name: str
     module: str
     run: Callable[[bool], dict]
+    seed: int | None = None
 
 
 BENCHES: tuple[Bench, ...] = (
@@ -118,6 +122,15 @@ BENCHES: tuple[Bench, ...] = (
     Bench("serving_health", "serving_health",
           lambda q: serving_health.run(
               ages=(3e2, 1e4) if q else (3e2, 1e4, 3e5))),
+    # §Serving tier: continuous batching over the CIM path — saturating
+    # capacity sweep, open-loop Poisson latency (the registered seed
+    # drives the arrival process), mid-load async redeploy gates
+    Bench("serving_load", "serving_load",
+          lambda q: serving_load.run(
+              capacities=(1, 2, 4) if q else (1, 2, 4, 8),
+              n_requests=8 if q else 16, max_tokens=6 if q else 8,
+              latency_n=12 if q else 24, arrival_seed=1234),
+          seed=1234),
     # §Mapping API: registered row x column strategy matrix (Eq-16
     # NF on the standard 64x64 population)
     Bench("mapping_matrix", "mapping_matrix",
@@ -170,7 +183,8 @@ def main() -> None:
 
     if args.list:
         for b in BENCHES:
-            print(f"{b.name} (benchmarks/{b.module}.py)")
+            tail = "" if b.seed is None else f" seed={b.seed}"
+            print(f"{b.name} (benchmarks/{b.module}.py){tail}")
         return
 
     if args.only:
@@ -214,6 +228,11 @@ def main() -> None:
         if args.trace:
             tm.trace_stop()
         results[bench.name]["started_at"] = started_at
+        if bench.seed is not None:
+            # The registered workload seed (e.g. serving_load's
+            # open-loop arrival process) travels with the entry, so a
+            # recorded run is replayable without consulting the code.
+            results[bench.name]["seed"] = bench.seed
         results[bench.name]["telemetry"] = {
             "metrics": tm.registry().snapshot(),
             "trace": trace_rel,
@@ -305,6 +324,15 @@ def _derive(name: str, res: dict) -> str:
             return (f"fresh={res['fresh_err']:.3f};"
                     f"unmon_worst={max(res['unmonitored_err']):.3f};"
                     f"mon_worst={max(res['monitored_err']):.3f};"
+                    f"all_gates={res['all_gates']}")
+        if name == "serving_load":
+            caps = res["capacities"]
+            t = res["throughput"]
+            hot = res["latency"]["2x"]
+            return (f"tok/s@c{caps[0]}->c{caps[-1]}="
+                    f"{t[str(caps[0])]['tokens_per_s']:.0f}->"
+                    f"{t[str(caps[-1])]['tokens_per_s']:.0f};"
+                    f"p95@2x={hot['p95_s'] * 1e3:.0f}ms;"
                     f"all_gates={res['all_gates']}")
         if name == "mapping_matrix":
             return (f"best={res['best_cell']}@"

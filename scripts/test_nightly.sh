@@ -4,10 +4,11 @@
 # equivalence sweeps and the heavy Monte-Carlo nonideality shapes that
 # the tier-1 default (`pytest.ini` addopts = -m "not slow") skips, plus
 # the whole-model deployment, fault-tolerance, line-open-sweep,
-# serving-health and mapping-strategy-matrix benchmarks (fused
-# planning / plan-cache / CIM serving / fault+variation distributions
-# / spare-line vs fault-aware under structural line opens / monitored
-# vs unmonitored lifetime resilience / row-x-column strategy NF
+# serving-health, serving-load and mapping-strategy-matrix benchmarks
+# (fused planning / plan-cache / CIM serving / fault+variation
+# distributions / spare-line vs fault-aware under structural line opens
+# / monitored vs unmonitored lifetime resilience / continuous-batching
+# throughput+latency+redeploy gates / row-x-column strategy NF
 # numbers recorded into results/benchmarks.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -35,6 +36,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --trace --only fault_line_open
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --trace --only serving_health
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --trace --only serving_load
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --trace --only mapping_matrix
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

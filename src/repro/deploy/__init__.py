@@ -20,6 +20,7 @@ from repro.deploy.cache import (  # noqa: F401
 from repro.deploy.lifetime import (  # noqa: F401
     DEMOTED_RUNTIME,
     MatrixLifetime,
+    pad_host_deployment,
     restack_group,
 )
 from repro.deploy.engine import (  # noqa: F401

@@ -180,6 +180,55 @@ class MatrixLifetime:
         return self.dep
 
 
+def pad_host_deployment(dep: CimDeployment, i_pad: int, n_pad: int,
+                        in_dim: int, out_dim: int, *,
+                        rows: int) -> CimDeployment:
+    """Zero-drive pad a host deployment to a larger tile grid.
+
+    Grows ``codes`` to ``(i_pad, n_pad)`` with **zero codes** and the
+    position tables with identity layouts, and rewrites the
+    ``in_dim``/``out_dim`` meta to the targets — so deployments of
+    *ragged* shapes inside one stacking group become tree-compatible
+    and can ride a single vmapped ``cim_mvm`` (the health probe round's
+    batched path).  Zero codes program no bits: in the parasitic
+    distortion model every cell's effective weight is a function of its
+    own code and position only, so padded tiles contribute exactly
+    nothing to the original outputs — callers drive the padded input
+    lanes with zeros and slice the readback at the true ``out_dim``
+    (numerically equivalent to the unpadded read, up to f32 reduction
+    order).  ``rows`` is the crossbar row count (``spec.rows``), needed
+    to extend the physical row-position table; padding is in whole-tile
+    units.
+    """
+    i0, n0 = dep.codes.shape
+    tn0 = dep.pos.shape[1]
+    if (i_pad - i0) % rows or (n_pad - n0) % dep.wpt:
+        raise ValueError("padding must be whole tiles")
+    tn = n_pad // dep.wpt
+    codes = np.zeros((i_pad, n_pad), np.int16)
+    codes[:i0, :n0] = np.asarray(dep.codes)
+    pos = np.broadcast_to(
+        (np.arange(i_pad, dtype=np.int32) % rows)[:, None],
+        (i_pad, tn)).copy()
+    pos[:i0, :tn0] = np.asarray(dep.pos)
+    gain = dep.gain
+    if gain is not None:
+        g = np.ones((i_pad, n_pad), np.float32)
+        g[:i0, :n0] = np.asarray(gain)
+        gain = g
+    col_pos = dep.col_pos
+    if col_pos is not None:
+        ti0, tn_c0 = np.asarray(col_pos).shape[:2]
+        cp = np.broadcast_to(
+            np.arange(dep.cols, dtype=np.int32),
+            (i_pad // rows, tn, dep.cols)).copy()
+        cp[:ti0, :tn_c0] = np.asarray(col_pos)
+        col_pos = cp
+    return dataclasses.replace(dep, codes=codes, pos=pos, gain=gain,
+                               col_pos=col_pos, in_dim=in_dim,
+                               out_dim=out_dim)
+
+
 def group_key(name: str) -> tuple[str, str]:
     """(slot, pname) stacking group of a deployed-matrix name."""
     parts = name.split("/")

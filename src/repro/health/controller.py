@@ -136,9 +136,14 @@ class HealthController:
         vmapped ``cim_mvm`` over the tree_map-stacked deployments — one
         dispatch per group instead of one per matrix (the per-read
         noise stays per-matrix: ``noise_tag`` is a stacked data leaf).
-        Groups whose members disagree on shape (defensive; a custom
-        partition could produce ragged experts) fall back to the
-        sequential per-matrix path, as do singleton groups.
+        *Ragged* groups (a custom partition can produce unequal expert
+        shapes) are zero-drive padded to the group-max tile grid
+        (:func:`repro.deploy.lifetime.pad_host_deployment`) and ride
+        the same vmapped round, the readback sliced at each member's
+        true ``out_dim``; only groups whose static meta genuinely
+        conflicts (dataflow direction, crossbar geometry, optional-leaf
+        presence) fall back to the sequential per-matrix path, as do
+        singleton groups.
         """
         from repro.kernels.cim_mvm.ops import cim_mvm
 
@@ -158,12 +163,73 @@ class HealthController:
                 )(probes, deps))
                 for (name, _), y in zip(members, ys):
                     results[name] = y
-            else:
-                for name, lt in members:
-                    results[name] = np.asarray(
-                        cim_mvm(self.monitors[name].probes_dev, lt.dep,
-                                read_key=read_key))
+                continue
+            if len(members) > 1:
+                padded = self._padded_probe_reads(members, read_key)
+                if padded is not None:
+                    results.update(padded)
+                    continue
+            for name, lt in members:
+                results[name] = np.asarray(
+                    cim_mvm(self.monitors[name].probes_dev, lt.dep,
+                            read_key=read_key))
         return results
+
+    def _padded_probe_reads(self, members: list,
+                            read_key: jax.Array | None
+                            ) -> dict[str, np.ndarray] | None:
+        """One vmapped probe read over a zero-drive-padded ragged group.
+
+        Pads every member deployment to the group-max tile grid (zero
+        codes contribute nothing — per-cell distortion model), pads the
+        probe batches with zero drive on the extra input lanes, runs
+        the single vmapped ``cim_mvm``, and slices each member's
+        readback at its true ``out_dim``.  Noiseless reads match the
+        unpadded per-matrix reads exactly; with per-read noise armed
+        the iid draw covers the padded grid, so the samples differ from
+        an unpadded read while keeping the same per-cell statistics
+        (and stay deterministic per ``read_key``) — fine for drift
+        residuals, which only see the noise variance.  Returns None
+        when the group cannot be padded into one tree (static meta or
+        optional-leaf presence conflicts, unequal crossbar geometry or
+        probe counts) — the caller then takes the sequential path.
+        """
+        from repro.deploy.lifetime import pad_host_deployment
+        from repro.kernels.cim_mvm.ops import cim_mvm
+
+        deps = [lt.dep for _, lt in members]
+        d0 = deps[0]
+        meta = lambda d: (d.n_bits, d.wpt, d.cols, d.eta, d.reversed_df,
+                          d.sigma_read)
+        if any(meta(d) != meta(d0) for d in deps):
+            return None
+        for f in ("gain", "col_pos", "degraded", "noise_tag"):
+            if len({getattr(d, f) is None for d in deps}) != 1:
+                return None
+        if len({lt.spec.rows for _, lt in members}) != 1:
+            return None
+        if len({self.monitors[n].probes_dev.shape[0]
+                for n, _ in members}) != 1:
+            return None
+        rows = members[0][1].spec.rows
+        i_pad = max(d.codes.shape[0] for d in deps)
+        n_pad = max(d.codes.shape[1] for d in deps)
+        in_dim = max(d.in_dim for d in deps)
+        out_dim = max(d.out_dim for d in deps)
+        padded = [pad_host_deployment(d, i_pad, n_pad, in_dim, out_dim,
+                                      rows=rows) for d in deps]
+        probes = jnp.stack([
+            jnp.pad(self.monitors[n].probes_dev,
+                    ((0, 0),
+                     (0, in_dim - self.monitors[n].probes_dev.shape[1])))
+            for n, _ in members])
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *padded)
+        ys = np.asarray(jax.vmap(
+            lambda p, d: cim_mvm(p, d, read_key=read_key)
+        )(probes, stacked))
+        return {name: ys[i][:, :lt.dep.out_dim]
+                for i, (name, lt) in enumerate(members)}
 
     def _stackable(self, members: list) -> bool:
         """All group members share probe shape + deployment tree shape."""

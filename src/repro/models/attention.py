@@ -25,11 +25,16 @@ EMPTY_POS = np.int32(2 ** 30)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding. x: (B, S, H, Dh); positions: (S,)."""
+    """Rotary embedding. x: (B, S, H, Dh); positions: (S,) shared across
+    the batch, or (B, S) per-sequence (slot-pool decode, where every
+    lane sits at its own absolute position)."""
     Dh = x.shape[-1]
     half = Dh // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = positions[None, :, None, None].astype(jnp.float32) * freqs
+    if positions.ndim == 1:
+        ang = positions[None, :, None, None].astype(jnp.float32) * freqs
+    else:
+        ang = positions[:, :, None, None].astype(jnp.float32) * freqs
     sin, cos = jnp.sin(ang), jnp.cos(ang)
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -45,6 +50,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     Causal: key position must be <= query position (absolute positions);
     with ``window`` > 0 additionally q_pos - k_pos < window.
+    ``q_positions`` / ``k_positions`` are (Sq,) / (Skv,) shared across
+    the batch, or (B, Sq) / (B, Skv) per-sequence — the slot-pool decode
+    path, where each batch lane carries its own position clock and ring
+    occupancy.  The 1-D form normalises to a broadcast batch dim of 1,
+    so the shared-positions path computes bit-identically to before.
 
     GQA is handled by broadcasting KV heads to the full H inside each
     chunk (transient, chunk-sized) rather than reshaping H -> (Hkv, G):
@@ -61,16 +71,19 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     chunk = min(chunk, Skv)
     n_chunks = -(-Skv // chunk)
     pad = n_chunks * chunk - Skv
+    # Normalise positions to (b, S) with b in {1, B}; the b=1 path is
+    # the historical shared-positions computation, unchanged.
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+    kp = k_positions if k_positions.ndim == 2 else k_positions[None]
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_positions = jnp.pad(k_positions, (0, pad),
-                              constant_values=EMPTY_POS)
+        kp = jnp.pad(kp, ((0, 0), (0, pad)), constant_values=EMPTY_POS)
 
     qf = q.astype(jnp.float32)
     k_chunks = k.reshape(B, n_chunks, chunk, Hkv, Dh).swapaxes(0, 1)
     v_chunks = v.reshape(B, n_chunks, chunk, Hkv, Dh).swapaxes(0, 1)
-    p_chunks = k_positions.reshape(n_chunks, chunk)
+    p_chunks = kp.reshape(kp.shape[0], n_chunks, chunk).swapaxes(0, 1)
 
     init = (jnp.full((B, Sq, H), NEG_INF, jnp.float32),
             jnp.zeros((B, Sq, H), jnp.float32),
@@ -95,10 +108,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 v_c = jnp.repeat(v_c, G, axis=2)
         s = jnp.einsum("bqhd,bchd->bqhc", qf,
                        k_c.astype(jnp.float32)) * scale
-        valid = k_pos[None, :] <= q_positions[:, None]    # (Sq, C)
+        valid = k_pos[:, None, :] <= qp[:, :, None]       # (b, Sq, C)
         if window:
-            valid &= (q_positions[:, None] - k_pos[None, :]) < window
-        s = jnp.where(valid[None, :, None, :], s, NEG_INF)
+            valid &= (qp[:, :, None] - k_pos[:, None, :]) < window
+        s = jnp.where(valid[:, :, None, :], s, NEG_INF)
         m_cur = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m_prev, m_cur)
         m_safe = jnp.maximum(m_new, NEG_INF / 2)          # fully-masked guard

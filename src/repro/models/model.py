@@ -132,6 +132,21 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
     new_cache = None
     if cache is None:
         k_all, v_all, k_pos = k, v, positions
+    elif positions.ndim == 2:
+        # Slot-pool decode: every batch lane carries its own position
+        # clock, so the cache write is a per-lane scatter and ``kpos``
+        # is per-lane (B, C).  Evicted lanes hold EMPTY_POS everywhere
+        # and mask themselves out of attention entirely.
+        C = cache["k"].shape[1]
+        Sw = min(S, C)
+        kw, vw, pw = k[:, S - Sw:], v[:, S - Sw:], positions[:, S - Sw:]
+        idx = pw % C                                   # (B, Sw)
+        b = jnp.arange(idx.shape[0])[:, None]
+        ck = cache["k"].at[b, idx].set(kw.astype(cache["k"].dtype))
+        cv = cache["v"].at[b, idx].set(vw.astype(cache["v"].dtype))
+        cp = cache["kpos"].at[b, idx].set(pw)
+        new_cache = {"k": ck, "v": cv, "kpos": cp}
+        k_all, v_all, k_pos = ck, cv, cp
     else:
         C = cache["k"].shape[1]
         Sw = min(S, C)
@@ -281,7 +296,12 @@ def apply_model(params: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
     x = shard(x, ctx, "batch", "seq", "act_embed")
 
     pos0 = jnp.zeros((), jnp.int32) if state is None else state["pos"]
-    positions = pos0 + jnp.arange(S, dtype=jnp.int32)
+    if jnp.ndim(pos0) == 0:
+        positions = pos0 + jnp.arange(S, dtype=jnp.int32)
+    else:
+        # Per-slot decode state (``init_decode_state(per_slot=True)``):
+        # pos is (B,) and every lane gets its own absolute positions.
+        positions = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
 
     pattern = cfg.block_pattern
     slot_names = [f"slot{i}_{bt}" for i, bt in enumerate(pattern)]
@@ -336,7 +356,8 @@ def lm_logits(params: dict, cfg: ModelConfig, ctx: ShardingCtx,
 
 # ------------------------------- state -----------------------------------
 
-def _state_defs(cfg: ModelConfig, batch: int, cache_len: int):
+def _state_defs(cfg: ModelConfig, batch: int, cache_len: int,
+                per_slot: bool = False):
     """shape/dtype/logical-dims/fill for every decode-state tensor."""
     R = cfg.pattern_repeats
     Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -347,6 +368,13 @@ def _state_defs(cfg: ModelConfig, batch: int, cache_len: int):
     dt = jnp.dtype(cfg.dtype)
 
     def attn_defs():
+        # ``per_slot``: every batch lane keeps its own ring occupancy
+        # (slot-pool serving — lanes join/evict independently), so
+        # ``kpos`` grows a batch axis.
+        kpos = (((R, batch, C), jnp.int32,
+                 ("layers", "cache_batch", None), int(EMPTY_POS))
+                if per_slot else
+                ((R, C), jnp.int32, ("layers", None), int(EMPTY_POS)))
         return {
             "k": ((R, batch, C, Hkv, Dh), dt,
                   ("layers", "cache_batch", "cache_seq", "cache_kv",
@@ -354,7 +382,7 @@ def _state_defs(cfg: ModelConfig, batch: int, cache_len: int):
             "v": ((R, batch, C, Hkv, Dh), dt,
                   ("layers", "cache_batch", "cache_seq", "cache_kv",
                    "cache_head_dim"), 0),
-            "kpos": ((R, C), jnp.int32, ("layers", None), int(EMPTY_POS)),
+            "kpos": kpos,
         }
 
     def mamba_defs():
@@ -401,27 +429,34 @@ def _map_state(defs: dict, fn):
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
-                      abstract: bool = False) -> ModelState:
+                      abstract: bool = False,
+                      per_slot: bool = False) -> ModelState:
     """Fresh decode state. ``kpos`` slots start at EMPTY_POS (self-masking).
 
     Attention caches per slot are (R, B, C, Hkv, Dh) ring buffers with
     C = min(cache_len, sliding_window or cache_len).
+
+    ``per_slot=True`` builds the slot-pool layout the continuous-batching
+    tier serves from: ``pos`` is (B,) and ``kpos`` is (R, B, C), so every
+    batch lane advances its own position clock and ring occupancy —
+    lanes join/evict by index update, never by reshape.
     """
-    defs = _state_defs(cfg, batch, cache_len)
+    defs = _state_defs(cfg, batch, cache_len, per_slot=per_slot)
+    pos_shape = (batch,) if per_slot else ()
     if abstract:
         st = _map_state(defs, lambda sh, dt, dims, fill:
                         jax.ShapeDtypeStruct(sh, dt))
-        st["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        st["pos"] = jax.ShapeDtypeStruct(pos_shape, jnp.int32)
         return st
     st = _map_state(defs, lambda sh, dt, dims, fill:
                     jnp.full(sh, fill, dt))
-    st["pos"] = jnp.zeros((), jnp.int32)
+    st["pos"] = jnp.zeros(pos_shape, jnp.int32)
     return st
 
 
 def state_partition_specs(cfg: ModelConfig, ctx: ShardingCtx, batch: int,
-                          cache_len: int):
-    defs = _state_defs(cfg, batch, cache_len)
+                          cache_len: int, per_slot: bool = False):
+    defs = _state_defs(cfg, batch, cache_len, per_slot=per_slot)
     specs = _map_state(defs, lambda sh, dt, dims, fill:
                        logical_spec(sh, dims, ctx.mesh, ctx.rules))
     from jax.sharding import PartitionSpec as P

@@ -1,1 +1,20 @@
-from repro.serve.engine import ServeEngine, make_decode_step, make_prefill  # noqa: F401
+from repro.serve.continuous import (  # noqa: F401
+    Bank,
+    ContinuousEngine,
+    make_slot_decode,
+    make_slot_prefill,
+)
+from repro.serve.engine import (  # noqa: F401
+    ServeEngine,
+    deploy_serving_bank,
+    make_decode_step,
+    make_prefill,
+    sample_tokens,
+    sample_tokens_batch,
+)
+from repro.serve.kvcache import SlotPool  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Request,
+    RequestScheduler,
+    Sequence,
+)

@@ -65,12 +65,79 @@ _C_SWAPS = tm.counter(
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array,
-                  temperature: float = 0.0) -> jax.Array:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature,
-                                  axis=-1).astype(jnp.int32)
+                  temperature: float | jax.Array = 0.0) -> jax.Array:
+    """logits: (B, V) -> (B,) int32.
+
+    ``temperature`` is either a Python float — the historical trace-time
+    constant, kept bit-identical (greedy argmax at <= 0, else one
+    categorical draw over the batch) — or a jax array (scalar or (B,)),
+    which makes temperature a *runtime* operand: mixed-temperature
+    batches share one trace, rows with t <= 0 decode greedily and rows
+    with t > 0 sample at their own temperature.
+    """
+    if not isinstance(temperature, jax.Array):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                         logits.shape[:1])
+    scaled = logits / jnp.maximum(t, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(t > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def sample_tokens_batch(logits: jax.Array, keys: jax.Array,
+                        temperatures: jax.Array) -> jax.Array:
+    """Per-sequence sampling: logits (B, V), keys (B, 2) uint32 key data,
+    temperatures (B,) -> (B,) int32.
+
+    Each row draws from its *own* PRNG key, so a sequence's sample
+    depends only on its logits row, its key and its temperature — never
+    on which slot it occupies or who else is in the batch.  That row
+    independence is what makes continuous-batching decode
+    bit-deterministic per request seed across batch compositions.
+    Rows with t <= 0 decode greedily (dead slots pass t = 0).
+    """
+    t = jnp.asarray(temperatures, jnp.float32)
+    scaled = logits / jnp.maximum(t, 1e-6)[:, None]
+    sampled = jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg))(scaled, keys)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(t > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def deploy_serving_bank(cfg: ModelConfig, params, ctx: ShardingCtx, *,
+                        plan_cache=None, nonideal=None,
+                        nonideal_seed: int = 0, fault_aware: bool = True,
+                        pipeline=None, health=None):
+    """Deploy one checkpoint's crossbar bank for serving.
+
+    The shared init path of :class:`ServeEngine` and the
+    continuous-batching :class:`repro.serve.continuous.ContinuousEngine`
+    (and of the latter's *async redeploy*, which runs this in a
+    background thread).  Returns ``(cim, report, lifetime, controller)``
+    — ``cim`` is None when ``cfg.cim.enabled`` is off; ``lifetime`` /
+    ``controller`` are populated only when ``health`` is armed on a
+    non-ideal deployment (ideal devices don't age).
+    """
+    if not cfg.cim.enabled:
+        return None, None, {}, None
+    from repro.deploy import PlanCache, deploy_model_params
+    cache = plan_cache if plan_cache is not None else PlanCache()
+    lifetime: dict = {}
+    want_health = (health is not None and nonideal is not None
+                   and not nonideal.is_ideal)
+    cim, report = deploy_model_params(
+        params, cfg, cache=cache, ctx=ctx, nonideal=nonideal,
+        nonideal_key=nonideal_seed, fault_aware=fault_aware,
+        pipeline=pipeline, lifetime=lifetime if want_health else None)
+    controller = None
+    if want_health:
+        from repro.health import HealthController
+        controller = HealthController(lifetime, health)
+    return cim, report, lifetime, controller
 
 
 def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, temperature: float = 0.0):
@@ -117,34 +184,22 @@ class ServeEngine:
         self.ctx = ctx or ShardingCtx()
         self.params = params
         self.max_seq = max_seq
-        self.cim = None
-        self.deploy_report = None
-        self.lifetime: dict = {}
-        self.health = None
-        if cfg.cim.enabled:
-            from repro.deploy import PlanCache, deploy_model_params
-            cache = plan_cache if plan_cache is not None else PlanCache()
-            # ``pipeline`` (a repro.mapping.MappingPipeline, named
-            # pipeline or spec string) selects the mapping strategy;
-            # default is cfg.cim.mode (legacy mode strings keep working
-            # through the deprecation shim).  ``nonideal``
-            # (repro.nonideal.models.NonidealModel) serves the model on
-            # imperfect devices: stuck faults / variation are sampled
-            # once at deployment (keyed by nonideal_seed), folded into
-            # the deployment codes/gain, and — with fault_aware —
-            # steered around by the MDM row sort.  ``health`` (a
-            # repro.health.HealthConfig) additionally captures lifetime
-            # state and arms the monitor/remediation controller.
-            want_health = (health is not None and nonideal is not None
-                           and not nonideal.is_ideal)
-            self.cim, self.deploy_report = deploy_model_params(
-                params, cfg, cache=cache, ctx=self.ctx,
-                nonideal=nonideal, nonideal_key=nonideal_seed,
-                fault_aware=fault_aware, pipeline=pipeline,
-                lifetime=self.lifetime if want_health else None)
-            if want_health:
-                from repro.health import HealthController
-                self.health = HealthController(self.lifetime, health)
+        # ``pipeline`` (a repro.mapping.MappingPipeline, named pipeline
+        # or spec string) selects the mapping strategy; default is
+        # cfg.cim.mode (legacy mode strings keep working through the
+        # deprecation shim).  ``nonideal``
+        # (repro.nonideal.models.NonidealModel) serves the model on
+        # imperfect devices: stuck faults / variation are sampled once
+        # at deployment (keyed by nonideal_seed), folded into the
+        # deployment codes/gain, and — with fault_aware — steered
+        # around by the MDM row sort.  ``health`` (a
+        # repro.health.HealthConfig) additionally captures lifetime
+        # state and arms the monitor/remediation controller.
+        self.cim, self.deploy_report, self.lifetime, self.health = \
+            deploy_serving_bank(
+                cfg, params, self.ctx, plan_cache=plan_cache,
+                nonideal=nonideal, nonideal_seed=nonideal_seed,
+                fault_aware=fault_aware, pipeline=pipeline, health=health)
         # Per-read conductance noise: only drawn when the nonideal model
         # asks for it — otherwise read_key stays None and both
         # lowerables trace the bit-identical noiseless graph.

@@ -1,0 +1,155 @@
+"""Iteration-level request scheduling for continuous batching.
+
+Orca-style admission model: the scheduler owns an open FIFO queue of
+:class:`Request`s and the per-slot :class:`Sequence` bookkeeping of
+everything in flight.  The engine drives one *scheduler iteration* at a
+time — admit queued requests into free slots (prefill-then-join,
+mid-flight, without disturbing running sequences), run one batched
+decode step for every live slot, stream the new tokens, and evict
+sequences that hit their token budget.  No request ever waits for a
+*batch* to finish; it waits for a *slot*.
+
+The scheduler is pure host-side policy + bookkeeping: device state
+lives in :class:`repro.serve.kvcache.SlotPool`, the lowerables in
+:class:`repro.serve.continuous.ContinuousEngine`.  Metrics follow the
+telemetry idiom — declared once at module level, recorded per event:
+queue depth gauge, admitted/evicted counters (AUD007-audited names).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro import telemetry as tm
+
+_G_QUEUE = tm.gauge(
+    "repro_serve_queue_depth",
+    "Requests waiting for a slot (updated on submit/admit).")
+_C_ADMITTED = tm.counter(
+    "repro_serve_admitted_total", "Requests admitted into a slot.")
+_C_EVICTED = tm.counter(
+    "repro_serve_evicted_total", "Finished sequences evicted from slots.")
+
+TokenCallback = Callable[[int, int, bool], None]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``max_tokens`` counts *all* generated tokens (the prefill-sampled
+    first token included — same convention as ``ServeEngine.generate``).
+    ``seed`` roots the per-sequence sampling key: token n is drawn with
+    ``fold_in(PRNGKey(seed), n)``, so a request's output is
+    bit-deterministic per seed regardless of slot or batchmates.
+    ``on_token(rid, token, done)`` streams tokens as they are sampled.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    on_token: TokenCallback | None = None
+
+
+@dataclasses.dataclass
+class Sequence:
+    """In-flight state of one admitted request."""
+
+    req: Request
+    slot: int
+    epoch: int                 # bank epoch pinned at admission
+    n_emitted: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.n_emitted >= self.req.max_tokens
+
+
+class RequestScheduler:
+    """Open request queue + per-slot sequence bookkeeping."""
+
+    def __init__(self):
+        self.queue: deque[Request] = deque()
+        self.live: dict[int, Sequence] = {}       # slot -> Sequence
+        self.results: dict[int, list[int]] = {}   # rid -> tokens (done)
+        self._next_rid = 0
+
+    # -- queue ---------------------------------------------------------
+
+    def submit(self, prompt, max_tokens: int, temperature: float = 0.0,
+               seed: int = 0, on_token: TokenCallback | None = None
+               ) -> int:
+        """Enqueue a request; returns its rid."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_tokens,
+                                  float(temperature), int(seed),
+                                  on_token))
+        _G_QUEUE.set(len(self.queue))
+        return rid
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished (queued + in flight)."""
+        return len(self.queue) + len(self.live)
+
+    # -- admission / eviction ------------------------------------------
+
+    def pop_admission(self) -> Request | None:
+        """Next queued request (FIFO), or None."""
+        if not self.queue:
+            return None
+        req = self.queue.popleft()
+        _G_QUEUE.set(len(self.queue))
+        return req
+
+    def start(self, req: Request, slot: int, epoch: int) -> Sequence:
+        """Register an admitted request as live in ``slot``."""
+        if slot in self.live:
+            raise ValueError(f"slot {slot} already occupied")
+        seq = Sequence(req, slot, epoch)
+        self.live[slot] = seq
+        _C_ADMITTED.inc()
+        return seq
+
+    def record_token(self, slot: int, token: int) -> bool:
+        """Append one sampled token to the slot's sequence.
+
+        Returns True when the sequence just hit its budget (caller
+        evicts).  Streams through the request callback either way.
+        """
+        seq = self.live[slot]
+        seq.tokens.append(int(token))
+        seq.n_emitted += 1
+        done = seq.done
+        if seq.req.on_token is not None:
+            seq.req.on_token(seq.req.rid, int(token), done)
+        return done
+
+    def finish(self, slot: int) -> Sequence:
+        """Evict a finished sequence; its tokens land in ``results``."""
+        seq = self.live.pop(slot)
+        self.results[seq.req.rid] = list(seq.tokens)
+        _C_EVICTED.inc()
+        return seq
+
+    # -- batch views ---------------------------------------------------
+
+    def epochs_live(self) -> list[int]:
+        """Distinct bank epochs currently in flight, ascending."""
+        return sorted({seq.epoch for seq in self.live.values()})

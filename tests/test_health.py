@@ -480,3 +480,136 @@ def test_demotion_sentinel_serves_digital_fallback():
                                np.asarray(x @ w), rtol=1e-6)
     assert not np.allclose(np.asarray(_cim_matmul(x, w, dep)),
                            np.asarray(x @ w), rtol=1e-7)
+
+
+# ---------------------- ragged probe-group padding ------------------------
+
+
+def _ragged_lifetimes(shapes, model, seed=5):
+    """Hand-built lifetimes forming one ragged (slot, pname) group."""
+    from repro.core.tiling import CrossbarSpec
+    from repro.deploy.engine import package_deployment_host
+    from repro.deploy.lifetime import MatrixLifetime
+    from repro.deploy.planner import plan_matrices
+    from repro.nonideal.inject import sample_deployment_cells
+
+    spec = CrossbarSpec(rows=16, cols=16, n_bits=4)
+    rs = np.random.RandomState(0)
+    mats = {f"s/p/0/{i}": rs.randn(*sh).astype(np.float32) * 0.1
+            for i, sh in enumerate(shapes)}
+    grids = {n: spec.grid(*w.shape) for n, w in mats.items()}
+    key = jax.random.PRNGKey(seed)
+    cells = sample_deployment_cells(key, grids, spec, model)
+    plans, _ = plan_matrices(mats, spec, "mdm")
+    lifetimes = {}
+    for i, (name, w) in enumerate(mats.items()):
+        cap: dict = {}
+        plan = plans[name]
+        dep = package_deployment_host(w, spec, "mdm", 0.02, plan,
+                                      cells=cells[name], nonideal=model,
+                                      noise_tag=i, capture=cap)
+        lifetimes[name] = MatrixLifetime(
+            name=name, noise_tag=i, spec=spec, model=model, eta=0.02,
+            w=w, row_position=np.asarray(plan.row_position),
+            reversed_df=bool(plan.reversed_dataflow),
+            col_position=(None if plan.col_position is None else
+                          np.asarray(plan.col_position, np.int32)),
+            stuck_phys=cells[name].stuck,
+            codes=cap["codes"], stuck_log=cap["stuck_log"],
+            gamma_log=cap["gamma_log"], relax_log=cap["relax_log"],
+            dep=dep, key=jax.random.fold_in(key, i),
+            age=float(model.drift_time))
+    return lifetimes
+
+
+def test_pad_host_deployment_preserves_outputs():
+    """Zero-drive padding is output-invariant: the padded deployment
+    read with zero-padded inputs and sliced at the true out_dim equals
+    the unpadded read (zero codes program no bits; every cell's
+    distortion is a function of its own code/position only)."""
+    from repro.deploy import pad_host_deployment
+    from repro.kernels.cim_mvm.ops import cim_mvm
+
+    model = NonidealModel(drift_nu=0.1, sigma_program=0.03)
+    lt = _ragged_lifetimes([(24, 12)], model)["s/p/0/0"]
+    dep = lt.dep
+    i0, n0 = dep.codes.shape
+    padded = pad_host_deployment(dep, i0 + 32, n0 + 8, dep.in_dim + 32,
+                                 dep.out_dim + 2, rows=16)
+    assert padded.codes.shape == (i0 + 32, n0 + 8)
+    assert padded.in_dim == dep.in_dim + 32
+    assert padded.out_dim == dep.out_dim + 2
+    x = np.random.RandomState(3).randn(4, dep.in_dim).astype(np.float32)
+    xp = np.zeros((4, padded.in_dim), np.float32)
+    xp[:, :dep.in_dim] = x
+    y_ref = np.asarray(cim_mvm(jnp.asarray(x), dep))
+    y_pad = np.asarray(cim_mvm(jnp.asarray(xp), padded))
+    assert y_pad.shape == (4, padded.out_dim)
+    np.testing.assert_allclose(y_pad[:, :dep.out_dim], y_ref,
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):          # whole-tile units only
+        pad_host_deployment(dep, i0 + 3, n0, dep.in_dim, dep.out_dim,
+                            rows=16)
+
+
+def test_controller_pads_ragged_group_into_one_vmap_dispatch():
+    """A ragged (slot, pname) group rides the padded vmapped probe
+    round — one host-level cim_mvm dispatch, per-matrix results equal
+    to the sequential reads — and a full probe round over it feeds the
+    detectors without tripping on the padding."""
+    from repro.health import HealthController
+    from repro.kernels.cim_mvm import ops as cim_ops
+
+    model = NonidealModel(drift_nu=0.1, sigma_relax=0.08,
+                          sigma_program=0.03)
+    lifetimes = _ragged_lifetimes([(24, 12), (16, 8), (24, 8)], model)
+    ctrl = HealthController(lifetimes, _health())
+    live = list(lifetimes.items())
+    assert not ctrl._stackable(live)         # genuinely ragged
+
+    calls = {"n": 0}
+    orig = cim_ops.cim_mvm
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    cim_ops.cim_mvm = counting
+    try:
+        results = ctrl._probe_reads(live, None)
+    finally:
+        cim_ops.cim_mvm = orig
+    assert calls["n"] == 1                   # one vmapped dispatch
+    for name, lt in live:
+        ref = np.asarray(orig(ctrl.monitors[name].probes_dev, lt.dep))
+        assert results[name].shape == ref.shape
+        np.testing.assert_allclose(results[name], ref,
+                                   rtol=1e-5, atol=1e-5)
+    for _ in range(4):                       # warmup + steady state
+        rep = ctrl.probe()
+    assert ctrl.report().counters["trips"] == 0
+
+
+def test_controller_ragged_meta_conflict_falls_back_sequential():
+    """Members whose *static* meta genuinely conflicts (here: one
+    member carrying a different parasitic eta) cannot share a padded
+    tree; the round must fall back to per-matrix reads, not crash."""
+    import dataclasses as dc
+
+    from repro.health import HealthController
+    from repro.kernels.cim_mvm.ops import cim_mvm
+
+    model = NonidealModel(drift_nu=0.1, sigma_program=0.03)
+    lifetimes = _ragged_lifetimes([(24, 12), (16, 8)], model)
+    name0 = "s/p/0/0"
+    lt0 = lifetimes[name0]
+    lt0.dep = dc.replace(lt0.dep, eta=lt0.dep.eta * 2)
+    ctrl = HealthController(lifetimes, _health())
+    live = list(lifetimes.items())
+    assert ctrl._padded_probe_reads(live, None) is None
+    results = ctrl._probe_reads(live, None)
+    for name, lt in live:
+        ref = np.asarray(cim_mvm(ctrl.monitors[name].probes_dev,
+                                 lt.dep))
+        np.testing.assert_allclose(results[name], ref,
+                                   rtol=1e-6, atol=1e-6)
